@@ -1,0 +1,76 @@
+"""Microbenchmarks for the paper's compute hot spot (SoftSort apply) —
+one per implementation layer:
+
+  dense ref (O(N^2) memory)  vs  chunked-jnp stream  vs  Pallas kernel
+  (interpret mode on CPU — numbers are *relative*, the kernel's real
+  target is the TPU MXU; see EXPERIMENTS.md §Roofline for the model).
+
+Also times one ShuffleSoftSort outer round (the trainer's unit of work).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softsort import softsort_apply_chunked
+from repro.core.shufflesoftsort import ShuffleSoftSortConfig
+from repro.kernels.ref import softsort_apply_ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)                                   # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us
+
+
+def bench(ns=(1024, 4096), d=8, tau=0.5):
+    rows = []
+    for n in ns:
+        w = jax.random.normal(jax.random.PRNGKey(0), (n,))
+        x = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+
+        ref = jax.jit(lambda w, x: softsort_apply_ref(w, x, tau))
+        chunked = jax.jit(
+            lambda w, x: softsort_apply_chunked(w, x, tau, chunk=256))
+        rows.append((f"softsort_ref_n{n}", _time(ref, w, x),
+                     f"dense O(N^2) mem"))
+        rows.append((f"softsort_chunked_n{n}", _time(chunked, w, x),
+                     f"stream O(N*256) mem"))
+    return rows
+
+
+def bench_outer_round(n=1024, d=3):
+    from repro.core.shufflesoftsort import _outer_round
+    import functools
+    from repro.core.softsort import softsort_apply_chunked as ch
+    cfg = ShuffleSoftSortConfig(chunk=256)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (n, d))
+    order = jnp.arange(n, dtype=jnp.int32)
+    apply_fn = functools.partial(ch, chunk=cfg.chunk)
+
+    def step(x, order):
+        return _outer_round(x, order, jax.random.PRNGKey(1),
+                            jnp.float32(0.5), jnp.float32(1.0),
+                            hw=(32, 32), cfg=cfg, apply_fn=apply_fn)
+
+    o, _ = step(x, order)                       # compile
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        o, l = step(x, o)
+    jax.block_until_ready(o)
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return [("shufflesort_round_n1024", us,
+             "I=8 grad steps + commit")]
+
+
+if __name__ == "__main__":
+    for name, us, derived in bench() + bench_outer_round():
+        print(f"{name},{us:.0f},{derived}")

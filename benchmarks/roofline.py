@@ -1,0 +1,117 @@
+"""Roofline analysis from dry-run records (deliverable (g)).
+
+Reads the JSON written by ``repro.launch.dryrun --all --out ...`` and
+derives, per (arch x shape):
+
+    compute_s    = per-device HLO FLOPs / 197e12        (v5e bf16 peak)
+    memory_s     = per-device HLO bytes  / 819e9        (HBM bandwidth)
+    collective_s = per-device wire bytes / 50e9         (per-link ICI)
+
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill/decode)
+and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, which catches
+remat/redundancy waste.  Dominant term = the bottleneck the §Perf loop
+iterates on.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+CHIPS = {"single": 256, "multi": 512}
+
+
+def active_param_counts(arch: str) -> tuple[int, int]:
+    """(total_active_params, embed_params) via shape-only init; MoE expert
+    leaves scale by k/E."""
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+    cfg = get_config(arch)
+
+    shapes = jax.eval_shape(
+        lambda k: model_lib.init_model(k, cfg)[0], jax.random.PRNGKey(0))
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    active = 0
+    embed = 0
+    moe_frac = (cfg.num_experts_per_tok / cfg.num_experts
+                if cfg.num_experts else 1.0)
+    for path, leaf in flat:
+        keys = "/".join(str(p) for p in path)
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        if "embed" in keys:
+            embed += n
+        elif "moe" in keys and "router" not in keys:
+            active += int(n * moe_frac)
+        else:
+            active += n
+    return active, embed
+
+
+def model_flops(arch: str, shape: str, kind: str) -> float:
+    from repro.models.config import cell_by_name
+    cell = cell_by_name(shape)
+    n_active, _ = active_param_counts(arch)
+    if kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch
+
+
+def analyze(records: list[dict]) -> list[dict]:
+    out = []
+    for rec in records:
+        if rec.get("status") != "ok" or rec.get("kind") == "paper":
+            continue
+        ri = rec.get("roofline_inputs", {})
+        if "flops" not in ri:
+            continue
+        chips = CHIPS[rec["mesh"]]
+        compute_s = ri["flops"] / PEAK_FLOPS
+        memory_s = ri["bytes_accessed"] / HBM_BW
+        coll_s = ri["collective_bytes"] / LINK_BW
+        mf = model_flops(rec["arch"], rec["shape"], rec["kind"])
+        mf_dev = mf / chips
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        bound = max(terms.values())
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "model_flops_dev": mf_dev,
+            "useful_ratio": mf_dev / max(ri["flops"], 1.0),
+            "roofline_frac": (mf_dev / PEAK_FLOPS) / max(bound, 1e-12),
+        })
+    return out
+
+
+def print_table(rows):
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>9s} "
+           f"{'coll_s':>9s} {'bound':>10s} {'useful':>7s} {'roofline':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:26s} {r['shape']:12s} {r['compute_s']:>10.4f} "
+              f"{r['memory_s']:>9.4f} {r['collective_s']:>9.4f} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:>7.3f} "
+              f"{r['roofline_frac']:>8.3f}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default="dryrun_single.json")
+    a = ap.parse_args()
+    with open(a.records) as f:
+        recs = json.load(f)
+    print_table(analyze(recs))

@@ -1,0 +1,103 @@
+"""Self-Organizing Gaussians (paper §IV-B): sort 3D-Gaussian-Splatting
+attributes into 2-D grids to raise spatial correlation, then compress the
+attribute planes with a standard codec (zlib as the stand-in).
+
+The original SOG uses a heuristic non-differentiable sort because N is in
+the millions; ShuffleSoftSort makes the sort *learnable* with only N
+stored parameters (the permutation), which is the paper's headline
+application.
+
+    PYTHONPATH=src python examples/self_organizing_gaussians.py [--n 4096]
+"""
+import argparse
+import sys
+import zlib
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.core import ShuffleSoftSortConfig, shuffle_soft_sort  # noqa: E402
+from repro.core.metrics import mean_neighbor_distance  # noqa: E402
+
+
+def synthetic_scene(n, seed=0, noise=0.01):
+    """Synthetic splat set with realistic attribute structure: all
+    attributes are smooth functions of the surface parameterization (real
+    3DGS scenes are spatially coherent — nearby splats share scale,
+    orientation and color), plus a small jitter."""
+    rng = np.random.RandomState(seed)
+    t = rng.rand(n, 2) * 2 * np.pi
+    pos = np.stack([np.cos(t[:, 0]), np.sin(t[:, 0]) * np.cos(t[:, 1]),
+                    np.sin(t[:, 1])], -1)
+    scale = 0.2 + 0.1 * np.abs(np.sin(3 * t))                # (n, 2) -> 3
+    scale = np.concatenate([scale, scale[:, :1]], -1)
+    rot = np.stack([np.cos(t[:, 0] / 2), np.sin(t[:, 0] / 2),
+                    np.cos(t[:, 1] / 2), np.sin(t[:, 1] / 2)], -1)
+    opacity = (0.5 + 0.5 * np.cos(t[:, :1]))
+    color = 0.5 + 0.5 * np.stack(
+        [np.cos(t[:, 0]), np.sin(t[:, 1]), np.cos(t.sum(1))], -1)
+    attrs = np.concatenate([pos, scale, rot, opacity, color], -1)
+    attrs += noise * rng.randn(*attrs.shape)
+    return attrs.astype(np.float32)                          # (n, 14)
+
+
+def plane_bytes(attrs, order, hw):
+    """Compress each attribute as an (h, w) int8 plane (per-plane scale),
+    zlib-deflated — the codec proxy for the paper's image codecs."""
+    h, w = hw
+    total = 0
+    for j in range(attrs.shape[1]):
+        plane = attrs[order, j].reshape(h, w)
+        scale = np.max(np.abs(plane)) / 127.0 + 1e-12
+        q = np.clip(np.round(plane / scale), -127, 127).astype(np.int8)
+        # 2-D delta (horizontal) mimics intra-frame prediction
+        delta = np.diff(q.astype(np.int16), axis=1,
+                        prepend=np.zeros((h, 1), np.int16)).astype(np.int8)
+        total += len(zlib.compress(delta.tobytes(), 6))
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--rounds", type=int, default=800)
+    args = ap.parse_args()
+    n = args.n
+    hw = (int(np.sqrt(n)), int(np.sqrt(n)))
+    assert hw[0] * hw[1] == n
+
+    attrs = synthetic_scene(n)
+    raw = attrs.nbytes
+
+    rng = np.random.RandomState(1)
+    rand_order = rng.permutation(n)
+    unsorted_bytes = plane_bytes(attrs, rand_order, hw)
+
+    cfg = ShuffleSoftSortConfig(rounds=args.rounds, inner_steps=8,
+                                chunk=min(512, n))
+    order, xs, _ = shuffle_soft_sort(jnp.asarray(attrs), hw, cfg,
+                                     key=jax.random.PRNGKey(5))
+    # NOTE: splat order is ambiguous in 3DGS (the paper's key observation)
+    # so the permutation is NOT stored — the sorted layout *is* the file.
+    sorted_bytes = plane_bytes(attrs, order, hw)
+
+    print(f"splats: {n}  attrs/splat: {attrs.shape[1]}  raw: {raw:,} B")
+    print(f"codec (random order) : {unsorted_bytes:,} B "
+          f"({raw / unsorted_bytes:.1f}x vs raw)")
+    print(f"codec (SOG sorted)   : {sorted_bytes:,} B "
+          f"({raw / sorted_bytes:.1f}x vs raw, "
+          f"{unsorted_bytes / sorted_bytes:.2f}x vs unsorted)")
+    print(f"neighbour distance   : "
+          f"{mean_neighbor_distance(attrs[rand_order], hw):.3f} -> "
+          f"{mean_neighbor_distance(attrs[order], hw):.3f}")
+    print("(gains grow with N — the paper's regime is N~1e6 on 1024^2 "
+          "grids with image codecs; this CPU demo uses zlib at N=1024)")
+    assert sorted_bytes < unsorted_bytes, "sorting must help the codec"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full-size ModelConfig; every config is
+exercised at full size only through the dry-run (ShapeDtypeStruct — no
+allocation) and at reduced size in the smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "jamba-v0.1-52b",
+    "granite-moe-3b-a800m",
+    "llama4-scout-17b-a16e",
+    "mamba2-370m",
+    "stablelm-3b",
+    "llama3-405b",
+    "qwen1.5-0.5b",
+    "mistral-nemo-12b",
+    "llama-3.2-vision-90b",
+    "whisper-small",
+)
+
+
+def _module_name(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{_module_name(arch)}")
+    cfg = mod.CONFIG
+    cfg.validate()
+    return cfg
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS

@@ -1,0 +1,22 @@
+# The paper's primary contribution: ShuffleSoftSort permutation learning
+# with N parameters (softsort, Algorithm 1 driver, losses eq. 2-4,
+# metrics, and the baselines the paper compares against).
+from repro.core.softsort import (  # noqa: F401
+    softsort_matrix,
+    softsort_apply_chunked,
+    hard_permutation,
+    is_valid_permutation,
+    fix_permutation,
+)
+from repro.core.losses import (  # noqa: F401
+    neighbor_loss_grid,
+    stochastic_constraint_loss,
+    std_loss,
+    grid_sorting_loss,
+)
+from repro.core.metrics import dpq, mean_neighbor_distance  # noqa: F401
+from repro.core.shufflesoftsort import (  # noqa: F401
+    ShuffleSoftSortConfig,
+    shuffle_soft_sort,
+    soft_sort_baseline,
+)

@@ -1,0 +1,3 @@
+# Comparison methods from the paper's Table III.
+from repro.core.baselines.gumbel_sinkhorn import gumbel_sinkhorn_sort  # noqa: F401
+from repro.core.baselines.kissing import kissing_sort  # noqa: F401

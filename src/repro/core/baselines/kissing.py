@@ -1,0 +1,97 @@
+"""'Kissing to Find a Match' low-rank permutation baseline (Droge et al.,
+NeurIPS 2023): P ~ row_softmax(scale * V W^T) with row-normalized factors
+V, W of shape (N, M), 2NM parameters.  The paper's Table III reports this
+method failing to produce a valid permutation on the color-sorting task;
+we reproduce both the method and (empirically) its instability.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import (
+    mean_pairwise_distance,
+    neighbor_loss_grid,
+    std_loss,
+)
+from repro.core.softsort import is_valid_permutation
+
+
+@dataclasses.dataclass(frozen=True)
+class KissingConfig:
+    rank: int = 13              # M: 2NM = 26624 for N = 1024, as in Table III
+    steps: int = 600
+    scale_start: float = 4.0    # softmax sharpness (annealed up)
+    scale_end: float = 60.0
+    lr: float = 0.02
+    lambda_sigma: float = 2.0
+    lambda_s: float = 1.0
+
+
+def _normalize_rows(m):
+    return m / (jnp.linalg.norm(m, axis=-1, keepdims=True) + 1e-9)
+
+
+@functools.partial(jax.jit, static_argnames=("hw", "cfg"))
+def _train(x, norm, key, *, hw, cfg: KissingConfig):
+    n = x.shape[0]
+    k1, k2 = jax.random.split(key)
+    v0 = jax.random.normal(k1, (n, cfg.rank)) * 0.1
+    w0 = jax.random.normal(k2, (n, cfg.rank)) * 0.1
+
+    def loss_fn(params, scale):
+        v, w = params
+        p = jax.nn.softmax(scale * _normalize_rows(v) @ _normalize_rows(w).T,
+                           axis=-1)
+        y = p @ x
+        colsum = p.sum(axis=0)
+        return (neighbor_loss_grid(y.reshape(hw[0], hw[1], -1), norm)
+                + cfg.lambda_s * jnp.mean(jnp.square(colsum - 1.0))
+                + cfg.lambda_sigma * std_loss(x, y))
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def body(i, carry):
+        params, mu, nu, _ = carry
+        frac = i.astype(jnp.float32) / cfg.steps
+        scale = cfg.scale_start * (cfg.scale_end / cfg.scale_start) ** frac
+        loss, g = grad_fn(params, scale)
+        t = i.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, gg: 0.9 * m + 0.1 * gg, mu, g)
+        nu = jax.tree.map(lambda v_, gg: 0.999 * v_ + 0.001 * gg * gg, nu, g)
+        params = jax.tree.map(
+            lambda p_, m, v_: p_ - cfg.lr * (m / (1 - 0.9 ** t)) /
+            (jnp.sqrt(v_ / (1 - 0.999 ** t)) + 1e-8),
+            params, mu, nu)
+        return (params, mu, nu, loss)
+
+    zeros = (jnp.zeros_like(v0), jnp.zeros_like(w0))
+    (v, w), _, _, loss = jax.lax.fori_loop(
+        0, cfg.steps, body, ((v0, w0), zeros, zeros, jnp.float32(0.0)))
+    p = jax.nn.softmax(cfg.scale_end * _normalize_rows(v) @ _normalize_rows(w).T,
+                       axis=-1)
+    return jnp.argmax(p, axis=-1), loss
+
+
+def kissing_sort(
+    x: jnp.ndarray,
+    hw: tuple[int, int],
+    cfg: KissingConfig = KissingConfig(),
+    key: jax.Array | None = None,
+) -> tuple[np.ndarray, np.ndarray, float, bool]:
+    """Returns (order, x[order], loss, valid).  ``valid`` is False when the
+    argmax binarization contains duplicates (the paper's reported failure
+    mode — Table III footnote)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    x = jnp.asarray(x, jnp.float32)
+    norm = jnp.float32(mean_pairwise_distance(x))
+    order, loss = _train(x, norm, key, hw=hw, cfg=cfg)
+    order = np.asarray(order)
+    valid = is_valid_permutation(order)
+    return order, np.asarray(x)[order], float(loss), valid

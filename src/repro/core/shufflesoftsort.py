@@ -1,0 +1,191 @@
+"""ShuffleSoftSort — Algorithm 1 of the paper.
+
+Learns a permutation of N items with only N parameters by iterating:
+
+  for r in 1..R:                      (outer: anneal tau, re-shuffle)
+      tau_r = tau_start * (tau_end / tau_start) ** (r / R)
+      w     = arange(N)               (linear init preserves incoming order)
+      shuf  = randperm(N)
+      for i in 1..I:                  (inner: a few SoftSort grad steps)
+          tau_i = tau_r * (0.2 .. 1.0 ramp)
+          P     = SoftSort_tau_i(w)           (streamed, never N^2)
+          y     = unshuffle(P @ x[order][shuf])
+          loss  = L_nbr(y) + l_s * L_s + l_sig * L_sigma      (eq. 2)
+          w    <- Adam step
+      order <- commit argsort(w) through the shuffle
+
+The random shuffle re-linearizes the grid along a fresh path each outer
+iteration, so elements can take long-range jumps that pure 1-D SoftSort
+transport cannot (paper Fig. 3/4).  The whole outer body is one jitted
+function; the R-loop stays in Python so callers can stream metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import grid_sorting_loss, mean_pairwise_distance
+from repro.core.softsort import softsort_apply_chunked
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleSoftSortConfig:
+    rounds: int = 1000          # R — outer iterations (paper: "few hundred")
+    inner_steps: int = 8        # I — SoftSort grad steps per round (paper: 4)
+    tau_start: float = 1.0
+    tau_end: float = 0.2        # below ~0.2 the SoftSort gradient vanishes
+    inner_tau_ramp: float = 0.2  # inner tau starts at ramp*tau_r
+    lr: float = 0.3             # calibrated: see EXPERIMENTS.md §Paper-claims
+    b1: float = 0.5             # short inner runs want fast-adapting Adam
+    b2: float = 0.9
+    lambda_s: float = 1.0       # eq. 2 regularizer weights (paper values)
+    lambda_sigma: float = 2.0
+    chunk: int = 256            # row-block size for streamed softsort
+    use_kernel: bool = False    # route the apply through the Pallas kernel
+
+
+def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
+             apply_fn) -> jnp.ndarray:
+    y_shuf, colsum = apply_fn(w, x_shuf, tau)
+    y = y_shuf[inv_shuf]  # reverse-shuffle: loss sees the grid layout
+    return grid_sorting_loss(
+        y, colsum, x_shuf, hw, norm,
+        lambda_s=cfg.lambda_s, lambda_sigma=cfg.lambda_sigma)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)
+def _outer_round(x, order, key, tau_r, norm, *, hw, cfg: ShuffleSoftSortConfig,
+                 apply_fn):
+    n = x.shape[0]
+    shuf = jax.random.permutation(key, n)
+    inv_shuf = jnp.argsort(shuf)
+    x_cur = x[order]
+    x_shuf = x_cur[shuf]
+
+    w0 = jnp.arange(n, dtype=jnp.float32)
+    grad_fn = jax.value_and_grad(_loss_fn)
+
+    def inner(i, carry):
+        w, mu, nu, _ = carry
+        frac = i.astype(jnp.float32) / jnp.maximum(cfg.inner_steps - 1, 1)
+        tau_i = tau_r * (cfg.inner_tau_ramp + (1.0 - cfg.inner_tau_ramp) * frac)
+        loss, g = grad_fn(w, x_shuf, inv_shuf, tau_i, hw, norm, cfg, apply_fn)
+        t = i.astype(jnp.float32) + 1.0
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / (1 - cfg.b1 ** t)
+        nuhat = nu / (1 - cfg.b2 ** t)
+        w = w - cfg.lr * mhat / (jnp.sqrt(nuhat) + 1e-8)
+        return (w, mu, nu, loss)
+
+    w, _, _, loss = jax.lax.fori_loop(
+        0, cfg.inner_steps, inner,
+        (w0, jnp.zeros_like(w0), jnp.zeros_like(w0), jnp.float32(0.0)))
+
+    # Commit the hard permutation through the shuffle:
+    #   new_grid[shuf[i]] = x_shuf[sort_idx[i]] = x_cur[shuf[sort_idx[i]]]
+    sort_idx = jnp.argsort(w)          # == argmax(P_soft, -1) with repaired ties
+    g = jnp.zeros(n, dtype=jnp.int32).at[shuf].set(shuf[sort_idx])
+    return order[g], loss
+
+
+def shuffle_soft_sort(
+    x: jnp.ndarray,
+    hw: tuple[int, int],
+    cfg: ShuffleSoftSortConfig = ShuffleSoftSortConfig(),
+    key: jax.Array | None = None,
+    callback: Optional[Callable[[int, np.ndarray, float], None]] = None,
+) -> tuple[np.ndarray, np.ndarray, list[float]]:
+    """Sort x (N, d) onto an (h, w) grid.  Returns (order, x[order], losses).
+
+    ``order`` is the permutation (N int32) mapping grid cell -> input row;
+    only these N indices — plus the N learnable weights inside each round
+    — are ever stored, which is the paper's headline claim.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n = x.shape[0]
+    assert n == hw[0] * hw[1], (n, hw)
+    x = jnp.asarray(x, jnp.float32)
+    norm = jnp.float32(mean_pairwise_distance(x))
+
+    if cfg.use_kernel:
+        from repro.kernels.ops import softsort_apply as apply_fn
+    else:
+        apply_fn = functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+
+    order = jnp.arange(n, dtype=jnp.int32)
+    losses: list[float] = []
+    for r in range(cfg.rounds):
+        tau_r = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** ((r + 1) / cfg.rounds)
+        key, sub = jax.random.split(key)
+        order, loss = _outer_round(
+            x, order, sub, jnp.float32(tau_r), norm,
+            hw=hw, cfg=cfg, apply_fn=apply_fn)
+        losses.append(float(loss))
+        if callback is not None:
+            callback(r, np.asarray(order), losses[-1])
+    order = np.asarray(order)
+    return order, np.asarray(x)[order], losses
+
+
+# --------------------------------------------------------------------------
+# Plain SoftSort baseline (paper Table III row 3): one weight vector trained
+# end-to-end with the same loss and tau annealing, no shuffling.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("hw", "cfg", "apply_fn", "steps"))
+def _softsort_train(x, norm, *, hw, cfg: ShuffleSoftSortConfig, apply_fn,
+                    steps: int):
+    n = x.shape[0]
+    w0 = jnp.arange(n, dtype=jnp.float32)
+    ident = jnp.arange(n, dtype=jnp.int32)
+    grad_fn = jax.value_and_grad(_loss_fn)
+
+    def body(i, carry):
+        w, mu, nu, _ = carry
+        frac = i.astype(jnp.float32) / steps
+        tau = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** frac
+        loss, g = grad_fn(w, x, ident, tau, hw, norm, cfg, apply_fn)
+        t = i.astype(jnp.float32) + 1.0
+        mu = 0.9 * mu + 0.1 * g
+        nu = 0.999 * nu + 0.001 * jnp.square(g)
+        mhat = mu / (1 - 0.9 ** t)
+        nuhat = nu / (1 - 0.999 ** t)
+        w = w - cfg.lr * mhat / (jnp.sqrt(nuhat) + 1e-8)
+        return (w, mu, nu, loss)
+
+    w, _, _, loss = jax.lax.fori_loop(
+        0, steps, body, (w0, jnp.zeros_like(w0), jnp.zeros_like(w0),
+                         jnp.float32(0.0)))
+    return jnp.argsort(w), loss
+
+
+def soft_sort_baseline(
+    x: jnp.ndarray,
+    hw: tuple[int, int],
+    cfg: ShuffleSoftSortConfig = ShuffleSoftSortConfig(),
+    steps: int | None = None,
+) -> tuple[np.ndarray, np.ndarray, float]:
+    """Pure SoftSort with the same budget (R*I steps by default)."""
+    x = jnp.asarray(x, jnp.float32)
+    norm = jnp.float32(mean_pairwise_distance(x))
+    if cfg.use_kernel:
+        from repro.kernels.ops import softsort_apply as apply_fn
+    else:
+        apply_fn = functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+    steps = steps or cfg.rounds * cfg.inner_steps
+    order, loss = _softsort_train(x, norm, hw=hw, cfg=cfg, apply_fn=apply_fn,
+                                  steps=steps)
+    order = np.asarray(order)
+    return order, np.asarray(x)[order], float(loss)

@@ -1,0 +1,124 @@
+"""SoftSort — continuous relaxation of argsort (Prillo & Eisenschlos, 2020).
+
+    SoftSort_tau(w) = softmax_rows( -|sort(w)_i - w_j| / tau )          (eq. 1)
+
+Row i of the soft permutation matrix concentrates on the element of `w`
+holding rank i, so ``P_soft @ x`` approximates ``x[argsort(w)]``.
+
+Two implementations live here:
+
+* ``softsort_matrix``           — materializes the full (N, N) matrix.
+                                  Reference path; fine up to N ~ 8k.
+* ``softsort_apply_chunked``    — row-block streaming evaluation of
+                                  (P @ x, column_sums(P)) in O(N * chunk)
+                                  memory.  This is the paper's "row-wise
+                                  manner" requirement (Sec. II) and the
+                                  pure-jnp twin of the Pallas kernel in
+                                  ``repro.kernels.softsort_apply``.
+
+Everything is differentiable; the chunked path uses ``jax.lax.map`` so
+autodiff re-streams the blocks in the backward pass instead of saving an
+N^2 residual.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _sort_diff(w: jnp.ndarray) -> jnp.ndarray:
+    """sort(w) written as gather-by-argsort.  Mathematically the same
+    gradient as jnp.sort, but avoids this jaxlib build's broken
+    grad-of-sort path (GatherDimensionNumbers operand_batching_dims)."""
+    return w[jnp.argsort(jax.lax.stop_gradient(w))]
+
+
+def softsort_matrix(w: jnp.ndarray, tau: float | jnp.ndarray,
+                    descending: bool = False) -> jnp.ndarray:
+    """Full (N, N) SoftSort matrix. Row i ~ one-hot of rank-i element."""
+    ws = _sort_diff(w)
+    if descending:
+        ws = ws[::-1]
+    d = jnp.abs(ws[:, None] - w[None, :])
+    return jax.nn.softmax(-d / tau, axis=-1)
+
+
+def softsort_apply_chunked(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    tau: float | jnp.ndarray,
+    chunk: int = 256,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Streaming (P_soft @ x, column_sums(P_soft)) without an (N, N) array.
+
+    Args:
+      w: (N,) sort keys (the N learnable parameters).
+      x: (N, d) payload vectors to be re-ordered.
+      tau: temperature.
+      chunk: rows of P evaluated per step; memory is O(chunk * N).
+
+    Returns:
+      y: (N, d) soft-sorted payload.
+      colsum: (N,) column sums of P_soft (for the stochastic loss, eq. 3).
+    """
+    n = w.shape[0]
+    assert n % chunk == 0 or n < chunk, (n, chunk)
+    if n <= chunk:
+        p = softsort_matrix(w, tau)
+        return p @ x, p.sum(axis=0)
+
+    ws = _sort_diff(w)
+    ws_blocks = ws.reshape(n // chunk, chunk)
+
+    def row_block(ws_blk):
+        # (chunk, N) scores for this row block — peak live memory.
+        s = -jnp.abs(ws_blk[:, None] - w[None, :]) / tau
+        p = jax.nn.softmax(s, axis=-1)
+        return p @ x, p.sum(axis=0)
+
+    y_blocks, colsum_blocks = jax.lax.map(row_block, ws_blocks)
+    return y_blocks.reshape(n, x.shape[-1]), colsum_blocks.sum(axis=0)
+
+
+def hard_permutation(w: jnp.ndarray, tau: float | jnp.ndarray = 1.0,
+                     chunk: int = 4096) -> jnp.ndarray:
+    """argmax over rows of P_soft == argsort(w) with stable tie handling.
+
+    Row i of SoftSort peaks at the element nearest to sort(w)[i]; for a
+    vector without exact duplicates this is exactly argsort.  We compute
+    it directly as argsort (O(N log N), no N^2), matching what
+    ``argmax(P_soft, -1)`` returns in exact arithmetic.
+    """
+    del tau, chunk
+    return jnp.argsort(w)
+
+
+def is_valid_permutation(idx: np.ndarray | jnp.ndarray) -> bool:
+    idx = np.asarray(idx)
+    return bool(np.all(np.sort(idx) == np.arange(idx.shape[0])))
+
+
+def fix_permutation(idx: np.ndarray | jnp.ndarray) -> np.ndarray:
+    """Greedy repair of an index vector with duplicates (paper Sec. II:
+    'in very rare cases ... iterations are extended until valid' — we
+    additionally provide a deterministic repair so the pipeline can
+    never stall)."""
+    idx = np.asarray(idx).copy()
+    n = idx.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    dup_rows = []
+    for i in range(n):
+        j = idx[i]
+        if seen[j]:
+            dup_rows.append(i)
+        else:
+            seen[j] = True
+    missing = np.flatnonzero(~seen)
+    # Assign each duplicate row the nearest missing value (both sorted —
+    # monotone matching is optimal for L1 on a line).
+    dup_rows_sorted = sorted(dup_rows, key=lambda r: idx[r])
+    for r, m in zip(dup_rows_sorted, missing):
+        idx[r] = m
+    return idx

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    synthetic_batch,
+    token_spec,
+    batch_specs,
+    context_spec,
+)

@@ -1,0 +1,70 @@
+"""Deterministic synthetic data pipeline.
+
+Tokens are derived from a counter-based PRNG keyed on (seed, step), so:
+  * every host generates exactly its own shard without coordination
+    (shard index folds into the key) — no host-side data movement;
+  * restarts resume bit-identically (the step index is in the key);
+  * elastic re-sharding changes nothing (the global batch is a pure
+    function of the step).
+
+``batch_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable,
+zero allocation) for the dry-run path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeCell
+
+
+def synthetic_batch(cfg: ModelConfig, batch: int, seq: int, step: int,
+                    seed: int = 0):
+    """Materialize one global batch (small scales / CPU training only)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq + 1), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+    ctx = _context(cfg, batch, k2)
+    if ctx is not None:
+        out["context"] = ctx
+    return out
+
+
+def _context(cfg: ModelConfig, batch: int, key):
+    if cfg.family == "vlm":
+        return jax.random.normal(key, (batch, cfg.vision_tokens,
+                                       cfg.vision_d), jnp.bfloat16)
+    if cfg.is_encdec:
+        return jax.random.normal(key, (batch, cfg.audio_frames,
+                                       cfg.d_model), jnp.bfloat16)
+    return None
+
+
+# ------------------------------------------------------ dry-run specs
+
+def token_spec(batch: int, seq: int):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def context_spec(cfg: ModelConfig, batch: int):
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.vision_d), jnp.bfloat16)
+    if cfg.is_encdec:
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.audio_frames, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell):
+    """Training-batch ShapeDtypeStructs for one shape cell."""
+    specs = {
+        "tokens": token_spec(cell.global_batch, cell.seq_len),
+        "labels": token_spec(cell.global_batch, cell.seq_len),
+    }
+    ctx = context_spec(cfg, cell.global_batch)
+    if ctx is not None:
+        specs["context"] = ctx
+    return specs

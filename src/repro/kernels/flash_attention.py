@@ -1,0 +1,135 @@
+"""Flash attention (GQA-aware) Pallas TPU kernel.
+
+The §Roofline tables show every *_train / prefill cell memory-bound on
+the (B, H, S, S) score tensors the jnp attention materializes; on TPU
+the fix is exactly this kernel: stream (Br, Bc) score tiles through VMEM
+with running max/denominator statistics so HBM traffic is O(S·Dh)
+instead of O(S²).
+
+Same two-pass structure as ``softsort_apply`` (it *is* the same
+algorithm with a dot-product score instead of an L1 distance):
+
+  pass 1  _stats_kernel : running row-max m and denominator l
+  pass 2  _apply_kernel : exact P tile = exp(s−m)/l, fused (Br,Bc)@(Bc,Dh)
+
+Grid planes iterate (batch*q_heads); GQA maps q-head -> kv-head by
+integer division inside the index maps, so repeated K/V are never
+materialized (matches the jnp path after the §Perf GQA-einsum fix).
+
+Block shapes are (8k, 128m)-aligned for the MXU; VMEM working set
+~ Br*Bc + 2*Bc*Dh + Br*Dh floats.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _mask(i, j, br, bc, q_len, kv_len, causal, q_offset):
+    rows = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+    cols = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+    ok = (rows < q_len) & (cols < kv_len)
+    if causal:
+        ok &= cols <= (rows + q_offset)
+    return ok
+
+
+def _stats_kernel(q_ref, k_ref, m_ref, l_ref, *, scale, br, bc,
+                  q_len, kv_len, causal, q_offset):
+    i, j = pl.program_id(1), pl.program_id(2)
+    s = jnp.dot(q_ref[0], k_ref[0].T,
+                preferred_element_type=jnp.float32) * scale   # (Br, Bc)
+    s = jnp.where(_mask(i, j, br, bc, q_len, kv_len, causal, q_offset),
+                  s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True)[None])
+    l_ref[...] = (l_ref[...] * jnp.exp(m_prev - m_new)
+                  + jnp.sum(jnp.exp(s[None] - m_new), -1, keepdims=True))
+    m_ref[...] = m_new
+
+
+def _apply_kernel(q_ref, k_ref, v_ref, m_ref, l_ref, o_ref, *, scale, br,
+                  bc, q_len, kv_len, causal, q_offset):
+    i, j = pl.program_id(1), pl.program_id(2)
+    s = jnp.dot(q_ref[0], k_ref[0].T,
+                preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(i, j, br, bc, q_len, kv_len, causal, q_offset),
+                  s, NEG_INF)
+    p = jnp.exp(s - m_ref[0]) / jnp.maximum(l_ref[0], 1e-30)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(p, v_ref[0].astype(jnp.float32),
+                          preferred_element_type=jnp.float32
+                          )[None].astype(o_ref.dtype)
+
+
+def flash_attention_fwd_pallas(
+    q: jnp.ndarray,    # (BH, Tq_pad, Dh)  — batch*q_heads planes
+    k: jnp.ndarray,    # (BHkv, Tk_pad, Dh)
+    v: jnp.ndarray,    # (BHkv, Tk_pad, Dh)
+    *,
+    rep: int,          # q heads per kv head
+    scale: float,
+    q_len: int,
+    kv_len: int,
+    causal: bool,
+    q_offset: int,     # absolute position of q row 0 (decode: pos)
+    br: int,
+    bc: int,
+    interpret: bool,
+):
+    bh, tq, dh = q.shape
+    tk = k.shape[1]
+    ni, nj = tq // br, tk // bc
+    f32 = jnp.float32
+    kw = dict(scale=scale, br=br, bc=bc, q_len=q_len, kv_len=kv_len,
+              causal=causal, q_offset=q_offset)
+
+    m, l = pl.pallas_call(
+        functools.partial(_stats_kernel, **kw),
+        grid=(bh, ni, nj),
+        in_specs=[
+            pl.BlockSpec((1, br, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bc, dh), lambda h, i, j, rep=rep:
+                         (h // rep, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, br, 1), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, br, 1), lambda h, i, j: (h, i, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((bh, tq, 1), f32),
+                   jax.ShapeDtypeStruct((bh, tq, 1), f32)],
+        interpret=interpret,
+    )(q, k)
+
+    out = pl.pallas_call(
+        functools.partial(_apply_kernel, **kw),
+        grid=(bh, ni, nj),
+        in_specs=[
+            pl.BlockSpec((1, br, dh), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bc, dh), lambda h, i, j, rep=rep:
+                         (h // rep, j, 0)),
+            pl.BlockSpec((1, bc, dh), lambda h, i, j, rep=rep:
+                         (h // rep, j, 0)),
+            pl.BlockSpec((1, br, 1), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, br, 1), lambda h, i, j: (h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, dh), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, dh), f32),
+        interpret=interpret,
+    )(q, k, v, m, l)
+    return out

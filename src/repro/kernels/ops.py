@@ -1,0 +1,129 @@
+"""jit'd public wrapper for the fused SoftSort-apply kernel.
+
+``softsort_apply(w, x, tau)`` returns ``(P_soft @ x, column_sums(P_soft))``
+in O(N * block) memory with a custom VJP whose backward pass re-streams
+the score blocks (flash-attention style recomputation) instead of saving
+an N^2 residual.
+
+The forward runs the Pallas TPU kernels from ``softsort_apply.py``
+(``interpret=True`` automatically off-TPU); the backward is a chunked
+``lax.scan`` in plain jnp — it is bandwidth-bound and XLA fuses it well,
+so a hand kernel there would add risk without a roofline win (see
+EXPERIMENTS.md §Perf for the measurement).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.softsort_apply import softsort_apply_fwd_pallas
+
+_LANE = 128      # TPU lane width: pad d and pick Bc as multiples
+_SUBLANE = 8
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def softsort_apply(w, x, tau, block_rows: int = 256, block_cols: int = 256,
+                   bwd_chunk: int = 256):
+    """Fused (P_soft @ x, colsum(P_soft)); w: (N,), x: (N, d), tau scalar."""
+    y, c = _fwd_impl(w, x, tau, block_rows, block_cols)
+    return y, c
+
+
+def _fwd_impl(w, x, tau, block_rows, block_cols):
+    n, d = x.shape
+    assert w.shape == (n,), (w.shape, n)
+    br = min(block_rows, _round_up(n, _SUBLANE))
+    bc = min(block_cols, _round_up(n, _LANE))
+    np_ = _round_up(n, max(br, bc))
+    # Re-derive block sizes that tile the padded length exactly.
+    br = min(br, np_)
+    bc = min(bc, np_)
+    dp = _round_up(d, _LANE)
+
+    perm = jnp.argsort(jax.lax.stop_gradient(w))
+    ws = w[perm]
+
+    pad_n = np_ - n
+    # Pad rows of ws with increasing finite values (sliced off), cols of w
+    # with anything (masked in-kernel), x with zeros.
+    ws_p = jnp.pad(ws, (0, pad_n), constant_values=0.0).reshape(np_, 1)
+    w_p = jnp.pad(w, (0, pad_n), constant_values=0.0).reshape(1, np_)
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, pad_n), (0, dp - d)))
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+
+    y_p, c_p = softsort_apply_fwd_pallas(
+        ws_p.astype(jnp.float32), w_p.astype(jnp.float32), x_p, tau_arr,
+        n=n, br=br, bc=bc, interpret=not _on_tpu())
+    return y_p[:n, :d], c_p[0, :n]
+
+
+def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk):
+    y, c = _fwd_impl(w, x, tau, block_rows, block_cols)
+    return (y, c), (w, x, jnp.asarray(tau, jnp.float32))
+
+
+def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
+    w, x, tau = res
+    dy, dc = cot
+    n, d = x.shape
+    chunk = min(bwd_chunk, n)
+    # Pad the row dimension so chunks tile evenly; padded rows get zero
+    # cotangent so they contribute nothing.
+    np_ = _round_up(n, chunk)
+    pad = np_ - n
+
+    perm = jnp.argsort(jax.lax.stop_gradient(w))
+    ws = w[perm]
+    big = jnp.max(jax.lax.stop_gradient(ws)) + 1.0 if n else 0.0
+    ws_p = jnp.pad(ws, (0, pad), constant_values=big)
+    dy_p = jnp.pad(dy.astype(jnp.float32), ((0, pad), (0, 0)))
+
+    row_valid = (jnp.arange(np_) < n).astype(jnp.float32)
+
+    ws_blocks = ws_p.reshape(np_ // chunk, chunk)
+    dy_blocks = dy_p.reshape(np_ // chunk, chunk, d)
+    valid_blocks = row_valid.reshape(np_ // chunk, chunk)
+
+    xf = x.astype(jnp.float32)
+    dcf = dc.astype(jnp.float32)
+
+    def body(carry, blk):
+        dws_prev_unused, dw_cols, dx, dtau = carry
+        ws_b, dy_b, valid_b = blk              # (chunk,), (chunk, d), (chunk,)
+        delta = ws_b[:, None] - w[None, :]     # (chunk, N)
+        s = -jnp.abs(delta) / tau
+        p = jax.nn.softmax(s, axis=-1)
+        # dP_ij = dy_i . x_j + dc_j   (padded rows are not rows of P: mask)
+        dp = dy_b @ xf.T + dcf[None, :]        # (chunk, N)
+        dsum = jnp.sum(p * dp, axis=-1, keepdims=True)
+        ds = p * (dp - dsum) * valid_b[:, None]  # (chunk, N)
+        p = p * valid_b[:, None]               # mask dx contribution too
+        sgn = jnp.sign(delta)
+        dws_b = jnp.sum(ds * (-sgn), axis=-1) / tau       # (chunk,)
+        dw_cols = dw_cols + jnp.sum(ds * sgn, axis=0) / tau
+        dx = dx + p.T @ dy_b
+        dtau = dtau + jnp.sum(ds * (-s)) / tau
+        return (dws_prev_unused, dw_cols, dx, dtau), dws_b
+
+    init = (jnp.zeros(()), jnp.zeros_like(w, jnp.float32),
+            jnp.zeros_like(xf), jnp.zeros((), jnp.float32))
+    (_, dw_cols, dx, dtau), dws_stack = jax.lax.scan(
+        body, init, (ws_blocks, dy_blocks, valid_blocks))
+    dws = dws_stack.reshape(np_)[:n]
+    # Scatter the sorted-row gradient back through the permutation.
+    dw = dw_cols.at[perm].add(dws)
+    return dw.astype(w.dtype), dx.astype(x.dtype), dtau
+
+
+softsort_apply.defvjp(_fwd_rule, _bwd_rule)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused SoftSort-apply kernel.
+
+Materializes the full (N, N) soft permutation matrix — O(N^2) memory,
+reference semantics only.  Every kernel test sweeps shapes/dtypes and
+asserts allclose against this.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softsort_apply_ref(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    tau: jnp.ndarray | float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(P_soft @ x, column_sums(P_soft)) with P = softmax(-|sort(w)_i - w_j|/tau).
+
+    Args:
+      w: (N,) sort keys.
+      x: (N, d) payload.
+      tau: temperature (scalar).
+
+    Returns:
+      y: (N, d), colsum: (N,).
+    """
+    ws = w[jnp.argsort(jax.lax.stop_gradient(w))]
+    s = -jnp.abs(ws[:, None] - w[None, :]) / tau
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ x, p.sum(axis=0)

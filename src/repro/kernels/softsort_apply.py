@@ -1,0 +1,175 @@
+"""Fused flash-style SoftSort-apply Pallas TPU kernels.
+
+Computes, without ever materializing the (N, N) soft permutation matrix:
+
+    P_ij   = softmax_j( -|sort(w)_i - w_j| / tau )
+    y      = P @ x          (N, d)
+    colsum = sum_i P_ij     (N,)
+
+Structure is exactly flash attention with an L1-distance score and the
+sorted keys playing the role of queries:
+
+  * ``_stats_kernel``  — pass 1: streaming row max ``m`` and denominator
+    ``l`` over column blocks (grid = (Ni, Nj), j innermost; m/l output
+    blocks are revisited consecutively so they live in VMEM as
+    accumulators — the TPU sequential-grid idiom).
+  * ``_apply_kernel``  — pass 2: exact P block = exp(s - m)/l, fused
+    (Br, Bc) @ (Bc, d) MXU matmul accumulated into the y block.
+  * ``_colsum_kernel`` — pass 2': same P block math with the grid
+    transposed (j outer, i inner) so the colsum block accumulates over
+    row blocks.
+
+VMEM working set per step ~ Br*Bc (scores) + Bc*d (x block) + Br*d
+(y accumulator) floats; with the default Br = Bc = 256, d <= 512 this is
+well under the ~16 MB/core budget.  Block shapes are (8k, 128m)-aligned
+so the MXU sees aligned contractions.
+
+All kernels mask columns/rows >= n (true length) with -inf / zero, so
+the wrapper may pad N up to block multiples with arbitrary finite
+values.  ``tau`` arrives as a (1, 1) array so it can be a traced value
+inside jit without retriggering compilation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _score(ws_blk, w_blk, inv_tau):
+    # (Br, 1) x (1, Bc) -> (Br, Bc) L1 scores, scaled.
+    return -jnp.abs(ws_blk - w_blk) * inv_tau
+
+
+def _col_mask(j, bc, n):
+    col_ids = j * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
+    return col_ids < n
+
+
+def _row_mask(i, br, n):
+    row_ids = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
+    return row_ids < n
+
+
+def _stats_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, *, n: int, bc: int):
+    j = pl.program_id(1)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    s = _score(ws_ref[...], w_ref[...], inv_tau)               # (Br, Bc)
+    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    m_prev = m_ref[...]                                        # (Br, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    correction = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(
+        jnp.exp(s - m_new), axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+
+def _apply_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, y_ref,
+                  *, n: int, bc: int):
+    j = pl.program_id(1)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
+    p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jnp.dot(p, x_ref[...], preferred_element_type=jnp.float32)
+
+
+def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
+                   *, n: int, br: int, bc: int):
+    # Grid is (Nj, Ni): i innermost so the c block accumulates in VMEM.
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
+    p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+    p = jnp.where(_row_mask(i, br, n), p, 0.0)                 # mask pad rows
+
+    @pl.when(i == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.sum(p, axis=0, keepdims=True)
+
+
+def softsort_apply_fwd_pallas(
+    ws: jnp.ndarray,      # (Np, 1) sorted keys (rows), padded
+    w: jnp.ndarray,       # (1, Np) unsorted keys (cols), padded
+    x: jnp.ndarray,       # (Np, dp) payload, padded
+    tau: jnp.ndarray,     # (1, 1)
+    *,
+    n: int,               # true length
+    br: int,
+    bc: int,
+    interpret: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    np_, dp = x.shape
+    ni, nj = np_ // br, np_ // bc
+    f32 = jnp.float32
+
+    m, l = pl.pallas_call(
+        functools.partial(_stats_kernel, n=n, bc=bc),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # ws rows
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),    # w cols
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # tau
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # m
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # l
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 1), f32),
+            jax.ShapeDtypeStruct((np_, 1), f32),
+        ],
+        interpret=interpret,
+    )(ws, w, tau)
+
+    y = pl.pallas_call(
+        functools.partial(_apply_kernel, n=n, bc=bc),
+        grid=(ni, nj),
+        in_specs=[
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # ws
+            pl.BlockSpec((1, bc), lambda i, j: (0, j)),    # w
+            pl.BlockSpec((bc, dp), lambda i, j: (j, 0)),   # x col block
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # tau
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # m
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # l
+        ],
+        out_specs=pl.BlockSpec((br, dp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, dp), f32),
+        interpret=interpret,
+    )(ws, w, x, tau, m, l)
+
+    colsum = pl.pallas_call(
+        functools.partial(_colsum_kernel, n=n, br=br, bc=bc),
+        grid=(nj, ni),
+        in_specs=[
+            pl.BlockSpec((br, 1), lambda j, i: (i, 0)),    # ws
+            pl.BlockSpec((1, bc), lambda j, i: (0, j)),    # w
+            pl.BlockSpec((1, 1), lambda j, i: (0, 0)),     # tau
+            pl.BlockSpec((br, 1), lambda j, i: (i, 0)),    # m
+            pl.BlockSpec((br, 1), lambda j, i: (i, 0)),    # l
+        ],
+        out_specs=pl.BlockSpec((1, bc), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, np_), f32),
+        interpret=interpret,
+    )(ws, w, tau, m, l)
+
+    return y, colsum

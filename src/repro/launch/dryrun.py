@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import (jax locks device count on first init).
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+#     python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k --mesh multi
+#     python -m repro.launch.dryrun --all --mesh single --out dryrun.json
+#     python -m repro.launch.dryrun --paper --mesh multi
+#
+# Per cell this prints/records:
+#   * compiled.memory_analysis()  (bytes per device — proves it fits)
+#   * compiled.cost_analysis()    (FLOPs / bytes for the roofline)
+#   * collective bytes parsed from the partitioned HLO
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+from repro.models.config import SHAPE_CELLS, cell_by_name
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64"
+                      r"|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device bytes moved per collective kind, from the partitioned
+    module.  Bytes-on-the-wire model per op (g = group size):
+      all-gather:   result * (g-1)/g      all-reduce: 2 * size * (g-1)/g
+      reduce-scatter: result * (g-1)      all-to-all: size * (g-1)/g
+      collective-permute: size
+    """
+    stats = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue   # counted at -start
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        g = 1
+        rg = re.search(r"replica_groups=\{?\{([0-9, ]+)\}", line)
+        if rg:
+            g = len(rg.group(1).split(","))
+        else:
+            rg2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+            if rg2:
+                g = int(rg2.group(2))
+        if g <= 1:
+            wire = 0.0 if kind != "collective-permute" else float(size)
+        elif kind == "all-gather":
+            wire = size * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = float(size) * (g - 1)
+        elif kind == "all-to-all":
+            wire = size * (g - 1) / g
+        else:
+            wire = float(size)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += wire
+    stats["total_bytes"] = sum(v["bytes"] for v in stats.values()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _cell_costs(cfg, cell, mesh, opts=None) -> dict:
+    """lower+compile one config and extract (flops, bytes, collectives)."""
+    lowered = lower_cell(cfg, cell, mesh, opts)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll["total_bytes"],
+        "collectives": coll,
+        "compiled": compiled,
+    }
+
+
+def probe_corrected_costs(cfg, cell, mesh, opts=None) -> dict:
+    """XLA cost_analysis counts a while(scan) body ONCE regardless of trip
+    count.  We therefore lower two fully-unrolled probes with 1 and 2
+    repeats of the block unit: p1 = fixed + body, p2 = fixed + 2*body
+    (exact — trip-count-1/2 unrolled scans have no while op), and
+    extrapolate: total(R) = p1 + (R-1) * (p2 - p1).
+
+    Whisper's encoder scan has the same repeat count as its decoder scan,
+    so the combined-body linear model stays exact for the enc-dec arch.
+    """
+    import dataclasses
+    unit, repeats = cfg.block_program()
+
+    def probe_cfg(k):
+        return dataclasses.replace(
+            cfg,
+            num_layers=k * len(unit),
+            encoder_layers=(k if cfg.encoder_layers else 0),
+            scan_unroll=True)
+
+    p1 = _cell_costs(probe_cfg(1), cell, mesh, opts)
+    p2 = _cell_costs(probe_cfg(2), cell, mesh, opts)
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes"):
+        body = max(p2[key] - p1[key], 0.0)
+        out[key] = p1[key] + (repeats - 1) * body
+    out["probe1"] = {k: p1[k] for k in
+                     ("flops", "bytes_accessed", "collective_bytes")}
+    out["probe2"] = {k: p2[k] for k in
+                     ("flops", "bytes_accessed", "collective_bytes")}
+    out["repeats"] = repeats
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    cell = cell_by_name(shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+           "kind": cell.kind}
+
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: 500k dense decode is "
+                        "quadratic; skipped per assignment "
+                        "(DESIGN.md §6)")
+        return rec
+
+    t0 = time.time()
+    lowered = lower_cell(cfg, cell, mesh)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:                                  # noqa: BLE001
+        rec["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {
+            "flops": float(cost.get("flops", -1.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        }
+    except Exception as e:                                  # noqa: BLE001
+        rec["cost_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_stats(hlo)
+
+    # probe-corrected totals (scan bodies multiplied by true trip count)
+    try:
+        t0 = time.time()
+        rec["roofline_inputs"] = probe_corrected_costs(cfg, cell, mesh)
+        rec["probe_s"] = round(time.time() - t0, 1)
+    except Exception as e:                                  # noqa: BLE001
+        rec["roofline_inputs"] = {"error": repr(e)}
+
+    rec["status"] = "ok"
+    if verbose:
+        ri = rec.get("roofline_inputs", {})
+        print(f"  [{arch} x {shape} x {mesh_name}] "
+              f"compile={rec['compile_s']}s "
+              f"flops={ri.get('flops', 0):.3e} "
+              f"bytes={ri.get('bytes_accessed', 0):.3e} "
+              f"coll={ri.get('collective_bytes', 0):.3e}B", flush=True)
+    return rec
+
+
+def run_paper_cell(mesh, mesh_name: str, n: int = 1 << 20, d: int = 59,
+                   chunk: int = 512) -> dict:
+    """The paper's own workload at Self-Organizing-Gaussians scale: one
+    ShuffleSoftSort inner step over N = 2^20 splat attribute vectors
+    (d = 59 attrs), rows sharded over the whole mesh."""
+    import functools
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.shufflesoftsort import (ShuffleSoftSortConfig,
+                                            _outer_round)
+    from repro.core.softsort import softsort_apply_chunked
+
+    cfg = ShuffleSoftSortConfig(inner_steps=2, chunk=chunk)
+    hw = (1 << 10, 1 << 10)
+    apply_fn = functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+    shard_rows = NamedSharding(mesh, P(mesh.axis_names[0]))
+    shard_x = NamedSharding(mesh, P(mesh.axis_names[0], None))
+
+    x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    order = jax.ShapeDtypeStruct((n,), jnp.int32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    tau = jax.ShapeDtypeStruct((), jnp.float32)
+    norm = jax.ShapeDtypeStruct((), jnp.float32)
+
+    fn = functools.partial(_outer_round.__wrapped__, hw=hw, cfg=cfg,
+                           apply_fn=apply_fn)
+    jfn = jax.jit(fn, in_shardings=(shard_x, shard_rows, None, None, None),
+                  out_shardings=(shard_rows, None))
+    rec = {"arch": "paper-sort-2^20x59", "shape": f"N={n} d={d}",
+           "mesh": mesh_name, "kind": "paper"}
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jfn.lower(x, order, key, tau, norm)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+    cost = compiled.cost_analysis()
+    rec["cost_analysis"] = {"flops": float(cost.get("flops", -1.0)),
+                            "bytes_accessed": float(cost.get("bytes accessed", -1.0))}
+    rec["collectives"] = collective_stats(compiled.as_text())
+    rec["status"] = "ok"
+    print(f"  [paper-sort x {mesh_name}] compile={rec['compile_s']}s "
+          f"flops={rec['cost_analysis']['flops']:.3e} "
+          f"coll={rec['collectives']['total_bytes']:.3e}B", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=[c.name for c in SHAPE_CELLS])
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--paper", action="store_true",
+                    help="run the paper's own sorting workload")
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    print(f"mesh: {dict(mesh.shape)} ({len(mesh.devices.flat)} devices)",
+          flush=True)
+
+    records = []
+    if args.paper:
+        records.append(run_paper_cell(mesh, args.mesh))
+    if args.all:
+        for arch in list_archs():
+            for cell in SHAPE_CELLS:
+                try:
+                    records.append(run_cell(arch, cell.name, mesh, args.mesh))
+                except Exception as e:                      # noqa: BLE001
+                    records.append({"arch": arch, "shape": cell.name,
+                                    "mesh": args.mesh, "status": "error",
+                                    "error": repr(e)})
+                    print(f"  [{arch} x {cell.name}] ERROR: {e}",
+                          flush=True)
+    elif args.arch:
+        shapes = [args.shape] if args.shape else [c.name for c in SHAPE_CELLS]
+        for s in shapes:
+            records.append(run_cell(args.arch, s, mesh, args.mesh))
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {len(records)} records to {args.out}")
+    failures = [r for r in records if r.get("status") == "error"]
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

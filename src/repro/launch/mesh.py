@@ -1,0 +1,49 @@
+"""Mesh factory + per-mesh axis rules.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so
+importing this module never touches jax device state — the dry-run
+entrypoint sets XLA_FLAGS before any jax initialization.
+
+Topology (DESIGN.md §7):
+  single-pod: (16, 16)      axes ("data", "model")      — 256 chips
+  multi-pod : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+Batch shards over ("pod","data"); params/optimizer FSDP over "data"
+(ZeRO-3 inside a pod, pure DP across pods — gradient all-reduce over
+"pod" is the only cross-DCN collective in the baseline); tensor/expert
+parallelism over "model".  The factory generalizes to any (P, D, T) for
+elastic restarts.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import AxisRules
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape: tuple[int, ...] | None = None):
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (("pod", "data", "model") if len(shape) == 3
+            else ("data", "model"))
+    ndev = 1
+    for s in shape:
+        ndev *= s
+    avail = len(jax.devices())
+    if avail < ndev:
+        raise RuntimeError(
+            f"mesh {shape} needs {ndev} devices, have {avail}; the dry-run "
+            "entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count before importing jax")
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev])
+
+
+def axis_rules_for(mesh) -> AxisRules:
+    names = mesh.axis_names
+    dp = ("pod", "data") if "pod" in names else ("data",)
+    return AxisRules(fsdp="data", tp="model", dp=dp)
+
+
+def dp_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,336 @@
+"""Builds the sharded, jit-able step functions for every shape cell.
+
+``build_cell`` returns (fn, example_specs, in_shardings, out_shardings)
+for one (arch config, shape cell, mesh):
+
+  train_*    -> train_step   : loss + grad + Adam update (donated state)
+  prefill_*  -> prefill_step : full forward returning last logits + caches
+  decode_*   -> serve_step   : one new token against a seq_len KV cache
+
+Sharding policy (baseline — see EXPERIMENTS.md §Perf for iterations):
+  batch          -> ("pod","data")          [dp]
+  params/moments -> FSDP over "data", TP over "model"
+  KV cache       -> batch over dp when divisible; sequence over "model"
+                    (decode_32k) or all axes (long_500k, batch=1)
+  SSM state      -> batch over dp, heads over "model"
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data.synthetic import batch_specs, context_spec, token_spec
+from repro.launch.mesh import axis_rules_for, dp_axes
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim.adam import AdamState, adam_update, clip_by_global_norm
+
+PyTree = Any
+
+
+# ----------------------------------------------------------- small utils
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh, dim_size: int, axes):
+    """Use axes only if dim divides evenly; else replicate that dim."""
+    return axes if dim_size % _axis_size(mesh, axes) == 0 else None
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _sanitize_spec(mesh, spec: P, shape) -> P:
+    """Drop axes from a PartitionSpec wherever the dim is not divisible by
+    the axis-product (e.g. odd vocab/width on a 16-way axis)."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            out.append(None if i >= len(shape) else axes)
+            continue
+        if shape[i] % _axis_size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _sharding_tree_for(mesh, spec_tree, shape_tree):
+    """NamedShardings with divisibility-sanitized specs."""
+    flat_specs, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda s: isinstance(s, P))
+    flat_shapes = treedef.flatten_up_to(shape_tree)
+    out = [NamedSharding(mesh, _sanitize_spec(mesh, s, sh.shape))
+           for s, sh in zip(flat_specs, flat_shapes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# -------------------------------------------------------- state skeleton
+
+def model_state_specs(cfg: ModelConfig, mesh):
+    """(shape_tree, pspec_tree) for {params, opt, step} without allocating."""
+    rules = axis_rules_for(mesh)
+
+    def init():
+        params, _ = model_lib.init_model(jax.random.PRNGKey(0), cfg, rules)
+        return params
+
+    param_shapes = jax.eval_shape(init)
+    param_specs = _param_specs(cfg, rules)
+
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    opt_shapes = AdamState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                        param_shapes),
+        nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                        param_shapes),
+    )
+    opt_specs = AdamState(step=P(), mu=param_specs, nu=param_specs)
+    shapes = {"params": param_shapes, "opt": opt_shapes}
+    specs = {"params": param_specs, "opt": opt_specs}
+    return shapes, specs
+
+
+def _param_specs(cfg, rules):
+    """Spec tree without allocating params: trace init abstractly and
+    capture the (non-array) spec structure via closure."""
+    box = {}
+
+    def f(k):
+        params, specs = model_lib.init_model(k, cfg, rules)
+        box["specs"] = specs
+        return jnp.zeros(())
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["specs"]
+
+
+# ------------------------------------------------------------ train step
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    grad_clip: float = 1.0):
+    def train_step(state, batch):
+        def lf(p):
+            return model_lib.loss_fn(p, cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state["params"])
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = adam_update(
+            grads, state["opt"], state["params"], lr=lr, b1=0.9, b2=0.95)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def build_train(cfg: ModelConfig, cell: ShapeCell, mesh):
+    rules = axis_rules_for(mesh)
+    dp = dp_axes(mesh)
+    state_shapes, state_specs = model_state_specs(cfg, mesh)
+    bspecs = batch_specs(cfg, cell)
+    bshard = {
+        k: P(_maybe(mesh, v.shape[0], dp), *([None] * (len(v.shape) - 1)))
+        for k, v in bspecs.items()
+    }
+    fn = make_train_step(cfg)
+    state_sh = _sharding_tree_for(mesh, state_specs, state_shapes)
+    in_shardings = (state_sh, _sharding_tree(mesh, bshard))
+    out_shardings = (state_sh, None)
+    args = (state_shapes, bspecs)
+    return fn, args, in_shardings, out_shardings, (0,)   # donate state
+
+
+# --------------------------------------------------------- serve: prefill
+
+def _cache_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    """PartitionSpec tree matching make_caches structure."""
+    from repro.models.attention import KVCache
+    from repro.models.ssm import SSMCache
+    unit, _ = cfg.block_program()
+    dp = dp_axes(mesh)
+    b = cell.global_batch
+    s = cell.seq_len
+    b_ax = _maybe(mesh, b, dp)
+    if b_ax is None and b == 1:
+        seq_axes = ("data", "model") if "pod" not in mesh.axis_names \
+            else ("pod", "data", "model")
+    else:
+        seq_axes = ("model",)
+    s_ax = _maybe(mesh, s, seq_axes)
+
+    specs = []
+    for kind in unit:
+        if kind.startswith("attn") or kind == "cross_attn":
+            spec = KVCache(
+                k=P(None, b_ax, s_ax, None, None),
+                v=P(None, b_ax, s_ax, None, None))
+        elif kind.startswith("mamba"):
+            tp = "model"
+            spec = SSMCache(
+                conv_x=P(None, b_ax, None,
+                         _maybe(mesh, cfg.ssm_d_inner, tp)),
+                conv_b=P(None, b_ax, None,
+                         _maybe(mesh, cfg.ssm_state, tp)),
+                conv_c=P(None, b_ax, None,
+                         _maybe(mesh, cfg.ssm_state, tp)),
+                state=P(None, b_ax, _maybe(mesh, cfg.ssm_heads, tp),
+                        None, None))
+        else:
+            spec = None
+        specs.append(spec)
+    return tuple(specs)
+
+
+def _ctx_kv_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh):
+    from repro.models.attention import KVCache
+    unit, _ = cfg.block_program()
+    if not any(k == "cross_attn" for k in unit):
+        return None
+    dp = dp_axes(mesh)
+    b_ax = _maybe(mesh, cell.global_batch, dp)
+    specs = []
+    for kind in unit:
+        if kind == "cross_attn":
+            specs.append(KVCache(k=P(None, b_ax, None, None, None),
+                                 v=P(None, b_ax, None, None, None)))
+        else:
+            specs.append(None)
+    return tuple(specs)
+
+
+def build_prefill(cfg: ModelConfig, cell: ShapeCell, mesh):
+    rules = axis_rules_for(mesh)
+    dp = dp_axes(mesh)
+    param_specs = _param_specs(cfg, rules)
+    param_shapes = jax.eval_shape(
+        lambda k: model_lib.init_model(k, cfg, rules)[0],
+        jax.random.PRNGKey(0))
+
+    b, s = cell.global_batch, cell.seq_len
+    toks = token_spec(b, s)
+    ctx = context_spec(cfg, b)
+    b_ax = _maybe(mesh, b, dp)
+    cache_specs = _cache_pspecs(cfg, cell, mesh)
+
+    def prefill_step(params, tokens, context=None):
+        return model_lib.prefill(params, cfg, tokens, context)
+
+    args = [param_shapes, toks] + ([ctx] if ctx is not None else [])
+    in_sh = [_sharding_tree_for(mesh, param_specs, param_shapes),
+             NamedSharding(mesh, P(b_ax, None))]
+    if ctx is not None:
+        in_sh.append(NamedSharding(mesh, P(b_ax, None, None)))
+    out_sh = (NamedSharding(mesh, P(b_ax, None, "model")),
+              _sharding_tree(mesh, cache_specs))
+    return prefill_step, tuple(args), tuple(in_sh), out_sh, ()
+
+
+# ---------------------------------------------------------- serve: decode
+
+def build_decode(cfg: ModelConfig, cell: ShapeCell, mesh):
+    rules = axis_rules_for(mesh)
+    dp = dp_axes(mesh)
+    param_specs = _param_specs(cfg, rules)
+    param_shapes = jax.eval_shape(
+        lambda k: model_lib.init_model(k, cfg, rules)[0],
+        jax.random.PRNGKey(0))
+
+    b, s = cell.global_batch, cell.seq_len
+    b_ax = _maybe(mesh, b, dp)
+    tok = token_spec(b, 1)
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.make_caches(cfg, b, s, jnp.bfloat16))
+    cache_specs = _cache_pspecs(cfg, cell, mesh)
+    ctx = context_spec(cfg, b)
+    ctx_kv_shapes = None
+    if ctx is not None:
+        ctx_kv_shapes = jax.eval_shape(
+            lambda p, c: model_lib.precompute_ctx_kvs(p, cfg, c),
+            param_shapes, ctx)
+    ctx_kv_specs = _ctx_kv_pspecs(cfg, cell, mesh)
+
+    def serve_step(params, token, caches, pos, ctx_kvs=None):
+        logits, new_caches = model_lib.decode_step(
+            params, cfg, token, caches, pos, context=None, ctx_kvs=ctx_kvs)
+        return logits, new_caches
+
+    args = [param_shapes, tok, cache_shapes,
+            jax.ShapeDtypeStruct((), jnp.int32)]
+    in_sh = [_sharding_tree_for(mesh, param_specs, param_shapes),
+             NamedSharding(mesh, P(b_ax, None)),
+             _sharding_tree(mesh, cache_specs),
+             NamedSharding(mesh, P())]
+    if ctx_kv_shapes is not None:
+        args.append(ctx_kv_shapes)
+        in_sh.append(_sharding_tree(mesh, ctx_kv_specs))
+    out_sh = (NamedSharding(mesh, P(b_ax, None, "model")),
+              _sharding_tree(mesh, cache_specs))
+    donate = (2,)    # donate caches
+    return serve_step, tuple(args), tuple(in_sh), out_sh, donate
+
+
+# -------------------------------------------------------------- dispatch
+
+def build_cell(cfg: ModelConfig, cell: ShapeCell, mesh):
+    if cell.kind == "train":
+        return build_train(cfg, cell, mesh)
+    if cell.kind == "prefill":
+        return build_prefill(cfg, cell, mesh)
+    if cell.kind == "decode":
+        return build_decode(cfg, cell, mesh)
+    raise ValueError(cell.kind)
+
+
+def lower_cell(cfg: ModelConfig, cell: ShapeCell, mesh, opts: dict | None = None):
+    """jit().lower() for one cell — the dry-run workhorse.
+
+    ``opts`` carries §Perf hillclimb variants:
+      moe_group_size: int   — dispatch group size override
+      remat: bool           — activation checkpointing on/off
+      moe_shard: bool       — constrain MoE dispatch intermediates (EP)
+      decode_dshard: bool   — 2-D weight-stationary serving (activations
+                              reshard over 'data' instead of FSDP weight
+                              all-gathers)
+    """
+    import dataclasses
+    from repro.models.layers import activation_sharding_ctx
+    opts = opts or {}
+    cfg_overrides = {k: v for k, v in opts.items()
+                     if k in ("moe_group_size", "moe_impl", "remat", "param_dtype",
+                              "embed_shard", "attn_seq_shard", "remat_policy",
+                              "scan_unroll", "capacity_factor")}
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    fn, args, in_sh, out_sh, donate = build_cell(cfg, cell, mesh)
+    jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                  donate_argnums=donate)
+    sp = None
+    if cell.kind in ("prefill",) and (
+            cell.global_batch < _axis_size(mesh, dp_axes(mesh))
+            or opts.get("force_sp")):
+        sp = "model"    # batch too small to fill dp (or forced variant):
+                        # seq-parallel prefill
+    dshard = "data" if (opts.get("decode_dshard")
+                        and cell.kind == "decode") else None
+    with jax.set_mesh(mesh), activation_sharding_ctx(
+            mesh, dp_axes(mesh), tp_axis="model", sp_axis=sp,
+            dshard_axis=dshard, moe_shard=bool(opts.get("moe_shard"))):
+        return jfn.lower(*args)

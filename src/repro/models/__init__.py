@@ -1,0 +1,12 @@
+from repro.models.config import ModelConfig, ShapeCell, SHAPE_CELLS, cell_by_name  # noqa: F401
+from repro.models.layers import AxisRules  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_model,
+    forward,
+    loss_fn,
+    prefill,
+    decode_step,
+    make_caches,
+    param_count,
+    reduced_config,
+)

@@ -1,0 +1,167 @@
+"""GQA attention: full-sequence (train/prefill), single-token decode with
+KV cache, and cross-attention — all sharded head-wise over the TP axis.
+
+The decode path writes the new K/V at position ``pos`` with a dynamic
+update and attends over the full cache with a length mask; KV caches can
+additionally be sequence-sharded (SP) for the long-context cells by the
+caller's sharding constraints — nothing here assumes replication.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (AxisRules, apply_rope, constrain_dims,
+                                 init_linear, linear)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # (B, S, Hkv, Dh)
+    v: jnp.ndarray   # (B, S, Hkv, Dh)
+
+
+def init_attention(key, cfg, dtype, rules: AxisRules, *, cross: bool = False):
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    wq, sq = init_linear(ks[0], d, h * dh, dtype, bias=cfg.qkv_bias,
+                         in_spec=rules.fsdp, out_spec=rules.tp)
+    wk, sk = init_linear(ks[1], d, hkv * dh, dtype, bias=cfg.qkv_bias,
+                         in_spec=rules.fsdp, out_spec=rules.tp)
+    wv, sv = init_linear(ks[2], d, hkv * dh, dtype, bias=cfg.qkv_bias,
+                         in_spec=rules.fsdp, out_spec=rules.tp)
+    wo, so = init_linear(ks[3], h * dh, d, dtype,
+                         in_spec=rules.tp, out_spec=rules.fsdp)
+    return ({"wq": wq, "wk": wk, "wv": wv, "wo": wo},
+            {"wq": sq, "wk": sk, "wv": sv, "wo": so})
+
+
+def _split_heads(x, n_heads, dh):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, dh)
+
+
+def _sdpa(q, k, v, mask):
+    """Grouped-query attention without materializing repeated K/V.
+
+    q: (B, Tq, H, Dh); k/v: (B, Tk, Hkv, Dh) with H % Hkv == 0.  The
+    query heads are reshaped to (Hkv, rep) groups and contracted against
+    the shared K/V heads directly — the old broadcast_in_dim repeat
+    turned into GiB-scale all-gathers of the KV cache under SPMD
+    (EXPERIMENTS.md §Perf, 405b decode).  fp32 softmax accumulation.
+    """
+    b, tq, h, dh = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    if rep == 1:
+        # MHA fast path: flat einsum, no group dim (the extra broadcast
+        # dim measurably inflates HLO bytes ~10% on MHA train cells)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+        scores = scores * (dh ** -0.5)
+        if mask is not None:
+            scores = jnp.where(mask, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    qg = q.reshape(b, tq, hkv, rep, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores * (dh ** -0.5)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(b, tq, h, dh)
+
+
+def attention_full(params, cfg, x, *, causal: bool = True,
+                   positions: Optional[jnp.ndarray] = None):
+    """Train/prefill path over the whole sequence."""
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    q = _split_heads(linear(params["wq"], x), h, dh)
+    k = _split_heads(linear(params["wk"], x), hkv, dh)
+    v = _split_heads(linear(params["wv"], x), hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_seq_shard:
+        # sequence-sharded attention: q rows over tp (heads stay whole);
+        # k/v replicate (small for GQA) — no head-replication gathers.
+        q = constrain_dims(q, {0: "dp", 1: "tp"})
+        k = constrain_dims(k, {0: "dp"})
+        v = constrain_dims(v, {0: "dp"})
+    mask = None
+    if causal:
+        mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
+    out = _sdpa(q, k, v, mask)
+    return linear(params["wo"], out.reshape(b, t, h * dh))
+
+
+def attention_prefill(params, cfg, x):
+    """Full pass that also returns the populated KV cache."""
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    q = _split_heads(linear(params["wq"], x), h, dh)
+    k = _split_heads(linear(params["wk"], x), hkv, dh)
+    v = _split_heads(linear(params["wv"], x), hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.attn_seq_shard:
+        q = constrain_dims(q, {0: "dp", 1: "tp"})
+        k = constrain_dims(k, {0: "dp"})
+        v = constrain_dims(v, {0: "dp"})
+    mask = jnp.tril(jnp.ones((t, t), bool))[None, None]
+    out = _sdpa(q, k, v, mask)
+    return linear(params["wo"], out.reshape(b, t, h * dh)), KVCache(k, v)
+
+
+def attention_decode(params, cfg, x, cache: KVCache, pos: jnp.ndarray):
+    """One-token step.  x: (B, 1, D); cache K/V: (B, S, Hkv, Dh);
+    pos: scalar int32 — the index being written (same for the batch)."""
+    b = x.shape[0]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = cache.k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = _split_heads(linear(params["wq"], x), h, dh)
+    k_new = _split_heads(linear(params["wk"], x), hkv, dh)
+    v_new = _split_heads(linear(params["wv"], x), hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, pos, 0, 0))
+    mask = (jnp.arange(s) <= pos)[None, None, None, :]       # (1,1,1,S)
+    out = _sdpa(q, k, v, mask)
+    return (linear(params["wo"], out.reshape(b, 1, h * dh)),
+            KVCache(k, v))
+
+
+def cross_attention(params, cfg, x, context_kv: KVCache):
+    """Attend from x (B, T, D) to a precomputed context cache (no causal
+    mask, no rope on context — positions come from the frontend stub)."""
+    b, t, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = _split_heads(linear(params["wq"], x), h, dh)
+    out = _sdpa(q, context_kv.k, context_kv.v, None)
+    return linear(params["wo"], out.reshape(b, t, h * dh))
+
+
+def context_kv(params, cfg, ctx):
+    """Precompute K/V of the encoder/vision context (B, Tc, D)."""
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = _split_heads(linear(params["wk"], ctx), hkv, dh)
+    v = _split_heads(linear(params["wv"], ctx), hkv, dh)
+    return KVCache(k, v)
+
+
+def empty_cache(cfg, batch: int, seq: int, dtype=jnp.bfloat16) -> KVCache:
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (batch, seq, hkv, dh)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))

@@ -1,0 +1,334 @@
+"""Layer-kind dispatch + scan-over-repeats stack assembly.
+
+The stack is ``repeats`` copies of a fixed *unit* of layer kinds (see
+``ModelConfig.block_program``).  Per-kind parameters are stacked along a
+leading repeat axis and consumed by ``jax.lax.scan`` — HLO size and
+compile time stay O(unit), not O(num_layers), which is what makes the
+126-layer 405B dry-run compile in minutes on one host.
+
+Caches thread through the same scan as per-repeat xs/ys.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.attention import KVCache
+from repro.models.layers import (AxisRules, constrain_act, init_mlp,
+                                 init_rmsnorm, mlp, rmsnorm)
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_gather
+from repro.models.ssm import SSMCache
+
+PyTree = Any
+
+
+# ------------------------------------------------------------- layer init
+
+def init_layer(key, kind: str, cfg, dtype, rules: AxisRules):
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+
+    def add(name, tree):
+        p[name], s[name] = tree
+
+    if kind.startswith("attn") or kind == "cross_attn":
+        add("norm1", init_rmsnorm(cfg.d_model, dtype))
+        add("attn", attn.init_attention(ks[0], cfg, dtype, rules))
+    if kind.startswith("mamba"):
+        add("norm1", init_rmsnorm(cfg.d_model, dtype))
+        add("mamba", ssm_mod.init_mamba(ks[1], cfg, dtype, rules))
+    if kind == "cross_attn":
+        add("norm_c", init_rmsnorm(cfg.d_model, dtype))
+        add("xattn", attn.init_attention(ks[2], cfg, dtype, rules,
+                                         cross=True))
+        # gate scalar (llama-3.2-vision style tanh gate)
+        p["xgate"] = jnp.zeros((), jnp.float32)
+        s["xgate"] = jax.sharding.PartitionSpec()
+    if kind.endswith("_moe"):
+        add("norm2", init_rmsnorm(cfg.d_model, dtype))
+        add("moe", init_moe(ks[3], cfg, dtype, rules))
+    elif kind in ("attn_dense", "cross_attn", "mamba_dense"):
+        add("norm2", init_rmsnorm(cfg.d_model, dtype))
+        add("mlp", init_mlp(ks[4], cfg.d_model, cfg.d_ff, dtype, rules))
+    return p, s
+
+
+# ------------------------------------------------------------ layer apply
+
+def apply_layer_full(params, kind: str, cfg, x, *, causal: bool,
+                     ctx: Optional[jnp.ndarray]):
+    """Train path: full sequence, no cache.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind.startswith("attn"):
+        x = x + attn.attention_full(params["attn"], cfg,
+                                    rmsnorm(params["norm1"], x, cfg.norm_eps),
+                                    causal=causal)
+    elif kind.startswith("mamba"):
+        x = x + ssm_mod.mamba_forward(params["mamba"], cfg,
+                                      rmsnorm(params["norm1"], x,
+                                              cfg.norm_eps))
+    elif kind == "cross_attn":
+        x = x + attn.attention_full(params["attn"], cfg,
+                                    rmsnorm(params["norm1"], x, cfg.norm_eps),
+                                    causal=causal)
+        ctx_kv = attn.context_kv(params["xattn"], cfg, ctx)
+        gate = jnp.tanh(params["xgate"])
+        x = x + (gate * attn.cross_attention(
+            params["xattn"], cfg, rmsnorm(params["norm_c"], x, cfg.norm_eps),
+            ctx_kv)).astype(x.dtype)
+
+    if "moe" in params:
+        moe = moe_ffn_gather if cfg.moe_impl == "gather" else moe_ffn
+        y, moe_aux = moe(params["moe"], cfg,
+                         rmsnorm(params["norm2"], x, cfg.norm_eps))
+        x = x + y
+        aux = aux + moe_aux["moe_balance"] + moe_aux["router_z"]
+    elif "mlp" in params:
+        x = x + mlp(params["mlp"], rmsnorm(params["norm2"], x, cfg.norm_eps))
+    return x, aux
+
+
+def apply_layer_prefill(params, kind: str, cfg, x, *,
+                        ctx: Optional[jnp.ndarray]):
+    """Prefill: full sequence + return this layer's cache."""
+    cache = None
+    if kind.startswith("attn"):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, cache = attn.attention_prefill(params["attn"], cfg, h)
+        x = x + y
+    elif kind.startswith("mamba"):
+        # run full forward; decode continues from a fresh recurrent state
+        # computed below (prefill for SSM = run and keep the final state).
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        x = x + ssm_mod.mamba_forward(params["mamba"], cfg, h)
+        cache = _ssm_state_after(params["mamba"], cfg, h)
+    elif kind == "cross_attn":
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, cache = attn.attention_prefill(params["attn"], cfg, h)
+        x = x + y
+        ctx_kv = attn.context_kv(params["xattn"], cfg, ctx)
+        gate = jnp.tanh(params["xgate"])
+        x = x + (gate * attn.cross_attention(
+            params["xattn"], cfg, rmsnorm(params["norm_c"], x, cfg.norm_eps),
+            ctx_kv)).astype(x.dtype)
+
+    if "moe" in params:
+        moe = moe_ffn_gather if cfg.moe_impl == "gather" else moe_ffn
+        y, _ = moe(params["moe"], cfg,
+                   rmsnorm(params["norm2"], x, cfg.norm_eps))
+        x = x + y
+    elif "mlp" in params:
+        x = x + mlp(params["mlp"], rmsnorm(params["norm2"], x, cfg.norm_eps))
+    return x, cache
+
+
+def _ssm_state_after(mparams, cfg, h):
+    """Recompute the final SSM recurrent + conv state after a prefill pass
+    (cheap relative to the forward; avoids threading state out of the
+    chunked scan)."""
+    b, t, _ = h.shape
+    kw = cfg.ssm_conv
+    cache = ssm_mod.empty_ssm_cache(cfg, b, h.dtype)
+    # conv buffers: last kw-1 raw projected inputs
+    conv_x = (h @ mparams["wx"])[:, -(kw - 1):, :]
+    conv_b = (h @ mparams["wb"])[:, -(kw - 1):, :]
+    conv_c = (h @ mparams["wc"])[:, -(kw - 1):, :]
+    # final recurrent state: replay the last chunk... for exactness we
+    # run a short scan over the whole sequence state recurrence in
+    # chunked form (reuses mamba_forward internals would be ideal; here
+    # we recompute via decode-style scan over chunks of the sequence).
+    state = _final_state_scan(mparams, cfg, h)
+    return SSMCache(conv_x.astype(cache.conv_x.dtype),
+                    conv_b.astype(cache.conv_b.dtype),
+                    conv_c.astype(cache.conv_c.dtype), state)
+
+
+def _final_state_scan(mparams, cfg, h):
+    """Final SSD state S_T = sum_j exp(sum_{i>j} la_i) dt_j B_j x_j^T,
+    computed chunk-recurrently in O(T) memory."""
+    b, t_true, _ = h.shape
+    hh, nst, p_ = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    q = min(cfg.ssm_chunk, t_true)
+    t = (t_true + q - 1) // q * q
+    if t != t_true:
+        h = jnp.pad(h, ((0, 0), (0, t - t_true), (0, 0)))
+    nc = t // q
+    x = jax.nn.silu(ssm_mod._causal_conv(h @ mparams["wx"],
+                                         mparams["conv_x"]))
+    bm = jax.nn.silu(ssm_mod._causal_conv(h @ mparams["wb"],
+                                          mparams["conv_b"])).astype(jnp.float32)
+    dt = jax.nn.softplus((h @ mparams["wdt"]).astype(jnp.float32)
+                         + mparams["dt_bias"])
+    if t != t_true:
+        dt = dt * (jnp.arange(t) < t_true).astype(jnp.float32)[None, :, None]
+    a = -jnp.exp(mparams["a_log"])
+    la = dt * a
+    xh = x.reshape(b, t, hh, p_).astype(jnp.float32)
+
+    lac = la.reshape(b, nc, q, hh)
+    cum = jnp.cumsum(lac, axis=2)
+    xc = xh.reshape(b, nc, q, hh, p_)
+    bc_ = bm.reshape(b, nc, q, nst)
+    dtc = dt.reshape(b, nc, q, hh)
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtc
+    s_local = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", w_end, bc_, xc)
+
+    def scan_fn(s_prev, inp):
+        cum_c, s_loc = inp
+        s_next = jnp.exp(cum_c[:, -1, :])[:, :, None, None] * s_prev + s_loc
+        return s_next, None
+
+    s0 = jnp.zeros((b, hh, nst, p_), jnp.float32)
+    s_fin, _ = jax.lax.scan(
+        scan_fn, s0,
+        (jnp.moveaxis(cum, 1, 0), jnp.moveaxis(s_local, 1, 0)))
+    return s_fin
+
+
+def apply_layer_decode(params, kind: str, cfg, x, cache, pos,
+                       ctx_kv: Optional[KVCache]):
+    """One-token step. x: (B, 1, D)."""
+    if kind.startswith("attn"):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, cache = attn.attention_decode(params["attn"], cfg, h, cache, pos)
+        x = x + y
+    elif kind.startswith("mamba"):
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, cache = ssm_mod.mamba_decode(params["mamba"], cfg, h, cache)
+        x = x + y
+    elif kind == "cross_attn":
+        h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+        y, cache = attn.attention_decode(params["attn"], cfg, h, cache, pos)
+        x = x + y
+        gate = jnp.tanh(params["xgate"])
+        x = x + (gate * attn.cross_attention(
+            params["xattn"], cfg, rmsnorm(params["norm_c"], x, cfg.norm_eps),
+            ctx_kv)).astype(x.dtype)
+
+    if "moe" in params:
+        moe = moe_ffn_gather if cfg.moe_impl == "gather" else moe_ffn
+        y, _ = moe(params["moe"], cfg,
+                   rmsnorm(params["norm2"], x, cfg.norm_eps),
+                   capacity_factor=float(cfg.num_experts))
+        x = x + y
+    elif "mlp" in params:
+        x = x + mlp(params["mlp"], rmsnorm(params["norm2"], x, cfg.norm_eps))
+    return x, cache
+
+
+# -------------------------------------------------------- stack assembly
+
+def init_stack(key, cfg, dtype, rules: AxisRules, *, unit=None, repeats=None):
+    """Stacked per-kind params: for each position in the unit, leaves get a
+    leading (repeats,) axis via vmap'd init."""
+    if unit is None:
+        unit, repeats = cfg.block_program()
+    params, specs = [], []
+    for pos, kind in enumerate(unit):
+        keys = jax.random.split(jax.random.fold_in(key, pos), repeats)
+        stacked = jax.vmap(
+            lambda k: init_layer(k, kind, cfg, dtype, rules)[0])(keys)
+        _, spec = init_layer(keys[0], kind, cfg, dtype, rules)
+        # prepend the repeat axis (unsharded) to every spec
+        spec = jax.tree.map(
+            lambda s: jax.sharding.PartitionSpec(None, *s),
+            spec,
+            is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+        params.append(stacked)
+        specs.append(spec)
+    return tuple(params), tuple(specs)
+
+
+def stack_full(params_stack, unit, cfg, x, *, causal=True, ctx=None):
+    """Train-path scan over repeats. Returns (x, aux_sum)."""
+
+    def unit_fn(x, unit_params):
+        aux = jnp.zeros((), jnp.float32)
+        x = constrain_act(x)
+        for kind, p in zip(unit, unit_params):
+            x, a = apply_layer_full(p, kind, cfg, x, causal=causal, ctx=ctx)
+            x = constrain_act(x)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            unit_fn = jax.checkpoint(
+                unit_fn,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            unit_fn = jax.checkpoint(unit_fn)
+
+    def scan_fn(carry, unit_params):
+        x, aux = carry
+        x, a = unit_fn(x, unit_params)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_fn, (x, jnp.zeros((), jnp.float32)), params_stack,
+        unroll=cfg.scan_unroll)
+    return x, aux
+
+
+def stack_prefill(params_stack, unit, cfg, x, *, ctx=None):
+    """Prefill scan: returns (x, caches) with per-kind stacked caches."""
+
+    def scan_fn(x, unit_params):
+        caches = []
+        x = constrain_act(x)
+        for kind, p in zip(unit, unit_params):
+            x, c = apply_layer_prefill(p, kind, cfg, x, ctx=ctx)
+            x = constrain_act(x)
+            caches.append(c)
+        return x, tuple(caches)
+
+    x, caches = jax.lax.scan(scan_fn, x, params_stack,
+                             unroll=cfg.scan_unroll)
+    return x, caches
+
+
+def stack_decode(params_stack, unit, cfg, x, caches, pos, *, ctx_kvs=None):
+    """Decode scan: caches are per-unit-position stacked pytrees (xs/ys)."""
+
+    def scan_fn(x, inp):
+        unit_params, unit_caches, unit_ctx = inp
+        new_caches = []
+        x = constrain_act(x)
+        for i, (kind, p) in enumerate(zip(unit, unit_params)):
+            ck = unit_ctx[i] if unit_ctx is not None else None
+            x, c = apply_layer_decode(p, kind, cfg, x, unit_caches[i], pos,
+                                      ck)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    xs = (params_stack, caches,
+          ctx_kvs if ctx_kvs is not None else None)
+    if ctx_kvs is None:
+        def scan_fn2(x, inp):
+            unit_params, unit_caches = inp
+            return scan_fn(x, (unit_params, unit_caches, None))
+        x, new_caches = jax.lax.scan(scan_fn2, x, (params_stack, caches),
+                                     unroll=cfg.scan_unroll)
+    else:
+        x, new_caches = jax.lax.scan(scan_fn, x, xs, unroll=cfg.scan_unroll)
+    return x, new_caches
+
+
+def make_caches(cfg, unit, repeats, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Empty stacked caches matching stack_decode's expected structure."""
+    caches = []
+    for kind in unit:
+        if kind.startswith("attn") or kind == "cross_attn":
+            c = attn.empty_cache(cfg, batch, seq, dtype)
+        elif kind.startswith("mamba"):
+            c = ssm_mod.empty_ssm_cache(cfg, batch, dtype)
+        else:
+            c = None
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (repeats,) + a.shape), c))
+    return tuple(caches)

@@ -1,0 +1,221 @@
+"""Functional building blocks (no flax in this env — params are pytrees).
+
+Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
+params pytree with ``jax.sharding.PartitionSpec`` leaves.  Sharding
+rules (DESIGN.md §7):
+
+  * tensor-parallel dims (heads, ffn hidden, experts, vocab) -> "model"
+  * one remaining large dim per weight -> FSDP axis ("data", and
+    ("pod","data") on the multi-pod mesh) — ZeRO-3 style
+  * small vectors (norm scales, biases) -> replicated
+
+The FSDP/TP axis names are injected via ``AxisRules`` so the same model
+code serves the single-pod (data, model) and multi-pod (pod, data,
+model) meshes and any future topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    fsdp: Any = "data"           # axis (or tuple of axes) for param FSDP
+    tp: Any = "model"            # axis for tensor parallelism
+    dp: Any = ("data",)          # axes over which the batch is sharded
+    sp: Any = None               # sequence-parallel axis for long-context KV
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints.  SPMD propagation alone loses the batch
+# sharding at the embedding gather (the table is (vocab->tp, d->fsdp)
+# sharded, and XLA resolves the conflict by replicating the batch), which
+# silently turns the whole model batch-replicated.  The launcher installs
+# (mesh, dp axes) here; model code calls ``constrain_act`` at layer
+# boundaries.  Outside a launcher context (unit tests, single-device) it
+# is a no-op.
+# --------------------------------------------------------------------------
+import contextlib
+import contextvars
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(mesh, dp_axes, tp_axis="model", sp_axis=None,
+                            dshard_axis=None, moe_shard=False):
+    """dshard_axis: shard the hidden (last) dim of activations over this
+    axis — '2-D weight-stationary' serving mode where tiny activations
+    reshard instead of all-gathering FSDP weight shards every layer.
+    moe_shard: constrain MoE dispatch intermediates (experts->tp)."""
+    tok = _ACT_CTX.set({"mesh": mesh, "dp": dp_axes, "tp": tp_axis,
+                        "sp": sp_axis, "dshard": dshard_axis,
+                        "moe_shard": moe_shard})
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(tok)
+
+
+def constrain_act(x, *, vocab_dim: bool = False, seq_dim: bool = False):
+    """Pin (B, T, ...) activations to batch-over-dp (+ optional vocab->tp
+    on the last dim, seq->sp on dim 1, hidden->dshard in weight-
+    stationary serving mode)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x.ndim < 2:
+        return x
+    mesh, dp = ctx["mesh"], ctx["dp"]
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+    spec = [None] * x.ndim
+    if x.shape[0] % dp_size == 0:
+        spec[0] = dp
+    if seq_dim and ctx["sp"] and x.shape[1] % mesh.shape[ctx["sp"]] == 0:
+        spec[1] = ctx["sp"]
+    if vocab_dim and x.shape[-1] % mesh.shape[ctx["tp"]] == 0:
+        spec[-1] = ctx["tp"]
+    elif (not vocab_dim and ctx.get("dshard")
+          and x.shape[-1] % mesh.shape[ctx["dshard"]] == 0):
+        # weight-stationary: hidden dim takes the dshard axis; the batch
+        # dim must release it (decode batches are tiny — replication is
+        # the point: activations move, weights stay put)
+        spec[-1] = ctx["dshard"]
+        used = ctx["dshard"]
+        if spec[0] is not None:
+            kept = tuple(a for a in (spec[0] if isinstance(spec[0], tuple)
+                                     else (spec[0],)) if a != used)
+            size = 1
+            for a in kept:
+                size *= mesh.shape[a]
+            spec[0] = kept if kept and x.shape[0] % size == 0 else None
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec)))
+
+
+def constrain_dims(t, dims: dict, *, gate: str | None = None):
+    """Constrain arbitrary tensor dims to mesh axes when a launcher
+    context is active.  ``dims`` maps axis-index -> 'dp'|'tp'; ``gate``
+    names a context flag that must be truthy (None = always on)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or (gate is not None and not ctx.get(gate)):
+        return t
+    mesh = ctx["mesh"]
+    spec = [None] * t.ndim
+    for i, role in dims.items():
+        axes = ctx["dp"] if role == "dp" else ctx["tp"]
+        size = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            size *= mesh.shape[a]
+        if t.shape[i] % size == 0:
+            spec[i] = axes
+    return jax.lax.with_sharding_constraint(
+        t, jax.sharding.NamedSharding(mesh, P(*spec)))
+
+
+def constrain_moe(t, dims: dict):
+    """MoE dispatch intermediates (experts->tp, groups->dp).  Always on
+    under a launcher context: without the expert pin the gather dispatch
+    lets SPMD replicate the (G,E,C,D) tensors — measured 15x collective
+    regression on granite (EXPERIMENTS.md §Perf)."""
+    return constrain_dims(t, dims)
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+# ------------------------------------------------------------------ linear
+
+def init_linear(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+                in_spec=None, out_spec=None, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    params = {"w": w.astype(dtype)}
+    specs = {"w": P(in_spec, out_spec)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+        specs["b"] = P(out_spec)
+    return params, specs
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------- embedding
+
+def init_embedding(key, vocab: int, d: int, dtype, rules: AxisRules):
+    e = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return {"table": e.astype(dtype)}, {"table": P(rules.tp, rules.fsdp)}
+
+
+def embed(params, tokens):
+    # gather rows; tokens (B, T) -> (B, T, D)
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    # (B, T, D) @ (D, V) -> logits (B, T, V); fp32 for a stable softmax.
+    return jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))
+
+
+# -------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, T, H, Dh); positions: (B, T) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ swiglu
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, rules: AxisRules):
+    k1, k2, k3 = jax.random.split(key, 3)
+    wi, si = init_linear(k1, d_model, d_ff, dtype,
+                         in_spec=rules.fsdp, out_spec=rules.tp)
+    wg, sg = init_linear(k2, d_model, d_ff, dtype,
+                         in_spec=rules.fsdp, out_spec=rules.tp)
+    wo, so = init_linear(k3, d_ff, d_model, dtype,
+                         in_spec=rules.tp, out_spec=rules.fsdp)
+    return ({"wi": wi, "wg": wg, "wo": wo},
+            {"wi": si, "wg": sg, "wo": so})
+
+
+def mlp(params, x):
+    h = jax.nn.silu(linear(params["wg"], x)) * linear(params["wi"], x)
+    return linear(params["wo"], h)

@@ -1,0 +1,218 @@
+"""End-to-end language model: embed -> (encoder ->) block stack -> head.
+
+Covers all assigned families:
+  dense / moe / ssm / hybrid    : decoder-only LM
+  vlm                           : decoder LM + cross-attn to stub patch
+                                  embeddings (frontend is a stub per the
+                                  assignment — ``input_specs`` provides
+                                  precomputed embeddings)
+  audio                         : Whisper-style enc-dec; conv frontend
+                                  stubbed the same way (precomputed
+                                  frames at d_model)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import blocks
+from repro.models.attention import KVCache, context_kv
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    AxisRules,
+    _dtype,
+    constrain_act,
+    embed,
+    init_embedding,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    rmsnorm,
+    unembed,
+)
+
+PyTree = Any
+
+
+class LMOutputs(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+
+
+# ------------------------------------------------------------------- init
+
+def init_model(key, cfg: ModelConfig, rules: AxisRules | None = None):
+    rules = rules or AxisRules()
+    dtype = _dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    unit, repeats = cfg.block_program()
+
+    params, specs = {}, {}
+    params["embed"], specs["embed"] = init_embedding(
+        ks[0], cfg.padded_vocab, cfg.d_model, dtype, rules)
+    if cfg.embed_shard == "hidden":
+        # local lookup (vocab replicated), hidden dim over tp: avoids the
+        # per-forward (B,S,D) psum of a vocab-sharded table (§Perf)
+        specs["embed"] = {"table": P(None, rules.tp)}
+    params["blocks"], specs["blocks"] = blocks.init_stack(
+        ks[1], cfg, dtype, rules, unit=unit, repeats=repeats)
+    params["final_norm"], specs["final_norm"] = init_rmsnorm(
+        cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = init_linear(
+            ks[2], cfg.d_model, cfg.padded_vocab, dtype,
+            in_spec=rules.fsdp, out_spec=rules.tp)
+
+    if cfg.family == "vlm":
+        params["vision_proj"], specs["vision_proj"] = init_linear(
+            ks[3], cfg.vision_d, cfg.d_model, dtype,
+            in_spec=None, out_spec=rules.fsdp)
+    if cfg.is_encdec:
+        enc_unit = ("attn_dense",)
+        params["encoder"], specs["encoder"] = blocks.init_stack(
+            ks[4], cfg, dtype, rules, unit=enc_unit,
+            repeats=cfg.encoder_layers)
+        params["enc_norm"], specs["enc_norm"] = init_rmsnorm(
+            cfg.d_model, dtype)
+    return params, specs
+
+
+# ------------------------------------------------------------ context enc
+
+def _encode_context(params, cfg, context):
+    """Project / encode the modality context into (B, Tc, D)."""
+    if context is None:
+        return None
+    if cfg.family == "vlm":
+        return linear(params["vision_proj"], context)
+    if cfg.is_encdec:
+        # context: precomputed conv-frontend frames at d_model (stub)
+        x, _ = blocks.stack_full(params["encoder"], ("attn_dense",), cfg,
+                                 context, causal=False, ctx=None)
+        return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+    return context
+
+
+def _head(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x.astype(jnp.float32)
+                        ).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask vocab-padding columns so softmax/argmax never see them
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return constrain_act(logits, vocab_dim=True)
+
+
+# ---------------------------------------------------------------- forward
+
+def forward(params, cfg: ModelConfig, tokens, context=None) -> LMOutputs:
+    """Training forward. tokens: (B, T) int32; context: stub embeddings."""
+    unit, _ = cfg.block_program()
+    ctx = _encode_context(params, cfg, context)
+    x = constrain_act(embed(params["embed"], tokens))
+    x, aux = blocks.stack_full(params["blocks"], unit, cfg, x,
+                               causal=True, ctx=ctx)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return LMOutputs(_head(params, cfg, x), aux)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross entropy (fp32 logsumexp) + MoE aux losses."""
+    out = forward(params, cfg, batch["tokens"], batch.get("context"))
+    logits = out.logits                                   # (B, T, V) fp32
+    labels = batch["labels"]                              # (B, T)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll).mean()
+    total = nll + out.aux_loss
+    return total, {"nll": nll, "aux": out.aux_loss,
+                   "ppl": jnp.exp(jnp.minimum(nll, 20.0))}
+
+
+def prefill(params, cfg: ModelConfig, tokens, context=None):
+    """Returns (last-position logits, caches) for subsequent decode."""
+    unit, _ = cfg.block_program()
+    ctx = _encode_context(params, cfg, context)
+    x = constrain_act(embed(params["embed"], tokens))
+    x, caches = blocks.stack_prefill(params["blocks"], unit, cfg, x, ctx=ctx)
+    x = rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+    return _head(params, cfg, x), caches
+
+
+def precompute_ctx_kvs(params, cfg: ModelConfig, context):
+    """Per-cross-layer context K/V, computed once per request (prefill
+    time) so decode steps never re-encode the modality context."""
+    unit, _ = cfg.block_program()
+    ctx = _encode_context(params, cfg, context)
+    if ctx is None or not any(k == "cross_attn" for k in unit):
+        return None
+    ctx_kvs = []
+    for i, kind in enumerate(unit):
+        if kind == "cross_attn":
+            xp = params["blocks"][i]["xattn"]
+            ck = jax.vmap(lambda w: context_kv(w, cfg, ctx))(xp)
+        else:
+            ck = None
+        ctx_kvs.append(ck)
+    return tuple(ctx_kvs)
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos, context=None,
+                ctx_kvs=None):
+    """One decode step. token: (B, 1) int32; pos: scalar int32 (position
+    being written).  Returns (logits (B, 1, V), new caches).  Pass
+    ``ctx_kvs`` (from ``precompute_ctx_kvs``) to avoid re-encoding the
+    modality context every step."""
+    unit, _ = cfg.block_program()
+    if ctx_kvs is None:
+        ctx_kvs = precompute_ctx_kvs(params, cfg, context)
+    x = constrain_act(embed(params["embed"], token))
+    x, caches = blocks.stack_decode(params["blocks"], unit, cfg, x, caches,
+                                    pos, ctx_kvs=ctx_kvs)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(params, cfg, x), caches
+
+
+def make_caches(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    unit, repeats = cfg.block_program()
+    return blocks.make_caches(cfg, unit, repeats, batch, seq, dtype)
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test twin: same family/block pattern, tiny dims."""
+    unit, _ = cfg.block_program()
+    small = dict(
+        num_layers=2 * len(unit) if len(unit) <= 8 else len(unit),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) or 2,
+        d_ff=128,
+        vocab_size=256,
+        head_dim=16,
+        moe_d_ff=32 if cfg.moe_d_ff else 0,
+        num_experts=min(cfg.num_experts, 4),
+        num_experts_per_tok=min(cfg.num_experts_per_tok, 2),
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=16 if cfg.ssm_state else 64,
+        ssm_chunk=8,
+        vision_tokens=16 if cfg.vision_tokens else 0,
+        vision_d=32 if cfg.vision_d else 0,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        audio_frames=16 if cfg.audio_frames else 0,
+        param_dtype="float32",
+        moment_dtype="float32",
+        remat=False,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

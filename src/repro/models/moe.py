@@ -1,0 +1,218 @@
+"""Token-choice Mixture-of-Experts with capacity-based einsum dispatch
+(Shazeer-style dense dispatch/combine tensors — the XLA-SPMD-friendly
+formulation: experts shard over the TP axis (EP), dispatch becomes an
+all-to-all emitted by the partitioner).
+
+Top-k selection is built from k iterated argmax+one-hot rounds instead
+of ``jax.lax.top_k`` so no gather appears on the autodiff path (this
+jaxlib build has a broken batched-gather gradient, see core/softsort).
+Gradients flow through the ``probs * one_hot`` products, which is the
+standard straight-through router formulation anyway.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import AxisRules, constrain_moe
+
+
+def init_moe(key, cfg, dtype, rules: AxisRules):
+    d = cfg.d_model
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 4)
+    router = jax.random.normal(ks[0], (d, e), jnp.float32) * d ** -0.5
+    wi = jax.random.normal(ks[1], (e, d, f), jnp.float32) * d ** -0.5
+    wg = jax.random.normal(ks[2], (e, d, f), jnp.float32) * d ** -0.5
+    wo = jax.random.normal(ks[3], (e, f, d), jnp.float32) * f ** -0.5
+    params = {"router": router.astype(dtype), "wi": wi.astype(dtype),
+              "wg": wg.astype(dtype), "wo": wo.astype(dtype)}
+    # router is tiny (D x E): replicate it — a D-sharded router forces an
+    # all-to-all of the (G,S,D) tokens to D-sharded layout per MoE layer
+    # (measured: 15x collective regression on granite, EXPERIMENTS §Perf)
+    specs = {"router": P(None, None),
+             "wi": P(rules.tp, rules.fsdp, None),
+             "wg": P(rules.tp, rules.fsdp, None),
+             "wo": P(rules.tp, None, rules.fsdp)}
+    return params, specs
+
+
+def _topk_onehot(probs: jnp.ndarray, k: int):
+    """probs: (T, E) -> (T, E) combined gate weights using k argmax rounds
+    (gather-free).  Returns (gates, selected_mask)."""
+    t, e = probs.shape
+    remaining = probs
+    gates = jnp.zeros_like(probs)
+    sel = jnp.zeros_like(probs, dtype=bool)
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (T,)
+        hot = jax.nn.one_hot(idx, e, dtype=probs.dtype)          # (T, E)
+        gates = gates + probs * hot
+        sel = sel | hot.astype(bool)
+        remaining = remaining * (1.0 - hot) - hot                # mask out
+    return gates, sel
+
+
+def _topk_idx_gates(probs: jnp.ndarray, k: int):
+    """k argmax rounds returning (expert_idx (N,k) int32, gate (N,k))."""
+    remaining = probs
+    idxs, gs = [], []
+    for _ in range(k):
+        idx = jnp.argmax(remaining, axis=-1)                 # (N,)
+        hot = jax.nn.one_hot(idx, probs.shape[-1], dtype=probs.dtype)
+        gs.append(jnp.sum(probs * hot, axis=-1))
+        idxs.append(idx)
+        remaining = remaining * (1.0 - hot) - hot
+    return (jnp.stack(idxs, -1).astype(jnp.int32), jnp.stack(gs, -1))
+
+
+def moe_ffn_gather(params, cfg, x, *, capacity_factor: float | None = None):
+    """Sparse (gather/scatter) dispatch — §Perf variant.
+
+    Instead of the O(S*E*C) one-hot dispatch/combine tensors this builds
+    an explicit slot table idx (G, E, C) -> token and moves rows with
+    gathers: memory O(E*C*D) and zero dispatch-einsum FLOPs.  Discrete
+    indices are stop-gradient; gradients flow through the gathered values
+    and the router gates (straight-through, same estimator as the
+    einsum form).  With experts pinned to the TP axis the combine gather
+    is the layer's only cross-shard move (all-to-all equivalent).
+    """
+    from repro.models.layers import constrain_moe
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cf = capacity_factor or cfg.capacity_factor
+    n = b * t
+    s = min(cfg.moe_group_size, n)
+    if n % s:
+        s = n
+    g = n // s
+    tokens = x.reshape(g, s, d)
+    cap = max(int(s * k * cf / e), 1)
+
+    logits = jnp.einsum("gsd,de->gse", tokens,
+                        params["router"].astype(tokens.dtype)
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    eidx, gates = _topk_idx_gates(probs.reshape(n, e), k)     # (N,k) x2
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    eidx = eidx.reshape(g, s, k)
+    gates = gates.reshape(g, s, k).astype(tokens.dtype)
+
+    # slot of each (token, choice) inside its expert's queue, per group
+    sel = jax.nn.one_hot(eidx, e, dtype=jnp.int32)            # (G,S,k,E)
+    pos = jnp.cumsum(sel.reshape(g, s * k, e), axis=1
+                     ).reshape(g, s, k, e) - 1
+    slot = jnp.take_along_axis(pos, eidx[..., None],
+                               axis=-1)[..., 0]               # (G,S,k)
+    keep = slot < cap
+    slot_c = jnp.where(keep, slot, cap)                       # cap = drop bin
+
+    # idx[g, e, c] = source token s (or S = sentinel row of zeros)
+    gg = jnp.broadcast_to(jnp.arange(g)[:, None, None], (g, s, k))
+    ss = jnp.broadcast_to(jnp.arange(s)[None, :, None], (g, s, k))
+    idx = jnp.full((g, e, cap + 1), s, jnp.int32)
+    idx = idx.at[gg, eidx, slot_c].set(ss, mode="drop")[:, :, :cap]
+    idx = jax.lax.stop_gradient(idx)
+
+    tok_pad = jnp.concatenate(
+        [tokens, jnp.zeros((g, 1, d), tokens.dtype)], axis=1)  # (G,S+1,D)
+    xe = jnp.take_along_axis(
+        tok_pad, idx.reshape(g, e * cap)[..., None], axis=1
+    ).reshape(g, e, cap, d)
+    xe = constrain_moe(xe, {0: "dp", 1: "tp"})
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])        # (G,E,C,D)
+    ye = constrain_moe(ye, {0: "dp", 1: "tp"})
+
+    # combine: token (g,s) reads its k slots back
+    ye_flat = jnp.concatenate(
+        [ye.reshape(g, e * cap, d),
+         jnp.zeros((g, 1, d), ye.dtype)], axis=1)             # drop bin
+    flat_idx = jnp.where(keep, eidx * cap + slot_c, e * cap)  # (G,S,k)
+    flat_idx = jax.lax.stop_gradient(flat_idx)
+    yk = jnp.take_along_axis(ye_flat,
+                             flat_idx.reshape(g, s * k)[..., None],
+                             axis=1).reshape(g, s, k, d)
+    y = jnp.einsum("gskd,gsk->gsd", yk, gates).astype(x.dtype)
+
+    probs_flat = probs.reshape(n, e)
+    me = probs_flat.mean(axis=0)
+    sel_f = sel.sum(2).reshape(n, e).astype(jnp.float32)
+    ce = sel_f.mean(axis=0) * e / k
+    aux = {
+        "moe_balance": jnp.sum(me * ce) * cfg.aux_loss_weight * e,
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+                    * cfg.router_z_weight,
+    }
+    return y.reshape(b, t, d), aux
+
+
+def moe_ffn(params, cfg, x, *, capacity_factor: float | None = None):
+    """x: (B, T, D) -> (B, T, D), plus aux losses dict.
+
+    Grouped dense dispatch: tokens are split into groups of
+    ``cfg.moe_group_size``; within each group a token gets a per-expert
+    capacity slot by cumulative sum, over-capacity tokens drop to the
+    residual (standard capacity semantics).  Grouping keeps the one-hot
+    dispatch/combine einsums at O(S*E*C*D) per group — without it the
+    dispatch tensor contraction dominates total FLOPs for small-expert
+    configs like granite (d_ff=512, top-8 of 40).
+    """
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cf = capacity_factor or cfg.capacity_factor
+    n = b * t
+    s = min(cfg.moe_group_size, n)
+    if n % s:
+        # fall back to one group (decode / odd shapes)
+        s = n
+    g = n // s
+    tokens = x.reshape(g, s, d)
+    cap = max(int(s * k * cf / e), 1)
+
+    # router matmul in token dtype (a fp32 cast of the full-seq tokens
+    # derails SPMD into fp32 all-to-alls — see EXPERIMENTS.md §Perf);
+    # logits upcast AFTER the contraction, softmax still fp32.
+    logits = jnp.einsum("gsd,de->gse", tokens,
+                        params["router"].astype(tokens.dtype)
+                        ).astype(jnp.float32)                     # (G, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, sel = _topk_onehot(probs.reshape(n, e), k)              # (N, E)
+    gates = gates / (gates.sum(-1, keepdims=True) + 1e-9)
+    gates = gates.reshape(g, s, e)
+    sel = sel.reshape(g, s, e)
+
+    # capacity slot per (token, expert): rank within the group's queue
+    pos_in_expert = jnp.cumsum(sel.astype(jnp.int32), axis=1) - 1  # (G, S, E)
+    keep = sel & (pos_in_expert < cap)
+    dispatch = jax.nn.one_hot(jnp.where(keep, pos_in_expert, cap),
+                              cap + 1, dtype=tokens.dtype)[..., :cap]
+    combine = dispatch * gates[..., None].astype(tokens.dtype)     # (G,S,E,C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, tokens)            # (G,E,C,D)
+    # EP: pin experts to the TP axis, groups to DP, so the partitioner
+    # emits an all-to-all instead of replicating the dispatch tensors
+    # (active only under the launcher's moe_shard context).
+    xe = constrain_moe(xe, {0: "dp", 1: "tp"})
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    h = constrain_moe(h, {0: "dp", 1: "tp"})
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])             # (G,E,C,D)
+    ye = constrain_moe(ye, {0: "dp", 1: "tp"})
+    y = jnp.einsum("gsec,gecd->gsd", combine,
+                   ye.astype(tokens.dtype)).astype(x.dtype)
+
+    # aux losses: load-balance (Switch) + router z-loss
+    probs_flat = probs.reshape(n, e)
+    me = probs_flat.mean(axis=0)                                   # (E,)
+    ce = sel.reshape(n, e).astype(jnp.float32).mean(axis=0) * e / k
+    aux = {
+        "moe_balance": jnp.sum(me * ce) * cfg.aux_loss_weight * e,
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+                    * cfg.router_z_weight,
+    }
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,215 @@
+"""Mamba2 / SSD (state-space duality) block — TPU-adapted.
+
+The SSD algorithm (Dao & Gu, 2024) is implemented in its *chunked
+matmul* form: the sequence is split into chunks of Q tokens; intra-chunk
+terms are dense (Q, Q) masked matmuls (MXU-friendly — this is the TPU
+adaptation: the CUDA kernel's warp-level scan becomes a batched matmul +
+a short ``lax.scan`` over chunk boundaries), and inter-chunk terms pass
+one (H, N, P) state through an associative recurrence.
+
+Projections are kept separate (z / x / B / C / dt) instead of one packed
+matmul so tensor-parallel sharding boundaries align with semantic dims.
+Depthwise causal convs act per channel, so splitting is exact.
+
+Decode is O(1): one state update per token, no KV cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import AxisRules, init_rmsnorm, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    conv_x: jnp.ndarray   # (B, K-1, Din)
+    conv_b: jnp.ndarray   # (B, K-1, N)
+    conv_c: jnp.ndarray   # (B, K-1, N)
+    state: jnp.ndarray    # (B, H, N, P)
+
+
+def init_mamba(key, cfg, dtype, rules: AxisRules):
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    nst = cfg.ssm_state
+    h = cfg.ssm_heads
+    kw = cfg.ssm_conv
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+
+    def lin(k, di, do):
+        return (jax.random.normal(k, (di, do), jnp.float32) * di ** -0.5
+                ).astype(dtype)
+
+    params = {
+        "wz": lin(ks[0], d, din),
+        "wx": lin(ks[1], d, din),
+        "wb": lin(ks[2], d, nst),
+        "wc": lin(ks[3], d, nst),
+        "wdt": lin(ks[4], d, h),
+        "conv_x": (jax.random.normal(ks[5], (kw, din), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_b": (jax.random.normal(ks[6], (kw, nst), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "conv_c": (jax.random.normal(ks[7], (kw, nst), jnp.float32) * 0.1
+                   ).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[8], (h,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(0.1))))),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "wo": lin(ks[9], din, d),
+    }
+    norm_p, norm_s = init_rmsnorm(din, dtype)
+    params["norm"] = norm_p
+    specs = {
+        "wz": P(rules.fsdp, rules.tp),
+        "wx": P(rules.fsdp, rules.tp),
+        "wb": P(rules.fsdp, None),
+        "wc": P(rules.fsdp, None),
+        "wdt": P(rules.fsdp, rules.tp),
+        "conv_x": P(None, rules.tp),
+        "conv_b": P(None, None),
+        "conv_c": P(None, None),
+        "a_log": P(rules.tp),
+        "dt_bias": P(rules.tp),
+        "d_skip": P(rules.tp),
+        "wo": P(rules.tp, rules.fsdp),
+        "norm": norm_s,
+    }
+    return params, specs
+
+
+def _causal_conv(x, kernel):
+    """x: (B, T, C); kernel: (K, C) depthwise causal conv."""
+    k = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed dot: sum_k xp[:, t+k, c] * kernel[k, c]
+    return sum(xp[:, i:i + x.shape[1], :] * kernel[i][None, None, :]
+               for i in range(k))
+
+
+def _conv_step(buf, x_t, kernel):
+    """buf: (B, K-1, C) previous inputs; x_t: (B, C). Returns (y_t, buf')."""
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, kernel)
+    return y, window[:, 1:, :]
+
+
+def mamba_forward(params, cfg, xin):
+    """Training/prefill pass. xin: (B, T, D) -> (B, T, D).
+
+    T is padded internally to a chunk multiple; padded steps get dt = 0,
+    i.e. an identity state transition and zero state injection, so they
+    are exact no-ops (outputs sliced back to T)."""
+    b, t_true, _ = xin.shape
+    q = min(cfg.ssm_chunk, t_true) if t_true % min(cfg.ssm_chunk, t_true) == 0 \
+        else cfg.ssm_chunk
+    q = min(q, cfg.ssm_chunk)
+    t = (t_true + q - 1) // q * q
+    if t != t_true:
+        xin = jnp.pad(xin, ((0, 0), (0, t - t_true), (0, 0)))
+    h, nst, p_ = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    nc = t // q
+
+    z = xin @ params["wz"]                                      # (B,T,Din)
+    x = jax.nn.silu(_causal_conv(xin @ params["wx"], params["conv_x"]))
+    bmat = jax.nn.silu(_causal_conv(xin @ params["wb"], params["conv_b"]))
+    cmat = jax.nn.silu(_causal_conv(xin @ params["wc"], params["conv_c"]))
+    dt = jax.nn.softplus((xin @ params["wdt"]).astype(jnp.float32)
+                         + params["dt_bias"])                   # (B,T,H)
+    if t != t_true:
+        step_valid = (jnp.arange(t) < t_true).astype(jnp.float32)
+        dt = dt * step_valid[None, :, None]
+
+    a = -jnp.exp(params["a_log"])                               # (H,) < 0
+    la = dt * a                                                 # (B,T,H) <= 0
+    xh = x.reshape(b, t, h, p_).astype(jnp.float32)
+    bm = bmat.astype(jnp.float32)
+    cm = cmat.astype(jnp.float32)
+
+    # chunk
+    lac = la.reshape(b, nc, q, h)
+    cum = jnp.cumsum(lac, axis=2)                               # (B,Nc,Q,H)
+    xc = xh.reshape(b, nc, q, h, p_)
+    bc_ = bm.reshape(b, nc, q, nst)
+    cc = cm.reshape(b, nc, q, nst)
+    dtc = dt.reshape(b, nc, q, h)
+
+    # ---- intra-chunk (dense, MXU): M[h,i,j] = (C_i.B_j) e^{L_i-L_j} dt_j
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc_)                 # (B,Nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # i,j,(H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    m = m * cb[..., None] * dtc[:, :, None, :, :]               # (B,Nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc)
+
+    # ---- chunk-local end states: S_c = sum_j e^{L_Q - L_j} dt_j B_j x_j^T
+    w_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtc              # (B,Nc,Q,H)
+    s_local = jnp.einsum("bcqh,bcqn,bcqhp->bchnp", w_end, bc_, xc)
+
+    # ---- inter-chunk recurrence over Nc (short scan)
+    def scan_fn(s_prev, inp):
+        cum_c, c_c, s_loc = inp                 # (B,Q,H), (B,Q,N), (B,H,N,P)
+        # y_inter[i] = e^{L_i} * C_i . S_prev
+        y_int = (jnp.einsum("bqn,bhnp->bqhp", c_c, s_prev)
+                 * jnp.exp(cum_c)[..., None])
+        s_next = jnp.exp(cum_c[:, -1, :])[:, :, None, None] * s_prev + s_loc
+        return s_next, y_int
+
+    s0 = jnp.zeros((b, h, nst, p_), jnp.float32)
+    cum_s = jnp.moveaxis(cum, 1, 0)                             # (Nc,B,Q,H)
+    cc_s = jnp.moveaxis(cc, 1, 0)                               # (Nc,B,Q,N)
+    sl_s = jnp.moveaxis(s_local, 1, 0)                          # (Nc,B,H,N,P)
+    _, y_inter = jax.lax.scan(scan_fn, s0, (cum_s, cc_s, sl_s))
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                       # (B,Nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(b, t, h, p_)
+    y = y + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, t, h * p_).astype(xin.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["wo"]
+    return out[:, :t_true, :]
+
+
+def mamba_decode(params, cfg, xin, cache: SSMCache):
+    """One-token step. xin: (B, 1, D)."""
+    b = xin.shape[0]
+    h, nst, p_ = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    xt = xin[:, 0, :]
+
+    z = xt @ params["wz"]
+    xr, conv_x = _conv_step(cache.conv_x, xt @ params["wx"], params["conv_x"])
+    br, conv_b = _conv_step(cache.conv_b, xt @ params["wb"], params["conv_b"])
+    cr, conv_c = _conv_step(cache.conv_c, xt @ params["wc"], params["conv_c"])
+    x = jax.nn.silu(xr)
+    bm = jax.nn.silu(br).astype(jnp.float32)                    # (B,N)
+    cm = jax.nn.silu(cr).astype(jnp.float32)
+    dt = jax.nn.softplus((xt @ params["wdt"]).astype(jnp.float32)
+                         + params["dt_bias"])                   # (B,H)
+
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                                     # (B,H)
+    xh = x.reshape(b, h, p_).astype(jnp.float32)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, bm, xh)
+    state = decay[:, :, None, None] * cache.state + upd
+    y = jnp.einsum("bn,bhnp->bhp", cm, state)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(b, h * p_).astype(xin.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["wo"])[:, None, :]
+    return out, SSMCache(conv_x, conv_b, conv_c, state)
+
+
+def empty_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16) -> SSMCache:
+    kw = cfg.ssm_conv
+    return SSMCache(
+        conv_x=jnp.zeros((batch, kw - 1, cfg.ssm_d_inner), dtype),
+        conv_b=jnp.zeros((batch, kw - 1, cfg.ssm_state), dtype),
+        conv_c=jnp.zeros((batch, kw - 1, cfg.ssm_state), dtype),
+        state=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                         cfg.ssm_head_dim), jnp.float32),
+    )

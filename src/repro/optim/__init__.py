@@ -1,0 +1,12 @@
+from repro.optim.adam import (  # noqa: F401
+    AdamState,
+    adam_init,
+    adam_update,
+    Optimizer,
+    adam,
+    adamw,
+    sgd,
+    clip_by_global_norm,
+    cosine_schedule,
+    linear_warmup_cosine,
+)

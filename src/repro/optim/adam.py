@@ -1,0 +1,149 @@
+"""Optimizers built from scratch (optax is not available in this env).
+
+Pytree-generic Adam/AdamW/SGD with global-norm clipping and LR schedules.
+Used by the permutation-learning core and the LM training substrate.
+
+The state is a pytree of the same structure as the params, so it shards
+with the same NamedSharding rules as the parameters (ZeRO-style: the
+moments live wherever the param shard lives).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: PyTree         # first moment
+    nu: PyTree         # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A minimal (init, update) pair; update returns (new_params, new_state)."""
+
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree], tuple[PyTree, Any]]
+
+
+def _tree_zeros_like(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def adam_init(params: PyTree, moment_dtype=jnp.float32) -> AdamState:
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=_tree_zeros_like(params, moment_dtype),
+        nu=_tree_zeros_like(params, moment_dtype),
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adam_update(
+    grads: PyTree,
+    state: AdamState,
+    params: PyTree,
+    *,
+    lr: float | jnp.ndarray | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[PyTree, AdamState]:
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    class _Upd:
+        """Plain holder (NOT a pytree) so arbitrary param-tree container
+        types (tuples of block stacks etc.) survive the tree.map."""
+        __slots__ = ("p", "m", "v")
+
+        def __init__(self, p, m, v):
+            self.p, self.m, self.v = p, m, v
+
+    def upd(p, g, m, v):
+        gf = g.astype(m.dtype)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(m.dtype)
+        return _Upd(p - (lr_t * delta).astype(p.dtype), m2, v2)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    is_upd = lambda t: isinstance(t, _Upd)  # noqa: E731
+    new_params = jax.tree.map(lambda t: t.p, out, is_leaf=is_upd)
+    new_mu = jax.tree.map(lambda t: t.m, out, is_leaf=is_upd)
+    new_nu = jax.tree.map(lambda t: t.v, out, is_leaf=is_upd)
+    return new_params, AdamState(step=step, mu=new_mu, nu=new_nu)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return Optimizer(
+        init=adam_init,
+        update=lambda g, s, p: adam_update(g, s, p, lr=lr, b1=b1, b2=b2, eps=eps),
+    )
+
+
+def adamw(lr, weight_decay: float = 0.01, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8) -> Optimizer:
+    return Optimizer(
+        init=adam_init,
+        update=lambda g, s, p: adam_update(
+            g, s, p, lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay),
+    )
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return _tree_zeros_like(params) if momentum else None
+
+    def update(grads, state, params):
+        if momentum:
+            new_state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+            vel = new_state
+        else:
+            new_state, vel = None, grads
+        lr_t = jnp.asarray(lr, jnp.float32)
+        new_params = jax.tree.map(lambda p, v: p - (lr_t * v).astype(p.dtype), params, vel)
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32) / total_steps, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1.0 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        return jnp.where(step <= warmup, warm, cos(step - warmup))
+    return fn

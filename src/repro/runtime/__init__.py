@@ -1,0 +1,8 @@
+from repro.runtime.checkpoint import CheckpointManager  # noqa: F401
+from repro.runtime.fault_tolerance import TrainSupervisor  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.compression import (  # noqa: F401
+    CompressionState,
+    compress_gradients,
+    init_compression,
+)

@@ -1,0 +1,97 @@
+"""Training supervisor: checkpoint/restart fault tolerance + elastic
+re-meshing.
+
+On a real fleet the failure signal is a missing heartbeat or an XLA
+collective timeout; here the supervisor catches exceptions raised by the
+step function (tests inject them deterministically) and restores from
+the newest checkpoint.  The restore path accepts a different mesh than
+the one the checkpoint was written under — `CheckpointManager.restore`
+re-device_puts logical arrays with the new shardings, which is the whole
+elastic-scaling story at this layer.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any, Callable, Optional
+
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.straggler import StragglerMonitor
+
+log = logging.getLogger("repro.runtime")
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated node failure (tests / chaos injection)."""
+
+
+class TrainSupervisor:
+    def __init__(
+        self,
+        step_fn: Callable[[Any, Any], tuple[Any, dict]],
+        data_fn: Callable[[int], Any],
+        ckpt: CheckpointManager,
+        *,
+        checkpoint_every: int = 50,
+        max_restarts: int = 10,
+        mesh=None,
+        shardings=None,
+        straggler: Optional[StragglerMonitor] = None,
+    ):
+        self.step_fn = step_fn
+        self.data_fn = data_fn
+        self.ckpt = ckpt
+        self.checkpoint_every = checkpoint_every
+        self.max_restarts = max_restarts
+        self.mesh = mesh
+        self.shardings = shardings
+        self.straggler = straggler or StragglerMonitor()
+        self.restarts = 0
+        self.history: list[dict] = []
+
+    def run(self, state, start_step: int, num_steps: int):
+        """Run to ``start_step + num_steps``, surviving step failures."""
+        step = start_step
+        target = start_step + num_steps
+        # resume from a newer checkpoint if one exists
+        latest = self.ckpt.latest_step()
+        if latest is not None and latest > step:
+            state, step = self.ckpt.restore(state, shardings=self.shardings)
+            log.info("resumed at step %d", step)
+
+        while step < target:
+            try:
+                t0 = time.perf_counter()
+                batch = self.data_fn(step)
+                state, metrics = self.step_fn(state, batch)
+                dt = time.perf_counter() - t0
+                flagged = self.straggler.record(step, dt)
+                if flagged:
+                    self.history.append({"step": step,
+                                         "event": "straggler",
+                                         "dt": dt})
+                step += 1
+                self.history.append({"step": step, "metrics": {
+                    k: float(v) for k, v in metrics.items()}})
+                if step % self.checkpoint_every == 0 or step == target:
+                    self.ckpt.save(step, state, mesh=self.mesh)
+            except WorkerFailure as e:
+                self.restarts += 1
+                self.history.append({"step": step, "event": "failure",
+                                     "error": str(e)})
+                if self.restarts > self.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.max_restarts} restarts") from e
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    log.warning("failure before first checkpoint; "
+                                "restarting from initial state")
+                    step = start_step
+                    continue
+                self.ckpt.wait()
+                state, step = self.ckpt.restore(state,
+                                                shardings=self.shardings)
+                log.info("restored step %d after failure (%d restarts)",
+                         step, self.restarts)
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,122 @@
+"""Self-organizing checkpoint compression — the paper's SOG story applied
+to LM checkpoints.
+
+Each 2-D weight (D, F) is treated as F column vectors; ShuffleSoftSort
+arranges them on a grid maximizing neighbour correlation (storing only
+the F permutation indices — the paper's N-parameter claim), then the
+permuted tensor is int8-quantized, delta-encoded along the sorted order
+and deflated.  Correlated columns (the common case in trained nets:
+duplicated/co-adapted features) compress measurably better after
+sorting; the permutation costs 4F bytes.
+
+This is an opt-in codec for CheckpointManager-style storage; round-trip
+is exact at the int8 quantization level.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shufflesoftsort import ShuffleSoftSortConfig, shuffle_soft_sort
+
+
+def _grid_hw(n: int) -> tuple[int, int]:
+    h = int(np.sqrt(n))
+    while n % h:
+        h -= 1
+    return h, n // h
+
+
+def _quantize(w: np.ndarray) -> tuple[np.ndarray, float]:
+    scale = float(np.max(np.abs(w))) / 127.0 + 1e-12
+    return np.clip(np.round(w / scale), -127, 127).astype(np.int8), scale
+
+
+def _encode(q: np.ndarray) -> bytes:
+    # delta along the sorted (column) axis (first row kept verbatim via a
+    # zero prepend), wrapped mod 256 — lossless for int8 payloads — then
+    # deflate.
+    delta = np.diff(q.astype(np.int16), axis=0,
+                    prepend=np.zeros((1, q.shape[1]), np.int16))
+    return zlib.compress(delta.astype(np.int8).tobytes(), level=6)
+
+
+def sog_compress_tensor(
+    w,
+    *,
+    sort_rounds: int = 120,
+    feature_rows: int = 32,
+    key=None,
+) -> dict:
+    """Compress one 2-D tensor (D, F) -> blob dict.  Returns the payload
+    plus baseline (unsorted) size so callers can report the SOG gain."""
+    w = np.asarray(jax.device_get(w), np.float32)
+    assert w.ndim == 2, w.shape
+    d, f = w.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    # features for sorting: subsample rows (cheap proxy for the column)
+    rows = np.linspace(0, d - 1, min(feature_rows, d)).astype(int)
+    feats = w[rows].T                                    # (F, <=32)
+
+    hw = _grid_hw(f)
+    cfg = ShuffleSoftSortConfig(rounds=sort_rounds, inner_steps=4,
+                                chunk=min(256, f))
+    order, _, _ = shuffle_soft_sort(jnp.asarray(feats), hw, cfg, key=key)
+
+    q_sorted, scale = _quantize(w.T[order])              # (F, D) sorted
+    q_plain, _ = _quantize(w.T)
+    payload = _encode(q_sorted)
+    baseline = _encode(q_plain)
+
+    return {
+        "payload": payload,
+        "perm": order.astype(np.int32),
+        "scale": scale,
+        "shape": (d, f),
+        "bytes": len(payload) + 4 * f,                  # + stored permutation
+        "baseline_bytes": len(baseline),
+        "raw_bytes": w.nbytes,
+    }
+
+
+def sog_decompress_tensor(blob: dict) -> np.ndarray:
+    d, f = blob["shape"]
+    raw = zlib.decompress(blob["payload"])
+    delta = np.frombuffer(raw, np.int8).reshape(f, d).astype(np.int32)
+    q = np.cumsum(delta, axis=0).astype(np.int8)   # mod-256 wrap == exact
+    wt = q.astype(np.float32) * blob["scale"]            # (F, D) sorted
+    out = np.empty_like(wt)
+    out[blob["perm"]] = wt                               # invert permutation
+    return out.T                                         # (D, F)
+
+
+def compress_checkpoint(params: Any, *, min_cols: int = 64,
+                        sort_rounds: int = 80) -> dict:
+    """Compress every >=2-D weight in a param pytree; returns stats and
+    the blobs.  Tensors are flattened to 2-D (leading dims merged)."""
+    flat, treedef = jax.tree.flatten(params)
+    blobs, stats = [], {"sog_bytes": 0, "baseline_bytes": 0, "raw_bytes": 0}
+    key = jax.random.PRNGKey(7)
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf), np.float32)
+        if arr.ndim >= 2 and arr.shape[-1] >= min_cols:
+            arr2 = arr.reshape(-1, arr.shape[-1])
+            key, sub = jax.random.split(key)
+            blob = sog_compress_tensor(arr2, sort_rounds=sort_rounds,
+                                       key=sub)
+            blobs.append(blob)
+            stats["sog_bytes"] += blob["bytes"]
+            stats["baseline_bytes"] += blob["baseline_bytes"]
+            stats["raw_bytes"] += blob["raw_bytes"]
+        else:
+            blobs.append(None)
+    stats["gain_vs_baseline"] = (
+        stats["baseline_bytes"] / max(stats["sog_bytes"], 1))
+    stats["ratio_vs_raw"] = stats["raw_bytes"] / max(stats["sog_bytes"], 1)
+    return {"blobs": blobs, "treedef": treedef, "stats": stats}

@@ -1,0 +1,52 @@
+"""Straggler detection/mitigation.
+
+Per-step wall time feeds an EWMA mean/variance; a step slower than
+``mean + z * std`` (and at least ``min_ratio`` x mean) is flagged.  On a
+real fleet the flag feeds the scheduler (demote host to backup group,
+re-shard its data); in-process the mitigation hook is a callback the
+trainer can use to e.g. skip the global batch or rebalance grad
+accumulation — both are exercised in tests with injected delays.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, z: float = 4.0, min_ratio: float = 1.5,
+                 alpha: float = 0.05, warmup: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]]
+                 = None):
+        self.z = z
+        self.min_ratio = min_ratio
+        self.alpha = alpha
+        self.warmup = warmup
+        self.on_straggler = on_straggler
+        self.mean = 0.0
+        self.var = 0.0
+        self.count = 0
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            # prime the EWMA
+            self.mean = dt if self.count == 1 else (
+                self.mean + (dt - self.mean) / self.count)
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return False
+        std = math.sqrt(self.var) + 1e-9
+        is_straggler = (dt > self.mean + self.z * std
+                        and dt > self.min_ratio * self.mean)
+        if is_straggler:
+            self.flagged.append((step, dt))
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt, self.mean)
+        else:
+            # only update stats with healthy steps so one straggler does
+            # not poison the baseline
+            d = dt - self.mean
+            self.mean += self.alpha * d
+            self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `repro` importable without an install step.  NOTE: deliberately no
+# XLA_FLAGS here — smoke tests and benches must see 1 device; only the
+# dry-run entrypoint forces 512 host devices (see repro/launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,192 @@
+"""Unit + property tests for the permutation-learning core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softsort import (
+    softsort_matrix,
+    softsort_apply_chunked,
+    hard_permutation,
+    is_valid_permutation,
+    fix_permutation,
+)
+from repro.core.losses import (
+    neighbor_loss_grid,
+    stochastic_constraint_loss,
+    std_loss,
+    grid_sorting_loss,
+    mean_pairwise_distance,
+)
+from repro.core.metrics import dpq, mean_neighbor_distance
+from repro.core.shufflesoftsort import (
+    ShuffleSoftSortConfig,
+    shuffle_soft_sort,
+    soft_sort_baseline,
+)
+
+
+# ---------------------------------------------------------------- softsort
+
+def test_softsort_matrix_rows_sum_to_one():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    p = softsort_matrix(w, tau=0.5)
+    np.testing.assert_allclose(np.asarray(p.sum(-1)), np.ones(64), rtol=1e-5)
+
+
+def test_softsort_matrix_converges_to_argsort():
+    w = jax.random.normal(jax.random.PRNGKey(1), (32,))
+    p = softsort_matrix(w, tau=1e-4)
+    hard = np.asarray(jnp.argmax(p, axis=-1))
+    np.testing.assert_array_equal(hard, np.asarray(jnp.argsort(w)))
+
+
+@pytest.mark.parametrize("n,chunk", [(64, 16), (128, 32), (96, 96), (32, 64)])
+def test_chunked_apply_matches_dense(n, chunk):
+    key = jax.random.PRNGKey(n)
+    w = jax.random.normal(key, (n,))
+    x = jax.random.normal(jax.random.PRNGKey(n + 1), (n, 5))
+    p = softsort_matrix(w, tau=0.7)
+    y_ref, cs_ref = p @ x, p.sum(0)
+    y, cs = softsort_apply_chunked(w, x, tau=0.7, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(cs_ref), atol=1e-5)
+
+
+def test_chunked_apply_gradients_match_dense():
+    n = 64
+    w = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(4), (n, 3))
+
+    def loss_dense(w):
+        p = softsort_matrix(w, 0.5)
+        return jnp.sum((p @ x) ** 2) + jnp.sum(p.sum(0) ** 3)
+
+    def loss_chunked(w):
+        y, cs = softsort_apply_chunked(w, x, 0.5, chunk=16)
+        return jnp.sum(y ** 2) + jnp.sum(cs ** 3)
+
+    g1 = jax.grad(loss_dense)(w)
+    g2 = jax.grad(loss_chunked)(w)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+def test_hard_permutation_is_argsort():
+    w = jnp.array([3.0, 1.0, 2.0, -5.0])
+    np.testing.assert_array_equal(np.asarray(hard_permutation(w)),
+                                  [3, 1, 2, 0])
+
+
+# --------------------------------------------------------- perm validity
+
+@given(st.lists(st.integers(0, 19), min_size=20, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_fix_permutation_always_valid(idx):
+    fixed = fix_permutation(np.array(idx))
+    assert is_valid_permutation(fixed)
+
+
+@given(st.permutations(list(range(12))))
+@settings(max_examples=25, deadline=None)
+def test_fix_permutation_identity_on_valid(perm):
+    arr = np.array(perm)
+    assert is_valid_permutation(arr)
+    np.testing.assert_array_equal(fix_permutation(arr), arr)
+
+
+# ------------------------------------------------------------------ losses
+
+def test_neighbor_loss_zero_for_constant_grid():
+    g = jnp.ones((4, 4, 3))
+    assert float(neighbor_loss_grid(g)) < 1e-5
+
+
+def test_stochastic_loss_zero_for_permutation():
+    p = jnp.eye(16)[jnp.array(np.random.RandomState(0).permutation(16))]
+    assert float(stochastic_constraint_loss(p.sum(0))) < 1e-9
+
+
+def test_std_loss_zero_for_permutation():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 4))
+    y = x[jnp.array(np.random.RandomState(1).permutation(32))]
+    assert float(std_loss(x, y)) < 1e-6
+
+
+def test_grid_sorting_loss_finite_grad():
+    n, hw = 64, (8, 8)
+    x = jax.random.uniform(jax.random.PRNGKey(0), (n, 3))
+    norm = mean_pairwise_distance(x)
+
+    def loss(w):
+        y, cs = softsort_apply_chunked(w, x, 0.5, chunk=16)
+        return grid_sorting_loss(y, cs, x, hw, norm)
+
+    g = jax.grad(loss)(jnp.arange(n, dtype=jnp.float32))
+    assert np.all(np.isfinite(np.asarray(g)))
+
+
+# ----------------------------------------------------------------- metrics
+
+def test_dpq_perfect_1d_ordering():
+    # items whose features equal their grid coordinates: near-perfect layout
+    h, w = 8, 8
+    yy, xx = np.meshgrid(np.arange(h), np.arange(w), indexing="ij")
+    x = np.stack([yy.ravel(), xx.ravel()], -1).astype(np.float64)
+    assert dpq(x, (h, w)) > 0.9
+
+
+def test_dpq_random_is_low():
+    rng = np.random.RandomState(0)
+    x = rng.rand(64, 8)
+    assert dpq(x, (8, 8)) < 0.2
+
+
+def test_mean_neighbor_distance_sorted_lt_random():
+    rng = np.random.RandomState(0)
+    x = np.sort(rng.rand(64))[:, None] * np.ones((1, 2))
+    shuffled = x[rng.permutation(64)]
+    assert mean_neighbor_distance(x, (8, 8)) < mean_neighbor_distance(
+        shuffled, (8, 8))
+
+
+# ------------------------------------------------- end-to-end (small N)
+
+def test_shuffle_soft_sort_improves_layout_and_is_valid():
+    n, hw = 64, (8, 8)
+    x = jax.random.uniform(jax.random.PRNGKey(5), (n, 3))
+    cfg = ShuffleSoftSortConfig(rounds=150, inner_steps=8, chunk=32)
+    order, xs, losses = shuffle_soft_sort(x, hw, cfg, key=jax.random.PRNGKey(2))
+    assert is_valid_permutation(order)
+    base = mean_neighbor_distance(np.asarray(x), hw)
+    assert mean_neighbor_distance(xs, hw) < 0.75 * base
+    assert np.isfinite(losses).all()
+
+
+def test_shuffle_beats_plain_softsort():
+    n, hw = 64, (8, 8)
+    x = jax.random.uniform(jax.random.PRNGKey(6), (n, 3))
+    cfg = ShuffleSoftSortConfig(rounds=200, inner_steps=8, chunk=32)
+    o1, xs1, _ = shuffle_soft_sort(x, hw, cfg, key=jax.random.PRNGKey(3))
+    o2, xs2, _ = soft_sort_baseline(x, hw, cfg, steps=1600)
+    assert dpq(xs1, hw) > dpq(xs2, hw)
+
+
+def test_shuffle_soft_sort_deterministic_given_key():
+    n, hw = 36, (6, 6)
+    x = jax.random.uniform(jax.random.PRNGKey(9), (n, 2))
+    cfg = ShuffleSoftSortConfig(rounds=20, inner_steps=4, chunk=36)
+    o1, _, _ = shuffle_soft_sort(x, hw, cfg, key=jax.random.PRNGKey(1))
+    o2, _, _ = shuffle_soft_sort(x, hw, cfg, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(o1, o2)
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_shuffle_soft_sort_property_valid_any_shape(h, w, d):
+    n = h * w
+    x = jax.random.uniform(jax.random.PRNGKey(h * 31 + w), (n, d))
+    cfg = ShuffleSoftSortConfig(rounds=5, inner_steps=2, chunk=n)
+    order, _, _ = shuffle_soft_sort(x, (h, w), cfg)
+    assert is_valid_permutation(order)

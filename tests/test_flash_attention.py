@@ -1,0 +1,88 @@
+"""Flash-attention Pallas kernel: shape/GQA/causal sweeps + grads vs the
+pure-jnp oracle (interpret mode on CPU; TPU is the target)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_ops import flash_attention, flash_attention_ref
+
+
+CASES = [
+    # (B, Tq, S, H, Hkv, Dh, causal)
+    (2, 64, 64, 4, 2, 32, True),       # GQA train-like
+    (1, 100, 100, 5, 5, 16, True),     # MHA, unaligned lengths
+    (2, 1, 128, 8, 2, 64, True),       # decode: one query vs cache
+    (2, 48, 80, 6, 3, 32, False),      # cross-attention (no mask)
+    (1, 256, 256, 2, 1, 128, True),    # MQA, lane-aligned
+]
+
+
+@pytest.mark.parametrize("b,tq,s,h,hkv,dh,causal", CASES)
+def test_forward_matches_ref(b, tq, s, h, hkv, dh, causal):
+    ks = jax.random.split(jax.random.PRNGKey(b * tq + h), 3)
+    q = jax.random.normal(ks[0], (b, tq, h, dh))
+    k = jax.random.normal(ks[1], (b, s, hkv, dh))
+    v = jax.random.normal(ks[2], (b, s, hkv, dh))
+    off = s - tq if causal else 0
+    out = flash_attention(q, k, v, causal, off)
+    ref = flash_attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("blocks", [(32, 128), (128, 128), (8, 256)])
+def test_block_shape_sweep(blocks):
+    bq, bk = blocks
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 96, 4, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 96, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 96, 2, 32))
+    out = flash_attention(q, k, v, True, 0, bq, bk)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 32)).astype(dtype)
+    out = flash_attention(q, k, v)
+    ref = flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=tol)
+
+
+def test_gradients_match_ref():
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = jax.random.normal(ks[0], (1, 40, 4, 16))
+    k = jax.random.normal(ks[1], (1, 40, 2, 16))
+    v = jax.random.normal(ks[2], (1, 40, 2, 16))
+    a = jax.random.normal(ks[3], (1, 40, 4, 16))
+
+    g1 = jax.grad(lambda q, k, v: jnp.sum(
+        flash_attention(q, k, v, True, 0, 128, 128, 16) * a),
+        argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: jnp.sum(
+        flash_attention_ref(q, k, v, causal=True) * a),
+        argnums=(0, 1, 2))(q, k, v)
+    for x, y in zip(g1, g2):
+        scale = float(jnp.max(jnp.abs(y))) + 1e-9
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=2e-3 * scale)
+
+
+@given(st.integers(1, 2), st.integers(1, 3), st.sampled_from([1, 2, 4]))
+@settings(max_examples=8, deadline=None)
+def test_property_rows_are_convex_combinations(b, g, rep):
+    """Attention outputs lie in the convex hull of V rows: with V == 1
+    everywhere the output is exactly 1."""
+    h = g * rep
+    q = jax.random.normal(jax.random.PRNGKey(g), (b, 16, h, 8))
+    k = jax.random.normal(jax.random.PRNGKey(g + 1), (b, 16, g, 8))
+    v = jnp.ones((b, 16, g, 8))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.ones_like(out), atol=1e-5)

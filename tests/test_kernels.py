@@ -1,0 +1,131 @@
+"""Pallas kernel validation: shape/dtype sweeps + gradients vs ref.py oracle.
+
+Kernels run in interpret mode on CPU (TPU is the compile target); every
+assertion is against the pure-jnp O(N^2) oracle.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops import softsort_apply
+from repro.kernels.ref import softsort_apply_ref
+
+
+SHAPES = [
+    (8, 1), (64, 3), (100, 2), (256, 3), (300, 7), (511, 5),
+    (1024, 50), (128, 130), (96, 256),
+]
+
+
+@pytest.mark.parametrize("n,d", SHAPES)
+@pytest.mark.parametrize("tau", [0.1, 0.7, 3.0])
+def test_forward_matches_ref(n, d, tau):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * 7 + d))
+    w = jax.random.normal(k1, (n,)) * 2.0
+    x = jax.random.normal(k2, (n, d))
+    y, c = softsort_apply(w, x, tau)
+    yr, cr = softsort_apply_ref(w, x, tau)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_forward_dtypes(dtype):
+    n, d = 128, 9
+    w = (jax.random.normal(jax.random.PRNGKey(0), (n,)) * 2).astype(dtype)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, d)).astype(dtype)
+    y, c = softsort_apply(w, x, 0.5)
+    yr, cr = softsort_apply_ref(w.astype(jnp.float32),
+                                x.astype(jnp.float32), 0.5)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr),
+                               atol=tol)
+    np.testing.assert_allclose(np.asarray(c, np.float32), np.asarray(cr),
+                               atol=tol)
+
+
+@pytest.mark.parametrize("blocks", [(64, 128), (256, 256), (8, 128)])
+def test_forward_block_shape_sweep(blocks):
+    br, bc = blocks
+    n, d = 384, 5
+    w = jax.random.normal(jax.random.PRNGKey(2), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    y, c = softsort_apply(w, x, 0.4, br, bc)
+    yr, cr = softsort_apply_ref(w, x, 0.4)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(cr), atol=2e-5)
+
+
+@pytest.mark.parametrize("n,d", [(64, 3), (300, 7), (129, 17)])
+@pytest.mark.parametrize("chunk", [32, 64, 256])
+def test_gradients_match_ref(n, d, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(n + d + chunk), 4)
+    w = jax.random.normal(keys[0], (n,)) * 3
+    x = jax.random.normal(keys[1], (n, d))
+    a = jax.random.normal(keys[2], (n, d))
+    b = jax.random.normal(keys[3], (n,))
+
+    def loss(apply_fn):
+        def f(w, x, tau):
+            y, c = apply_fn(w, x, tau)
+            return jnp.sum(y * a) + jnp.sum(c * b)
+        return f
+
+    lk = loss(lambda w, x, t: softsort_apply(w, x, t, 256, 256, chunk))
+    lr = loss(softsort_apply_ref)
+    gk = jax.grad(lk, argnums=(0, 1, 2))(w, x, jnp.float32(0.6))
+    gr = jax.grad(lr, argnums=(0, 1, 2))(w, x, jnp.float32(0.6))
+    for kk, rr in zip(gk, gr):
+        scale = float(jnp.max(jnp.abs(rr))) + 1e-9
+        np.testing.assert_allclose(np.asarray(kk), np.asarray(rr),
+                                   atol=2e-3 * scale)
+
+
+def test_colsum_of_valid_permutation_is_one():
+    # With tiny tau, P ~ a hard permutation: column sums ~ 1.
+    n = 256
+    w = jax.random.permutation(jax.random.PRNGKey(5),
+                               jnp.arange(n, dtype=jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(6), (n, 4))
+    _, c = softsort_apply(w, x, 1e-3)
+    np.testing.assert_allclose(np.asarray(c), np.ones(n), atol=1e-4)
+
+
+def test_apply_of_tiny_tau_is_hard_sort():
+    n = 200
+    w = jax.random.normal(jax.random.PRNGKey(7), (n,)) * 10
+    x = jax.random.normal(jax.random.PRNGKey(8), (n, 6))
+    y, _ = softsort_apply(w, x, 1e-5)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x)[np.argsort(np.asarray(w))],
+                               atol=1e-4)
+
+
+@given(st.integers(2, 6), st.integers(1, 4),
+       st.floats(0.05, 4.0, allow_nan=False))
+@settings(max_examples=20, deadline=None)
+def test_property_rowsum_one(log2n, d, tau):
+    """P_soft rows always sum to 1 => sum(colsum) == N and sum(y) stats."""
+    n = 2 ** log2n
+    w = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    x = jnp.ones((n, d))
+    y, c = softsort_apply(w, x, tau)
+    # Each row of P sums to 1 so y == 1 exactly and colsum sums to N.
+    np.testing.assert_allclose(np.asarray(y), np.ones((n, d)), atol=1e-5)
+    np.testing.assert_allclose(float(c.sum()), n, rtol=1e-5)
+
+
+@given(st.floats(0.05, 2.0), st.floats(0.05, 2.0))
+@settings(max_examples=10, deadline=None)
+def test_property_shift_invariance(tau, shift):
+    """SoftSort is invariant to adding a constant to all keys."""
+    n, d = 64, 3
+    w = jax.random.normal(jax.random.PRNGKey(11), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(12), (n, d))
+    y1, c1 = softsort_apply(w, x, tau)
+    y2, c2 = softsort_apply(w + shift, x, tau)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
