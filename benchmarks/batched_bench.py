@@ -1,0 +1,112 @@
+"""Throughput sweep: batched multi-problem engine vs the sequential loop.
+
+    PYTHONPATH=src python -m benchmarks.batched_bench [--full]
+
+For each (B, N) cell, times B independent grid-sorting problems solved
+
+  * sequentially — B ``shuffle_soft_sort`` calls (the pre-batching API:
+    one Python round-loop per problem, one host sync per round), and
+  * batched      — ONE ``shuffle_soft_sort_batched`` call (one vmapped
+    device program per round for all B problems).
+
+and reports sorts/sec for both plus the speedup.  Default sweep is
+B in {1, 8, 64} at N = 1024 with a short round budget so it finishes on
+the CI CPU backend; ``--full`` extends to N = 4096 (the paper-scale
+grid) and a longer budget.  Compile time is excluded (one warmup per
+shape); per-seed results of the two paths are bit-identical, so this is
+a pure scheduling/throughput comparison.  Results fill the table in
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.shufflesoftsort import (
+    ShuffleSoftSortConfig,
+    shuffle_soft_sort,
+    shuffle_soft_sort_batched,
+)
+
+
+def _square_hw(n: int) -> tuple[int, int]:
+    h = int(np.sqrt(n))
+    assert h * h == n, f"N={n} is not square"
+    return (h, h)
+
+
+def bench_cell(b: int, n: int, d: int, cfg: ShuffleSoftSortConfig,
+               warm: bool = True):
+    hw = _square_hw(n)
+    xs = jax.random.uniform(jax.random.PRNGKey(0), (b, n, d))
+    keys = jax.random.split(jax.random.PRNGKey(1), b)
+
+    def run_sequential():
+        outs = []
+        for i in range(b):
+            outs.append(shuffle_soft_sort(xs[i], hw, cfg, key=keys[i]))
+        return outs
+
+    def run_batched():
+        return shuffle_soft_sort_batched(xs, hw, cfg, n_restarts=1,
+                                         keys=keys)
+
+    if warm:  # compile both programs outside the timed region
+        shuffle_soft_sort(xs[0], hw, cfg, key=keys[0])
+        run_batched()
+
+    t0 = time.perf_counter()
+    seq = run_sequential()
+    t_seq = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    bat = run_batched()
+    t_bat = time.perf_counter() - t0
+
+    # Sanity: the two paths must agree per seed (bit-identical orders).
+    for i in range(b):
+        assert np.array_equal(seq[i][0], bat.all_orders[i, 0]), i
+
+    return {
+        "B": b, "N": n,
+        "seq_s": t_seq, "bat_s": t_bat,
+        "seq_sorts_per_s": b / t_seq,
+        "bat_sorts_per_s": b / t_bat,
+        "speedup": t_seq / t_bat,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="add N=4096 and a longer round budget")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument("--bs", type=int, nargs="+", default=None)
+    args = ap.parse_args(argv)
+
+    ns = (1024, 4096) if args.full else (1024,)
+    bs = tuple(args.bs) if args.bs else (1, 8, 64)
+    rounds = args.rounds or (50 if args.full else 10)
+    cfg = ShuffleSoftSortConfig(rounds=rounds, inner_steps=4, chunk=256)
+
+    print("name,us_per_call,derived")
+    rows = []
+    for n in ns:
+        for b in bs:
+            r = bench_cell(b, n, args.d, cfg)
+            rows.append(r)
+            print(f"batched_bench.B{b}_N{n},{r['bat_s'] * 1e6 / b:.0f},"
+                  f"seq={r['seq_sorts_per_s']:.2f}sorts/s;"
+                  f"bat={r['bat_sorts_per_s']:.2f}sorts/s;"
+                  f"speedup={r['speedup']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

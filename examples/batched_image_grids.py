@@ -1,0 +1,63 @@
+"""Multi-image grid sorting in one device call (batched engine demo).
+
+A production gallery service rarely sorts ONE image set — it sorts many
+concurrently (one per user upload).  Because ShuffleSoftSort needs only
+N parameters per instance, the batched engine holds B catalogs x S
+random restarts on-device simultaneously and trains them with one
+vmapped program, then keeps each catalog's best-loss restart:
+
+    PYTHONPATH=src python examples/batched_image_grids.py
+"""
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    ShuffleSoftSortConfig,
+    shuffle_soft_sort,
+    shuffle_soft_sort_batched,
+)
+from repro.core.metrics import dpq  # noqa: E402
+
+
+def synthetic_catalog(n, d=50, clusters=12, seed=0):
+    """Clustered features mimicking one user's product-image catalog."""
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(clusters, d) * 2.0
+    labels = rng.randint(0, clusters, n)
+    x = centers[labels] + 0.4 * rng.randn(n, d)
+    return x.astype(np.float32)
+
+
+def main():
+    n_images, n, hw = 6, 256, (16, 16)
+    restarts = 2
+    xs = np.stack([synthetic_catalog(n, seed=i) for i in range(n_images)])
+    cfg = ShuffleSoftSortConfig(rounds=120, inner_steps=8, chunk=256)
+
+    t0 = time.time()
+    res = shuffle_soft_sort_batched(xs, hw, cfg, n_restarts=restarts,
+                                    key=jax.random.PRNGKey(0))
+    wall = time.time() - t0
+    print(f"sorted {n_images} catalogs x {restarts} restarts "
+          f"({n_images * restarts} instances of N={n}) in {wall:.1f}s "
+          f"-> {n_images / wall:.2f} catalogs/s")
+    for b in range(n_images):
+        print(f"  catalog {b}: dpq {dpq(xs[b], hw):.3f} -> "
+              f"{dpq(res.sorted[b], hw):.3f}  "
+              f"(best restart {res.best_restart[b]}, "
+              f"final losses {np.round(res.all_losses[b, :, -1], 4)})")
+
+    # Reference point: one catalog through the sequential API.
+    t0 = time.time()
+    shuffle_soft_sort(xs[0], hw, cfg, key=jax.random.PRNGKey(0))
+    print(f"(sequential API: {time.time() - t0:.1f}s per catalog-restart)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,9 @@ from repro.core.losses import (  # noqa: F401
 )
 from repro.core.metrics import dpq, mean_neighbor_distance  # noqa: F401
 from repro.core.shufflesoftsort import (  # noqa: F401
+    BatchedSortResult,
     ShuffleSoftSortConfig,
     shuffle_soft_sort,
+    shuffle_soft_sort_batched,
     soft_sort_baseline,
 )

@@ -8,7 +8,8 @@ k <= p, compare the mean feature-space distance of every item to its k
 distance of random pairs (the chance level).  DPQ_p averages the
 resulting preservation ratios over k = 1..p.  The paper uses DPQ_16.
 
-Exact-formula caveat recorded in DESIGN.md §3: the CGF paper is not
+Exact-formula caveat (see also EXPERIMENTS.md §Paper-claims): the CGF
+paper is not
 available in this environment, so absolute values are comparable but not
 bit-identical to the paper's table; the metric ordering of methods is
 the reproduction target.  ``mean_neighbor_distance`` — which [3] states

@@ -17,7 +17,21 @@ Learns a permutation of N items with only N parameters by iterating:
 The random shuffle re-linearizes the grid along a fresh path each outer
 iteration, so elements can take long-range jumps that pure 1-D SoftSort
 transport cannot (paper Fig. 3/4).  The whole outer body is one jitted
-function; the R-loop stays in Python so callers can stream metrics.
+function; in the sequential API the R-loop stays in Python so callers
+can stream metrics.
+
+Because one instance costs only N parameters (vs Gumbel-Sinkhorn's N^2),
+many instances fit on a device at once.  ``shuffle_soft_sort_batched``
+exploits that: it vmaps the outer round over B problems x S restarts
+(each with its own PRNG stream, shuffle, and Adam state), runs the whole
+annealing schedule as one scanned device program when no streaming
+callback is requested, and keeps each problem's best-loss restart.
+Per-seed results are bit-identical to the sequential API.
+
+Return contract, shared by every driver here: ``order`` is the (N,)
+int32 permutation mapping grid cell -> input row, ``sorted`` is
+``x[order]``, and ``losses`` is the per-round loss trace (leading batch
+axes in the batched API).
 """
 from __future__ import annotations
 
@@ -59,13 +73,16 @@ def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
         lambda_s=cfg.lambda_s, lambda_sigma=cfg.lambda_sigma)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("hw", "cfg", "apply_fn"),
-    donate_argnums=(1,),
-)
-def _outer_round(x, order, key, tau_r, norm, *, hw, cfg: ShuffleSoftSortConfig,
-                 apply_fn):
+def _outer_round_impl(x, order, key, tau_r, norm, *, hw,
+                      cfg: ShuffleSoftSortConfig, apply_fn):
+    """One un-jitted outer round for a single problem instance.
+
+    This is the unit the batched engine vmaps: every array argument is
+    per-instance ((N, d) / (N,) / PRNG key), so ``jax.vmap`` over a
+    leading batch axis gives B independent rounds — each with its own
+    shuffle, PRNG stream, and (implicitly, via the inner fori_loop
+    carry) its own Adam state.
+    """
     n = x.shape[0]
     shuf = jax.random.permutation(key, n)
     inv_shuf = jnp.argsort(shuf)
@@ -99,6 +116,105 @@ def _outer_round(x, order, key, tau_r, norm, *, hw, cfg: ShuffleSoftSortConfig,
     return order[g], loss
 
 
+_outer_round = functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)(_outer_round_impl)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)
+def _outer_round_batched(xs, orders, keys, tau_r, norms, *, hw,
+                         cfg: ShuffleSoftSortConfig, apply_fn):
+    """Vmapped outer round over a leading batch axis.
+
+    Args:
+      xs:     (BS, N, d) problem instances (restarts are tiled copies).
+      orders: (BS, N) int32 current permutations.
+      keys:   (BS, 2) uint32 per-instance PRNG keys for this round.
+      tau_r:  scalar round temperature, shared across the batch.
+      norms:  (BS,) per-instance loss normalization constants.
+
+    Returns:
+      (orders, losses): (BS, N) int32 and (BS,) float32.
+    """
+    def one(x, order, key, norm):
+        return _outer_round_impl(x, order, key, tau_r, norm,
+                                 hw=hw, cfg=cfg, apply_fn=apply_fn)
+
+    return jax.vmap(one)(xs, orders, keys, norms)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)
+def _run_rounds_batched(xs, orders, keys, taus, norms, *, hw,
+                        cfg: ShuffleSoftSortConfig, apply_fn):
+    """Whole-schedule batched run: lax.scan over the R outer rounds.
+
+    One device program instead of R dispatches — the throughput path the
+    batched benchmark measures.  Numerically identical to calling
+    ``_outer_round_batched`` once per round (the scan body is the same
+    vmapped round, consuming the same per-instance key splits), so
+    results stay bit-identical to the sequential API per seed.
+
+    Args:
+      taus: (R,) float32 precomputed outer-round temperature schedule.
+
+    Returns:
+      (orders (BS, N), keys (BS, 2), losses (R, BS)).
+    """
+    def step(carry, tau_r):
+        orders, keys = carry
+        pair = jax.vmap(jax.random.split)(keys)
+        keys, subs = pair[:, 0], pair[:, 1]
+
+        def one(x, order, key, norm):
+            return _outer_round_impl(x, order, key, tau_r, norm,
+                                     hw=hw, cfg=cfg, apply_fn=apply_fn)
+
+        orders, losses = jax.vmap(one)(xs, orders, subs, norms)
+        return (orders, keys), losses
+
+    (orders, keys), losses = jax.lax.scan(step, (orders, keys), taus)
+    return orders, keys, losses
+
+
+def _tau_schedule(cfg: ShuffleSoftSortConfig) -> np.ndarray:
+    """Outer-round temperatures, (R,) float32: geometric anneal from
+    tau_start to tau_end.
+
+    Single source of truth for BOTH engines: the batched API's
+    "per-seed bit-identical to sequential" contract holds only while
+    the two paths consume the exact same float32 values, so neither
+    may inline its own copy of the formula.
+    """
+    return np.float32(cfg.tau_start * (cfg.tau_end / cfg.tau_start)
+                      ** (np.arange(1, cfg.rounds + 1) / cfg.rounds))
+
+
+def _select_apply_fn(cfg: ShuffleSoftSortConfig):
+    """Resolve the ``use_kernel`` switch to a per-instance apply callable.
+
+    ``use_kernel=False`` — streamed pure-jnp ``softsort_apply_chunked``
+    (runs everywhere).  ``use_kernel=True`` — the fused Pallas TPU path
+    from ``repro.kernels.ops`` (``interpret=True`` automatically
+    off-TPU).  Both compute (P_soft @ x, colsum(P_soft)) in O(N * block)
+    memory and both are vmap-compatible, so the batched engine accepts
+    either transparently.
+    """
+    if cfg.use_kernel:
+        from repro.kernels.ops import softsort_apply
+        return softsort_apply
+    return functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+
+
 def shuffle_soft_sort(
     x: jnp.ndarray,
     hw: tuple[int, int],
@@ -110,7 +226,16 @@ def shuffle_soft_sort(
 
     ``order`` is the permutation (N int32) mapping grid cell -> input row;
     only these N indices — plus the N learnable weights inside each round
-    — are ever stored, which is the paper's headline claim.
+    — are ever stored, which is the paper's headline claim.  ``losses``
+    is the Python list of per-round final losses (one host sync per
+    round; use ``shuffle_soft_sort_batched`` for the sync-free
+    throughput path).  ``cfg.use_kernel`` routes the SoftSort apply
+    through the fused Pallas kernel instead of the chunked-jnp stream —
+    identical semantics, see ``repro.kernels.ops``.
+
+    For many problems or random restarts at once, use
+    ``shuffle_soft_sort_batched`` — per-seed bit-identical to this
+    function.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -118,25 +243,147 @@ def shuffle_soft_sort(
     assert n == hw[0] * hw[1], (n, hw)
     x = jnp.asarray(x, jnp.float32)
     norm = jnp.float32(mean_pairwise_distance(x))
-
-    if cfg.use_kernel:
-        from repro.kernels.ops import softsort_apply as apply_fn
-    else:
-        apply_fn = functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+    apply_fn = _select_apply_fn(cfg)
 
     order = jnp.arange(n, dtype=jnp.int32)
+    taus = _tau_schedule(cfg)
     losses: list[float] = []
     for r in range(cfg.rounds):
-        tau_r = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** ((r + 1) / cfg.rounds)
         key, sub = jax.random.split(key)
         order, loss = _outer_round(
-            x, order, sub, jnp.float32(tau_r), norm,
+            x, order, sub, jnp.float32(taus[r]), norm,
             hw=hw, cfg=cfg, apply_fn=apply_fn)
         losses.append(float(loss))
         if callback is not None:
             callback(r, np.asarray(order), losses[-1])
     order = np.asarray(order)
     return order, np.asarray(x)[order], losses
+
+
+# --------------------------------------------------------------------------
+# Batched multi-problem / multi-restart engine.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSortResult:
+    """Result of ``shuffle_soft_sort_batched`` over B problems x S restarts.
+
+    The per-problem fields (``order``/``sorted``/``losses``) report the
+    winning restart — the seed whose final-round loss is lowest.  The
+    ``all_*`` fields keep every restart so callers can audit seed
+    variance (and tests can check bit-identity against sequential runs).
+    """
+    order: np.ndarray          # (B, N) int32 — best restart's permutation
+    sorted: np.ndarray         # (B, N, d) — xs gathered by ``order``
+    losses: np.ndarray         # (B, R) — per-round losses of the best restart
+    best_restart: np.ndarray   # (B,) int — argmin_s all_losses[:, s, -1]
+    all_orders: np.ndarray     # (B, S, N) int32 — every restart's permutation
+    all_losses: np.ndarray     # (B, S, R) — every restart's loss trace
+
+
+def shuffle_soft_sort_batched(
+    xs: jnp.ndarray,
+    hw: tuple[int, int],
+    cfg: ShuffleSoftSortConfig = ShuffleSoftSortConfig(),
+    n_restarts: int = 1,
+    key: jax.Array | None = None,
+    keys: jax.Array | None = None,
+    callback: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+) -> BatchedSortResult:
+    """Sort B problems at once, S random restarts each, on one device.
+
+    Runs B x S independent ShuffleSoftSort instances as a single vmapped
+    program: one ``_outer_round_batched`` device call per round instead
+    of B x S sequential calls, which amortizes dispatch overhead and
+    lets XLA batch the (chunk, N) contractions — the throughput win the
+    N-parameter footprint makes possible (an N^2-parameter method could
+    not hold B x S instances in memory).
+
+    Each instance consumes exactly the PRNG stream the sequential API
+    would: instance (b, s) with key ``keys[b, s]`` returns an order
+    bit-identical to ``shuffle_soft_sort(xs[b], hw, cfg,
+    key=keys[b, s])``.
+
+    Args:
+      xs: (B, N, d) batch of problems; all share N = hw[0] * hw[1].
+      hw: target grid shape, shared by the batch.
+      cfg: shared hyperparameters; ``cfg.use_kernel`` routes every
+        instance through the batched Pallas path.
+      n_restarts: S — independent seeds per problem; best final loss wins.
+      key: base PRNG key, split into B x S instance keys (ignored when
+        ``keys`` is given).
+      keys: optional explicit instance keys, shape (B, S, 2) or (B*S, 2)
+        uint32, ordered problem-major.
+      callback: optional ``f(round, orders (B*S, N), losses (B*S,))``
+        streamed per round (forces a host sync, like the sequential API).
+
+    Returns:
+      ``BatchedSortResult`` — see its field docs.
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    assert xs.ndim == 3, f"xs must be (B, N, d), got {xs.shape}"
+    b, n, _ = xs.shape
+    s = int(n_restarts)
+    assert s >= 1, n_restarts
+    assert n == hw[0] * hw[1], (n, hw)
+    bs = b * s
+
+    if keys is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, bs)
+    keys = jnp.asarray(keys)
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        # New-style typed keys (jax.random.key) — unwrap to raw uint32
+        # data so both key flavours drive identical streams.
+        keys = jax.random.key_data(keys)
+    keys = keys.reshape(bs, 2)
+
+    # Per-problem loss normalization, tiled over restarts.
+    norms = jax.vmap(mean_pairwise_distance)(xs).astype(jnp.float32)
+    xs_t = jnp.repeat(xs, s, axis=0)                     # (BS, N, d)
+    norms_t = jnp.repeat(norms, s, axis=0)               # (BS,)
+
+    apply_fn = _select_apply_fn(cfg)
+    orders = jnp.tile(jnp.arange(n, dtype=jnp.int32), (bs, 1))
+    taus = _tau_schedule(cfg)
+
+    if callback is None:
+        # Fast path: the whole R-round schedule as one scanned device
+        # program — no per-round host round-trips.
+        orders, _, losses_rb = _run_rounds_batched(
+            xs_t, orders, keys, jnp.asarray(taus), norms_t,
+            hw=hw, cfg=cfg, apply_fn=apply_fn)
+        all_losses = np.asarray(losses_rb).T             # (BS, R)
+    else:
+        # Streaming path: one dispatch per round so the callback can
+        # observe every intermediate state (same numerics as the scan).
+        split_all = jax.vmap(jax.random.split)           # (BS,2) -> (BS,2,2)
+        loss_rounds = []
+        for r in range(cfg.rounds):
+            pair = split_all(keys)
+            keys, subs = pair[:, 0], pair[:, 1]
+            orders, losses = _outer_round_batched(
+                xs_t, orders, subs, jnp.float32(taus[r]), norms_t,
+                hw=hw, cfg=cfg, apply_fn=apply_fn)
+            loss_rounds.append(losses)
+            callback(r, np.asarray(orders), np.asarray(losses))
+        all_losses = np.asarray(jnp.stack(loss_rounds, axis=-1))
+
+    all_losses = all_losses.reshape(b, s, cfg.rounds)    # (B, S, R)
+    all_orders = np.asarray(orders).reshape(b, s, n)     # (B, S, N)
+    best = np.argmin(all_losses[:, :, -1], axis=1)       # (B,)
+    order = all_orders[np.arange(b), best]               # (B, N)
+    xs_np = np.asarray(xs)
+    xs_sorted = np.take_along_axis(xs_np, order[:, :, None], axis=1)
+    return BatchedSortResult(
+        order=order,
+        sorted=xs_sorted,
+        losses=all_losses[np.arange(b), best],
+        best_restart=best,
+        all_orders=all_orders,
+        all_losses=all_losses,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -154,6 +401,9 @@ def _softsort_train(x, norm, *, hw, cfg: ShuffleSoftSortConfig, apply_fn,
 
     def body(i, carry):
         w, mu, nu, _ = carry
+        # Same geometric anneal as _tau_schedule, but per inner step
+        # (continuous frac) rather than per outer round — the baseline
+        # has no rounds, so it cannot share the host-side (R,) array.
         frac = i.astype(jnp.float32) / steps
         tau = cfg.tau_start * (cfg.tau_end / cfg.tau_start) ** frac
         loss, g = grad_fn(w, x, ident, tau, hw, norm, cfg, apply_fn)
@@ -180,10 +430,7 @@ def soft_sort_baseline(
     """Pure SoftSort with the same budget (R*I steps by default)."""
     x = jnp.asarray(x, jnp.float32)
     norm = jnp.float32(mean_pairwise_distance(x))
-    if cfg.use_kernel:
-        from repro.kernels.ops import softsort_apply as apply_fn
-    else:
-        apply_fn = functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+    apply_fn = _select_apply_fn(cfg)
     steps = steps or cfg.rounds * cfg.inner_steps
     order, loss = _softsort_train(x, norm, hw=hw, cfg=cfg, apply_fn=apply_fn,
                                   steps=steps)

@@ -54,15 +54,25 @@ def softsort_apply_chunked(
     """Streaming (P_soft @ x, column_sums(P_soft)) without an (N, N) array.
 
     Args:
-      w: (N,) sort keys (the N learnable parameters).
-      x: (N, d) payload vectors to be re-ordered.
+      w: (N,) sort keys (the N learnable parameters), or (B, N) for a
+        batch of B independent instances sharing one ``tau``.
+      x: (N, d) payload vectors to be re-ordered ((B, N, d) when batched).
       tau: temperature.
-      chunk: rows of P evaluated per step; memory is O(chunk * N).
+      chunk: rows of P evaluated per step; memory is O(chunk * N)
+        (O(B * chunk * N) batched — the batch stays vectorized inside
+        each streamed row block, the same layout the batched engine's
+        vmap produces).
 
     Returns:
-      y: (N, d) soft-sorted payload.
-      colsum: (N,) column sums of P_soft (for the stochastic loss, eq. 3).
+      y: (N, d) soft-sorted payload ((B, N, d) batched).
+      colsum: (N,) column sums of P_soft, for the stochastic loss eq. 3
+        ((B, N) batched).
     """
+    if w.ndim == 2:
+        assert x.ndim == 3 and x.shape[:2] == w.shape, (w.shape, x.shape)
+        return jax.vmap(
+            lambda wi, xi: softsort_apply_chunked(wi, xi, tau, chunk)
+        )(w, x)
     n = w.shape[0]
     assert n % chunk == 0 or n < chunk, (n, chunk)
     if n <= chunk:

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernel layer for the paper's compute hot spot: the fused
+# SoftSort apply (P_soft @ x, colsum(P_soft)) streamed flash-attention
+# style, plus the flash attention used by the LM serving workloads.
+#
+#   ops.py              — public custom-VJP wrapper ``softsort_apply``;
+#                         accepts (N,)/(N, d) or batched (B, N)/(B, N, d)
+#   softsort_apply.py   — the forward kernels (batch = outermost grid dim)
+#   ref.py              — O(N^2) pure-jnp oracle the tests assert against
+#
+# Kernels self-select ``interpret=True`` off-TPU, so this package works
+# (slowly) on CPU — CI exercises exactly that path.
+from repro.kernels.ops import softsort_apply  # noqa: F401
+from repro.kernels.ref import softsort_apply_ref  # noqa: F401

@@ -5,11 +5,22 @@ in O(N * block) memory with a custom VJP whose backward pass re-streams
 the score blocks (flash-attention style recomputation) instead of saving
 an N^2 residual.
 
-The forward runs the Pallas TPU kernels from ``softsort_apply.py``
-(``interpret=True`` automatically off-TPU); the backward is a chunked
-``lax.scan`` in plain jnp — it is bandwidth-bound and XLA fuses it well,
-so a hand kernel there would add risk without a roofline win (see
-EXPERIMENTS.md §Perf for the measurement).
+Shape convention (batched throughput path, used by
+``shuffle_soft_sort_batched`` and the serving layer):
+
+  * unbatched — ``w: (N,)``, ``x: (N, d)``  ->  ``y: (N, d)``, ``c: (N,)``
+  * batched   — ``w: (B, N)``, ``x: (B, N, d)``  ->  ``y: (B, N, d)``,
+    ``c: (B, N)``; every batch instance is an independent SoftSort with
+    a shared scalar ``tau``.
+
+Internally everything runs batched: the unbatched call is the B = 1
+special case, so there is exactly one kernel code path.  The forward
+runs the Pallas TPU kernels from ``softsort_apply.py`` with the batch as
+the outermost grid dimension (``interpret=True`` automatically off-TPU);
+the backward is a chunked ``lax.scan`` in plain jnp — it is
+bandwidth-bound and XLA fuses it well, so a hand kernel there would add
+risk without a roofline win (see EXPERIMENTS.md §Perf for the
+measurement).
 """
 from __future__ import annotations
 
@@ -35,14 +46,18 @@ def _on_tpu() -> bool:
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def softsort_apply(w, x, tau, block_rows: int = 256, block_cols: int = 256,
                    bwd_chunk: int = 256):
-    """Fused (P_soft @ x, colsum(P_soft)); w: (N,), x: (N, d), tau scalar."""
+    """Fused (P_soft @ x, colsum(P_soft)); w: (N,) or (B, N), tau scalar."""
     y, c = _fwd_impl(w, x, tau, block_rows, block_cols)
     return y, c
 
 
 def _fwd_impl(w, x, tau, block_rows, block_cols):
-    n, d = x.shape
-    assert w.shape == (n,), (w.shape, n)
+    batched = w.ndim == 2
+    wb = w if batched else w[None]
+    xb = x if batched else x[None]
+    bsz, n = wb.shape
+    d = xb.shape[-1]
+    assert xb.shape == (bsz, n, d), (w.shape, x.shape)
     br = min(block_rows, _round_up(n, _SUBLANE))
     bc = min(block_cols, _round_up(n, _LANE))
     np_ = _round_up(n, max(br, bc))
@@ -51,21 +66,22 @@ def _fwd_impl(w, x, tau, block_rows, block_cols):
     bc = min(bc, np_)
     dp = _round_up(d, _LANE)
 
-    perm = jnp.argsort(jax.lax.stop_gradient(w))
-    ws = w[perm]
+    perm = jnp.argsort(jax.lax.stop_gradient(wb), axis=-1)
+    ws = jnp.take_along_axis(wb, perm, axis=-1)
 
     pad_n = np_ - n
-    # Pad rows of ws with increasing finite values (sliced off), cols of w
-    # with anything (masked in-kernel), x with zeros.
-    ws_p = jnp.pad(ws, (0, pad_n), constant_values=0.0).reshape(np_, 1)
-    w_p = jnp.pad(w, (0, pad_n), constant_values=0.0).reshape(1, np_)
-    x_p = jnp.pad(x.astype(jnp.float32), ((0, pad_n), (0, dp - d)))
+    # Pad rows of ws with finite values (masked as rows, sliced off), cols
+    # of w with anything (masked in-kernel), x with zeros.
+    ws_p = jnp.pad(ws, ((0, 0), (0, pad_n))).reshape(bsz, np_, 1)
+    w_p = jnp.pad(wb, ((0, 0), (0, pad_n))).reshape(bsz, 1, np_)
+    x_p = jnp.pad(xb.astype(jnp.float32), ((0, 0), (0, pad_n), (0, dp - d)))
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
 
     y_p, c_p = softsort_apply_fwd_pallas(
         ws_p.astype(jnp.float32), w_p.astype(jnp.float32), x_p, tau_arr,
         n=n, br=br, bc=bc, interpret=not _on_tpu())
-    return y_p[:n, :d], c_p[0, :n]
+    y, c = y_p[:, :n, :d], c_p[:, 0, :n]
+    return (y, c) if batched else (y[0], c[0])
 
 
 def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk):
@@ -76,53 +92,64 @@ def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk):
 def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
     w, x, tau = res
     dy, dc = cot
-    n, d = x.shape
+    batched = w.ndim == 2
+    wb = w if batched else w[None]
+    xb = x if batched else x[None]
+    dyb = dy if batched else dy[None]
+    dcb = dc if batched else dc[None]
+    bsz, n = wb.shape
+    d = xb.shape[-1]
     chunk = min(bwd_chunk, n)
     # Pad the row dimension so chunks tile evenly; padded rows get zero
     # cotangent so they contribute nothing.
     np_ = _round_up(n, chunk)
     pad = np_ - n
 
-    perm = jnp.argsort(jax.lax.stop_gradient(w))
-    ws = w[perm]
+    perm = jnp.argsort(jax.lax.stop_gradient(wb), axis=-1)
+    ws = jnp.take_along_axis(wb, perm, axis=-1)
     big = jnp.max(jax.lax.stop_gradient(ws)) + 1.0 if n else 0.0
-    ws_p = jnp.pad(ws, (0, pad), constant_values=big)
-    dy_p = jnp.pad(dy.astype(jnp.float32), ((0, pad), (0, 0)))
+    ws_p = jnp.pad(ws, ((0, 0), (0, pad)), constant_values=big)
+    dy_p = jnp.pad(dyb.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
 
     row_valid = (jnp.arange(np_) < n).astype(jnp.float32)
 
-    ws_blocks = ws_p.reshape(np_ // chunk, chunk)
-    dy_blocks = dy_p.reshape(np_ // chunk, chunk, d)
-    valid_blocks = row_valid.reshape(np_ // chunk, chunk)
+    nb = np_ // chunk
+    # Scan over row blocks; batch stays a vectorized leading dim inside
+    # each step, so peak live memory is O(B * chunk * N).
+    ws_blocks = ws_p.reshape(bsz, nb, chunk).transpose(1, 0, 2)
+    dy_blocks = dy_p.reshape(bsz, nb, chunk, d).transpose(1, 0, 2, 3)
+    valid_blocks = row_valid.reshape(nb, chunk)
 
-    xf = x.astype(jnp.float32)
-    dcf = dc.astype(jnp.float32)
+    xf = xb.astype(jnp.float32)
+    dcf = dcb.astype(jnp.float32)
 
     def body(carry, blk):
-        dws_prev_unused, dw_cols, dx, dtau = carry
-        ws_b, dy_b, valid_b = blk              # (chunk,), (chunk, d), (chunk,)
-        delta = ws_b[:, None] - w[None, :]     # (chunk, N)
+        dw_cols, dx, dtau = carry
+        ws_b, dy_b, valid_b = blk      # (B, chunk), (B, chunk, d), (chunk,)
+        delta = ws_b[:, :, None] - wb[:, None, :]          # (B, chunk, N)
         s = -jnp.abs(delta) / tau
         p = jax.nn.softmax(s, axis=-1)
         # dP_ij = dy_i . x_j + dc_j   (padded rows are not rows of P: mask)
-        dp = dy_b @ xf.T + dcf[None, :]        # (chunk, N)
+        dp = jnp.einsum("bcd,bnd->bcn", dy_b, xf) + dcf[:, None, :]
         dsum = jnp.sum(p * dp, axis=-1, keepdims=True)
-        ds = p * (dp - dsum) * valid_b[:, None]  # (chunk, N)
-        p = p * valid_b[:, None]               # mask dx contribution too
+        ds = p * (dp - dsum) * valid_b[None, :, None]      # (B, chunk, N)
+        p = p * valid_b[None, :, None]     # mask dx contribution too
         sgn = jnp.sign(delta)
-        dws_b = jnp.sum(ds * (-sgn), axis=-1) / tau       # (chunk,)
-        dw_cols = dw_cols + jnp.sum(ds * sgn, axis=0) / tau
-        dx = dx + p.T @ dy_b
+        dws_b = jnp.sum(ds * (-sgn), axis=-1) / tau        # (B, chunk)
+        dw_cols = dw_cols + jnp.sum(ds * sgn, axis=1) / tau
+        dx = dx + jnp.einsum("bcn,bcd->bnd", p, dy_b)
         dtau = dtau + jnp.sum(ds * (-s)) / tau
-        return (dws_prev_unused, dw_cols, dx, dtau), dws_b
+        return (dw_cols, dx, dtau), dws_b
 
-    init = (jnp.zeros(()), jnp.zeros_like(w, jnp.float32),
-            jnp.zeros_like(xf), jnp.zeros((), jnp.float32))
-    (_, dw_cols, dx, dtau), dws_stack = jax.lax.scan(
+    init = (jnp.zeros_like(wb, jnp.float32), jnp.zeros_like(xf),
+            jnp.zeros((), jnp.float32))
+    (dw_cols, dx, dtau), dws_stack = jax.lax.scan(
         body, init, (ws_blocks, dy_blocks, valid_blocks))
-    dws = dws_stack.reshape(np_)[:n]
+    dws = dws_stack.transpose(1, 0, 2).reshape(bsz, np_)[:, :n]
     # Scatter the sorted-row gradient back through the permutation.
-    dw = dw_cols.at[perm].add(dws)
+    dw = dw_cols.at[jnp.arange(bsz)[:, None], perm].add(dws)
+    if not batched:
+        dw, dx = dw[0], dx[0]
     return dw.astype(w.dtype), dx.astype(x.dtype), dtau
 
 

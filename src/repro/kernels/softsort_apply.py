@@ -1,28 +1,38 @@
-"""Fused flash-style SoftSort-apply Pallas TPU kernels.
+"""Fused flash-style SoftSort-apply Pallas TPU kernels (batched).
 
-Computes, without ever materializing the (N, N) soft permutation matrix:
+Computes, without ever materializing the (N, N) soft permutation matrix,
+for every instance b of a leading batch axis:
 
-    P_ij   = softmax_j( -|sort(w)_i - w_j| / tau )
-    y      = P @ x          (N, d)
-    colsum = sum_i P_ij     (N,)
+    P[b]_ij   = softmax_j( -|sort(w[b])_i - w[b]_j| / tau )
+    y[b]      = P[b] @ x[b]          (B, N, d)
+    colsum[b] = sum_i P[b]_ij        (B, N)
 
 Structure is exactly flash attention with an L1-distance score and the
 sorted keys playing the role of queries:
 
   * ``_stats_kernel``  — pass 1: streaming row max ``m`` and denominator
-    ``l`` over column blocks (grid = (Ni, Nj), j innermost; m/l output
+    ``l`` over column blocks (grid = (B, Ni, Nj), j innermost; m/l output
     blocks are revisited consecutively so they live in VMEM as
     accumulators — the TPU sequential-grid idiom).
   * ``_apply_kernel``  — pass 2: exact P block = exp(s - m)/l, fused
     (Br, Bc) @ (Bc, d) MXU matmul accumulated into the y block.
-  * ``_colsum_kernel`` — pass 2': same P block math with the grid
-    transposed (j outer, i inner) so the colsum block accumulates over
-    row blocks.
+  * ``_colsum_kernel`` — pass 2': same P block math with the i/j grid
+    axes transposed (j outer, i inner) so the colsum block accumulates
+    over row blocks.
+
+The batch axis is the OUTERMOST grid dimension: each instance is an
+independent sweep over its own (Ni, Nj) tile space, so the accumulator
+idiom above is untouched — b changes only after an instance's tiles are
+exhausted.  Instances share one scalar ``tau`` (the trainer anneals a
+single schedule across the whole batch).  The batch block size is
+``None`` (squeezed), so the kernels themselves see the same 2-D blocks
+as the single-problem version — this file's kernels serve both; the
+unbatched wrapper in ``repro.kernels.ops`` simply runs B = 1.
 
 VMEM working set per step ~ Br*Bc (scores) + Bc*d (x block) + Br*d
 (y accumulator) floats; with the default Br = Bc = 256, d <= 512 this is
-well under the ~16 MB/core budget.  Block shapes are (8k, 128m)-aligned
-so the MXU sees aligned contractions.
+well under the ~16 MB/core budget and independent of B.  Block shapes
+are (8k, 128m)-aligned so the MXU sees aligned contractions.
 
 All kernels mask columns/rows >= n (true length) with -inf / zero, so
 the wrapper may pad N up to block multiples with arbitrary finite
@@ -56,7 +66,7 @@ def _row_mask(i, br, n):
 
 
 def _stats_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, *, n: int, bc: int):
-    j = pl.program_id(1)
+    j = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
     s = _score(ws_ref[...], w_ref[...], inv_tau)               # (Br, Bc)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
@@ -76,7 +86,7 @@ def _stats_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, *, n: int, bc: int):
 
 def _apply_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, y_ref,
                   *, n: int, bc: int):
-    j = pl.program_id(1)
+    j = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
     s = _score(ws_ref[...], w_ref[...], inv_tau)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
@@ -91,9 +101,9 @@ def _apply_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, y_ref,
 
 def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
                    *, n: int, br: int, bc: int):
-    # Grid is (Nj, Ni): i innermost so the c block accumulates in VMEM.
-    j = pl.program_id(0)
-    i = pl.program_id(1)
+    # Grid is (B, Nj, Ni): i innermost so the c block accumulates in VMEM.
+    j = pl.program_id(1)
+    i = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
     s = _score(ws_ref[...], w_ref[...], inv_tau)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
@@ -108,67 +118,68 @@ def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
 
 
 def softsort_apply_fwd_pallas(
-    ws: jnp.ndarray,      # (Np, 1) sorted keys (rows), padded
-    w: jnp.ndarray,       # (1, Np) unsorted keys (cols), padded
-    x: jnp.ndarray,       # (Np, dp) payload, padded
-    tau: jnp.ndarray,     # (1, 1)
+    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded
+    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded
+    x: jnp.ndarray,       # (B, Np, dp) payload, padded
+    tau: jnp.ndarray,     # (1, 1) — shared across the batch
     *,
     n: int,               # true length
     br: int,
     bc: int,
     interpret: bool,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    np_, dp = x.shape
+    """Batched fused forward: returns (y (B, Np, dp), colsum (B, 1, Np))."""
+    bsz, np_, dp = x.shape
     ni, nj = np_ // br, np_ // bc
     f32 = jnp.float32
 
     m, l = pl.pallas_call(
         functools.partial(_stats_kernel, n=n, bc=bc),
-        grid=(ni, nj),
+        grid=(bsz, ni, nj),
         in_specs=[
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # ws rows
-            pl.BlockSpec((1, bc), lambda i, j: (0, j)),    # w cols
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # tau
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # ws rows
+            pl.BlockSpec((None, 1, bc), lambda b, i, j: (b, 0, j)),   # w cols
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),             # tau
         ],
         out_specs=[
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # m
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # l
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # m
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # l
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((np_, 1), f32),
-            jax.ShapeDtypeStruct((np_, 1), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
         ],
         interpret=interpret,
     )(ws, w, tau)
 
     y = pl.pallas_call(
         functools.partial(_apply_kernel, n=n, bc=bc),
-        grid=(ni, nj),
+        grid=(bsz, ni, nj),
         in_specs=[
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # ws
-            pl.BlockSpec((1, bc), lambda i, j: (0, j)),    # w
-            pl.BlockSpec((bc, dp), lambda i, j: (j, 0)),   # x col block
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # tau
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # m
-            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),    # l
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # ws
+            pl.BlockSpec((None, 1, bc), lambda b, i, j: (b, 0, j)),   # w
+            pl.BlockSpec((None, bc, dp), lambda b, i, j: (b, j, 0)),  # x block
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),             # tau
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # m
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # l
         ],
-        out_specs=pl.BlockSpec((br, dp), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((np_, dp), f32),
+        out_specs=pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, np_, dp), f32),
         interpret=interpret,
     )(ws, w, x, tau, m, l)
 
     colsum = pl.pallas_call(
         functools.partial(_colsum_kernel, n=n, br=br, bc=bc),
-        grid=(nj, ni),
+        grid=(bsz, nj, ni),
         in_specs=[
-            pl.BlockSpec((br, 1), lambda j, i: (i, 0)),    # ws
-            pl.BlockSpec((1, bc), lambda j, i: (0, j)),    # w
-            pl.BlockSpec((1, 1), lambda j, i: (0, 0)),     # tau
-            pl.BlockSpec((br, 1), lambda j, i: (i, 0)),    # m
-            pl.BlockSpec((br, 1), lambda j, i: (i, 0)),    # l
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # ws
+            pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # w
+            pl.BlockSpec((1, 1), lambda b, j, i: (0, 0)),             # tau
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # m
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # l
         ],
-        out_specs=pl.BlockSpec((1, bc), lambda j, i: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((1, np_), f32),
+        out_specs=pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, 1, np_), f32),
         interpret=interpret,
     )(ws, w, tau, m, l)
 

@@ -1,18 +1,34 @@
-"""Batched serving driver: continuous-batching-style loop on CPU scale.
+"""Batched serving drivers: continuous-batching loops on CPU scale.
 
-    PYTHONPATH=src python -m repro.launch.serve \
-        --arch qwen1.5-0.5b --preset tiny --requests 8 --max-new 32
+Two workloads share this entrypoint:
 
-Requests arrive with different prompt lengths; the scheduler right-pads
-into a fixed decode batch, prefills once, then decodes step-locked with
-per-request stop positions (the fixed-shape analogue of continuous
-batching — slot reuse keeps XLA shapes static, which is what a TPU
-serving stack needs).
+* ``--workload lm`` (default) — LM decode serving.  Requests arrive with
+  different prompt lengths; the scheduler right-pads into a fixed decode
+  batch, prefills once, then decodes step-locked with per-request stop
+  positions (the fixed-shape analogue of continuous batching — slot
+  reuse keeps XLA shapes static, which is what a TPU serving stack
+  needs).
+
+      PYTHONPATH=src python -m repro.launch.serve \
+          --arch qwen1.5-0.5b --preset tiny --requests 8 --max-new 32
+
+* ``--workload sort`` — grid-sorting serving.  ``SortServer`` runs a
+  request-coalescing queue: concurrent ``submit()`` calls (e.g. one per
+  user upload) are drained into one ``shuffle_soft_sort_batched`` device
+  call, so R requests cost one batched program of B = R instances
+  instead of R sequential ShuffleSoftSort runs.
+
+      PYTHONPATH=src python -m repro.launch.serve \
+          --workload sort --requests 8 --sort-n 256 --rounds 30
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import queue
+import threading
 import time
+from concurrent.futures import Future
 
 import numpy as np
 
@@ -30,14 +46,190 @@ from repro.models import (
 )
 
 
+# --------------------------------------------------------------------------
+# Sort serving: request-coalescing queue over shuffle_soft_sort_batched.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _SortRequest:
+    x: np.ndarray            # (N, d)
+    key: jax.Array           # PRNG key for this request
+    future: Future
+
+
+class SortServer:
+    """Coalesces concurrent grid-sort requests into batched device calls.
+
+    All requests must share one problem signature (N = hw[0] * hw[1] and
+    feature dim d) — the fixed-shape contract that keeps XLA from
+    recompiling, mirroring the LM driver's static decode batch.  A
+    background worker blocks on the queue, drains up to ``max_batch``
+    requests that arrive within ``max_wait_ms`` of the first, stacks
+    them, and runs ONE ``shuffle_soft_sort_batched`` call (optionally
+    with ``n_restarts`` seeds per request).  Each future resolves to the
+    per-request ``(order, sorted, losses)`` triple of the winning
+    restart — bit-identical to a sequential ``shuffle_soft_sort`` call
+    with the same key when ``n_restarts == 1``.
+    """
+
+    def __init__(self, hw, d, cfg=None, max_batch: int = 8,
+                 max_wait_ms: float = 2.0, n_restarts: int = 1):
+        from repro.core.shufflesoftsort import ShuffleSoftSortConfig
+        self.hw = tuple(hw)
+        self.n = self.hw[0] * self.hw[1]
+        self.d = d
+        self.cfg = cfg or ShuffleSoftSortConfig()
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.n_restarts = n_restarts
+        self.stats = {"requests": 0, "batches": 0, "batch_sizes": []}
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+
+    def submit(self, x: np.ndarray, key=None) -> Future:
+        """Enqueue one (N, d) problem; returns a Future of
+        ``(order (N,), sorted (N, d), losses (R,))``."""
+        if self._stop.is_set():
+            raise RuntimeError("SortServer is closed")
+        x = np.asarray(x, np.float32)
+        assert x.shape == (self.n, self.d), (x.shape, (self.n, self.d))
+        if key is None:
+            key = jax.random.PRNGKey(np.random.randint(0, 2**31 - 1))
+        fut: Future = Future()
+        self._q.put(_SortRequest(x, key, fut))
+        return fut
+
+    def close(self):
+        self._stop.set()
+        self._q.put(None)                    # wake the worker
+        self._worker.join(timeout=30)
+
+    # ---- worker ----------------------------------------------------------
+
+    def _drain(self):
+        """Block for the first request, then coalesce a batch."""
+        first = self._q.get()
+        if first is None:
+            return []
+        batch = [first]
+        deadline = time.monotonic() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            timeout = deadline - time.monotonic()
+            try:
+                req = self._q.get(timeout=max(timeout, 0.0))
+            except queue.Empty:
+                break
+            if req is None:
+                break
+            batch.append(req)
+        return batch
+
+    def _run(self):
+        from repro.core.shufflesoftsort import shuffle_soft_sort_batched
+        while not self._stop.is_set():
+            batch = self._drain()
+            if not batch:
+                continue
+            try:
+                xs = jnp.asarray(np.stack([r.x for r in batch]))
+                if self.n_restarts == 1:
+                    keys = jnp.stack([r.key for r in batch])[:, None]
+                else:
+                    # Distinct per-restart streams derived from each
+                    # request key (restart 0 keeps the raw key so the
+                    # single-restart result stays reproducible).
+                    keys = jnp.stack([
+                        jnp.concatenate(
+                            [r.key[None], jax.random.split(
+                                jax.random.fold_in(r.key, 1),
+                                self.n_restarts - 1)])
+                        for r in batch])
+                res = shuffle_soft_sort_batched(
+                    xs, self.hw, self.cfg, n_restarts=self.n_restarts,
+                    keys=keys)
+                self.stats["requests"] += len(batch)
+                self.stats["batches"] += 1
+                self.stats["batch_sizes"].append(len(batch))
+                for i, r in enumerate(batch):
+                    r.future.set_result(
+                        (res.order[i], res.sorted[i], res.losses[i]))
+            except Exception as e:      # pragma: no cover - defensive
+                for r in batch:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+        # Shutdown: fail any request still queued so no caller blocks
+        # forever on a future the worker will never fill.
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if req is not None and not req.future.done():
+                req.future.set_exception(RuntimeError("SortServer closed"))
+
+
+def serve_sorts(args):
+    """CLI driver: fire concurrent sort requests at a SortServer."""
+    from repro.core.metrics import mean_neighbor_distance
+    from repro.core.shufflesoftsort import ShuffleSoftSortConfig
+
+    hw = (args.sort_hw, args.sort_n // args.sort_hw)
+    assert hw[0] * hw[1] == args.sort_n, (args.sort_n, args.sort_hw)
+    cfg = ShuffleSoftSortConfig(rounds=args.rounds,
+                                chunk=min(256, args.sort_n))
+    server = SortServer(hw, d=args.sort_d, cfg=cfg,
+                        max_batch=args.max_batch, max_wait_ms=args.wait_ms,
+                        n_restarts=args.restarts)
+    rng = np.random.RandomState(0)
+    xs = rng.rand(args.requests, args.sort_n, args.sort_d).astype(np.float32)
+
+    t0 = time.time()
+    futs = [server.submit(xs[i], key=jax.random.PRNGKey(i))
+            for i in range(args.requests)]
+    results = [f.result(timeout=600) for f in futs]
+    wall = time.time() - t0
+    server.close()
+
+    improved = sum(
+        mean_neighbor_distance(r[1], hw) < mean_neighbor_distance(x, hw)
+        for r, x in zip(results, xs))
+    sps = args.requests / max(wall, 1e-9)
+    sizes = server.stats["batch_sizes"]
+    print(f"served {args.requests} sort requests in {wall:.2f}s "
+          f"({sps:.2f} sorts/s) across {server.stats['batches']} device "
+          f"batches (sizes {sizes}); {improved}/{args.requests} layouts "
+          f"improved")
+    return {"sorts_per_s": sps, "batches": server.stats["batches"],
+            "improved": int(improved)}
+
+
+# --------------------------------------------------------------------------
+# LM decode serving.
+# --------------------------------------------------------------------------
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("lm", "sort"), default="lm")
     ap.add_argument("--arch", choices=list_archs(), default="qwen1.5-0.5b")
     ap.add_argument("--preset", choices=PRESETS, default="tiny")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--prompt-len", type=int, default=24)
+    # sort-workload knobs
+    ap.add_argument("--sort-n", type=int, default=256)
+    ap.add_argument("--sort-hw", type=int, default=16,
+                    help="grid height; width = sort-n / sort-hw")
+    ap.add_argument("--sort-d", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--restarts", type=int, default=1)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--wait-ms", type=float, default=5.0)
     args = ap.parse_args(argv)
+
+    if args.workload == "sort":
+        return serve_sorts(args)
 
     cfg = reduced_config(get_config(args.arch), **PRESETS[args.preset])
     params, _ = init_model(jax.random.PRNGKey(0), cfg)

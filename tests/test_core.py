@@ -1,6 +1,7 @@
 """Unit + property tests for the permutation-learning core."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully where absent
 from hypothesis import given, settings, strategies as st
 
 import jax

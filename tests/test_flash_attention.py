@@ -2,6 +2,7 @@
 pure-jnp oracle (interpret mode on CPU; TPU is the target)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully where absent
 from hypothesis import given, settings, strategies as st
 
 import jax

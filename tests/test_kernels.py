@@ -5,6 +5,7 @@ assertion is against the pure-jnp O(N^2) oracle.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully where absent
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -3,6 +3,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # degrade gracefully where absent
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Docs link checker: internal markdown links/anchors must resolve.
+
+    python tools/check_doc_links.py README.md EXPERIMENTS.md ...
+
+Checks, for each given markdown file:
+  * relative links `[..](path)` point at files/dirs that exist;
+  * `§Section` references into EXPERIMENTS.md (the convention used by
+    code docstrings) name a real `## §Section` heading.
+
+External (http/https/mailto) links are not fetched.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{path}: broken link -> {target}")
+    return errors
+
+
+def check_section_refs(repo: pathlib.Path) -> list[str]:
+    """Every section mention of the experiments log must have a heading."""
+    exp = repo / "EXPERIMENTS.md"
+    if not exp.exists():
+        return [f"{exp} is missing but referenced by docstrings"]
+    headings = set(re.findall(r"^##\s+(§\S+)", exp.read_text(), re.M))
+    errors = []
+    for src in list(repo.rglob("*.py")) + list(repo.glob("*.md")):
+        if ".git" in src.parts:
+            continue
+        for ref in re.findall(r"EXPERIMENTS\.md\s+(§[\w-]+)", src.read_text()):
+            if ref not in headings:
+                errors.append(f"{src}: dangling reference EXPERIMENTS.md {ref}")
+    return errors
+
+
+def main() -> int:
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    errors = []
+    for name in sys.argv[1:]:
+        p = pathlib.Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+    errors.extend(check_section_refs(repo))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(sys.argv) - 1} files; {len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
