@@ -16,10 +16,28 @@ grid) and a longer budget.  Compile time is excluded (one warmup per
 shape); per-seed results of the two paths are bit-identical, so this is
 a pure scheduling/throughput comparison.  Results fill the table in
 EXPERIMENTS.md §Perf.
+
+Scaling mode (EXPERIMENTS.md §Scaling):
+
+    PYTHONPATH=src python -m benchmarks.batched_bench --devices 1 2 8
+
+spawns one worker subprocess per requested device count (each with
+``XLA_FLAGS=--xla_force_host_platform_device_count=<D>`` so the sweep
+runs anywhere), and in each sweeps the devices x B x S grid over three
+engines — vmap, mesh-sharded, and the successive-halving restart
+tournament — recording wall time, best-restart loss, and the
+tournament's executed-rounds fraction.  The aggregate is written to
+``BENCH_scaling.json``.  On a forced-host CPU the "devices" are slices
+of one physical socket, so treat the timings as shape/overhead signals;
+the quality columns (tournament loss vs full loss) are exact.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -29,6 +47,7 @@ import jax.numpy as jnp
 
 from repro.core.shufflesoftsort import (
     ShuffleSoftSortConfig,
+    restart_tournament,
     shuffle_soft_sort,
     shuffle_soft_sort_batched,
 )
@@ -81,6 +100,158 @@ def bench_cell(b: int, n: int, d: int, cfg: ShuffleSoftSortConfig,
     }
 
 
+# --------------------------------------------------------------------------
+# Scaling sweep: devices x B x S over vmap / sharded / tournament engines.
+# --------------------------------------------------------------------------
+
+def bench_scaling_cell(b: int, s: int, n: int, d: int,
+                       cfg: ShuffleSoftSortConfig, n_devices: int,
+                       rungs: int, cull: float) -> dict:
+    """One devices x B x S cell: time the three engines on identical
+    problems/keys and audit the sharded path's bit-identity."""
+    from repro.launch.mesh import make_sort_mesh
+
+    hw = _square_hw(n)
+    xs = jax.random.uniform(jax.random.PRNGKey(0), (b, n, d))
+    keys = jax.random.split(jax.random.PRNGKey(1), b * s)
+    mesh = make_sort_mesh(n_devices)
+
+    def run_vmap():
+        return shuffle_soft_sort_batched(xs, hw, cfg, n_restarts=s,
+                                         keys=keys)
+
+    def run_shard():
+        return shuffle_soft_sort_batched(xs, hw, cfg, n_restarts=s,
+                                         keys=keys, mesh=mesh)
+
+    def run_tour():
+        return restart_tournament(xs, hw, cfg, n_restarts=s, keys=keys,
+                                  cull_fraction=cull, n_rungs=rungs,
+                                  mesh=mesh)
+
+    ref, shd, _ = run_vmap(), run_shard(), run_tour()    # compile warmup
+    assert np.array_equal(ref.all_orders, shd.all_orders), (b, s, n_devices)
+
+    t0 = time.perf_counter()
+    ref = run_vmap()
+    t_vmap = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_shard()
+    t_shard = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tour = run_tour()
+    t_tour = time.perf_counter() - t0
+
+    full_loss = float(ref.losses[:, -1].mean())
+    tour_loss = float(tour.final_loss.mean())
+    return {
+        "devices": n_devices, "B": b, "S": s, "N": n,
+        "rounds": cfg.rounds, "rungs": rungs, "cull_fraction": cull,
+        "vmap_s": t_vmap, "shard_s": t_shard, "tournament_s": t_tour,
+        "shard_speedup": t_vmap / t_shard,
+        "tournament_speedup": t_vmap / t_tour,
+        "full_best_loss": full_loss,
+        "tournament_best_loss": tour_loss,
+        # > 0 when culling dropped the seed that would have won.
+        "tournament_loss_gap": tour_loss - full_loss,
+        "tournament_rounds_frac": tour.rounds_run / tour.rounds_full,
+    }
+
+
+def run_scaling_worker(args) -> list[dict]:
+    """In-process sweep at THIS process's device count."""
+    n_dev = len(jax.devices())
+    cfg = ShuffleSoftSortConfig(rounds=args.rounds or 8, inner_steps=4,
+                                chunk=256)
+    rows = []
+    for b in (args.bs or (4, 16)):
+        for s in (args.restarts or (2, 8)):
+            rows.append(bench_scaling_cell(
+                b, s, args.n, args.d, cfg, n_dev,
+                rungs=args.tournament_rungs, cull=args.cull_fraction))
+    return rows
+
+
+def run_scaling_sweep(args) -> dict:
+    """Spawn one worker per device count (forced host devices must be
+    set before jax initializes, hence subprocesses), aggregate, and
+    write the BENCH_scaling.json artifact."""
+    cells = []
+    for n_dev in args.devices:
+        env = dict(os.environ)
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n_dev}".strip())
+        cmd = [sys.executable, "-m", "benchmarks.batched_bench",
+               "--scaling-worker", "--n", str(args.n), "--d", str(args.d),
+               "--rounds", str(args.rounds or 8),
+               "--tournament-rungs", str(args.tournament_rungs),
+               "--cull-fraction", str(args.cull_fraction)]
+        if args.bs:
+            cmd += ["--bs"] + [str(x) for x in args.bs]
+        if args.restarts:
+            cmd += ["--restarts"] + [str(x) for x in args.restarts]
+        out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             check=True)
+        line = [ln for ln in out.stdout.splitlines()
+                if ln.startswith("SCALING_JSON ")][-1]
+        rows = json.loads(line[len("SCALING_JSON "):])
+        for r in rows:
+            assert r["devices"] == n_dev, (r["devices"], n_dev)
+        cells.extend(rows)
+    record = {
+        "bench": "batched_bench --devices",
+        "backend": jax.default_backend(),
+        "note": ("forced-host devices share one socket: timings are "
+                 "overhead/shape signals, loss columns are exact"),
+        "cells": cells,
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {len(cells)} cells -> {args.out}")
+    for r in cells:
+        print(f"  dev={r['devices']} B={r['B']} S={r['S']}: "
+              f"shard {r['shard_speedup']:.2f}x, tournament "
+              f"{r['tournament_speedup']:.2f}x at "
+              f"{r['tournament_rounds_frac']:.2f} of the rounds "
+              f"(loss gap {r['tournament_loss_gap']:+.4f})")
+    return record
+
+
+def run_cull_sweep(args) -> list[dict]:
+    """Tournament quality/compute tradeoff: sweep the cull fraction at
+    fixed B x S and compare winner loss against the run-everything
+    engine.  Fills the cull-fraction table in EXPERIMENTS.md §Scaling."""
+    b = (args.bs or [4])[0]
+    s = (args.restarts or [8])[0]
+    n = args.n
+    cfg = ShuffleSoftSortConfig(rounds=args.rounds or 12, inner_steps=4,
+                                chunk=256)
+    hw = _square_hw(n)
+    xs = jax.random.uniform(jax.random.PRNGKey(0), (b, n, args.d))
+    keys = jax.random.split(jax.random.PRNGKey(1), b * s)
+    full = shuffle_soft_sort_batched(xs, hw, cfg, n_restarts=s, keys=keys)
+    full_loss = float(full.losses[:, -1].mean())
+    rows = []
+    print(f"cull sweep: B={b} S={s} N={n} rounds={cfg.rounds} "
+          f"rungs={args.tournament_rungs}; full-engine loss {full_loss:.4f}")
+    for cull in (0.0, 0.25, 0.5, 0.75):
+        res = restart_tournament(xs, hw, cfg, n_restarts=s, keys=keys,
+                                 cull_fraction=cull,
+                                 n_rungs=args.tournament_rungs)
+        row = {
+            "cull_fraction": cull,
+            "rounds_frac": res.rounds_run / res.rounds_full,
+            "final_loss": float(res.final_loss.mean()),
+            "loss_gap_vs_full": float(res.final_loss.mean()) - full_loss,
+        }
+        rows.append(row)
+        print(f"  cull={cull:.2f}: rounds_frac={row['rounds_frac']:.3f} "
+              f"loss={row['final_loss']:.4f} "
+              f"gap={row['loss_gap_vs_full']:+.4f}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -88,7 +259,32 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--d", type=int, default=3)
     ap.add_argument("--bs", type=int, nargs="+", default=None)
+    ap.add_argument("--devices", type=int, nargs="+", default=None,
+                    help="run the scaling sweep at these device counts "
+                         "(one forced-host-device subprocess each) and "
+                         "write BENCH_scaling.json")
+    ap.add_argument("--restarts", type=int, nargs="+", default=None,
+                    help="S values for the scaling sweep")
+    ap.add_argument("--n", type=int, default=256,
+                    help="N for the scaling sweep")
+    ap.add_argument("--tournament-rungs", type=int, default=3)
+    ap.add_argument("--cull-fraction", type=float, default=0.5)
+    ap.add_argument("--out", default="BENCH_scaling.json")
+    ap.add_argument("--cull-sweep", action="store_true",
+                    help="sweep tournament cull fractions at fixed B x S "
+                         "and report the quality/compute tradeoff")
+    ap.add_argument("--scaling-worker", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+
+    if args.scaling_worker:
+        rows = run_scaling_worker(args)
+        print("SCALING_JSON " + json.dumps(rows))
+        return rows
+    if args.cull_sweep:
+        return run_cull_sweep(args)
+    if args.devices:
+        return run_scaling_sweep(args)
 
     ns = (1024, 4096) if args.full else (1024,)
     bs = tuple(args.bs) if args.bs else (1, 8, 64)

@@ -1,5 +1,6 @@
 """Llama-3-405B [arXiv:2407.21783]: 126L dense GQA.  Optimizer moments in
-bf16 so params+moments fit 16 GB/chip on the 256-chip pod (DESIGN.md §7)."""
+bf16 so params+moments fit 16 GB/chip on the 256-chip single-pod mesh
+(topology: ``repro/launch/mesh.py``)."""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

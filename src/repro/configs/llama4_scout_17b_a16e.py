@@ -1,6 +1,7 @@
 """Llama-4-Scout-17B-16E [hf:meta-llama]: MoE top-1 routing, 16 experts.
 (The release interleaves a shared expert; we model pure top-1 routed
-experts every layer — noted in DESIGN.md §Arch-applicability.)"""
+experts every layer — a deliberate simplification, recorded here so the
+config is not mistaken for a faithful replica.)"""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

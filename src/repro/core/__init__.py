@@ -18,6 +18,8 @@ from repro.core.metrics import dpq, mean_neighbor_distance  # noqa: F401
 from repro.core.shufflesoftsort import (  # noqa: F401
     BatchedSortResult,
     ShuffleSoftSortConfig,
+    TournamentResult,
+    restart_tournament,
     shuffle_soft_sort,
     shuffle_soft_sort_batched,
     soft_sort_baseline,

@@ -28,6 +28,15 @@ annealing schedule as one scanned device program when no streaming
 callback is requested, and keeps each problem's best-loss restart.
 Per-seed results are bit-identical to the sequential API.
 
+Above one device, the same engine shards: pass a 1-D "data" mesh
+(``repro.launch.mesh.make_sort_mesh``) and the flattened B x S instance
+axis is shard_mapped across devices — same per-instance program, tail
+shard padded, winner picked by a cross-device argmin — still per-seed
+bit-identical.  ``restart_tournament`` layers successive halving on
+top: anneal in rungs, cull the worst restarts at each boundary, spend
+the freed compute finishing only plausible seeds.  Scaling and
+cull-tradeoff measurements: EXPERIMENTS.md §Scaling.
+
 Return contract, shared by every driver here: ``order`` is the (N,)
 int32 permutation mapping grid cell -> input row, ``sorted`` is
 ``x[order]``, and ``losses`` is the per-round loss trace (leading batch
@@ -43,6 +52,11 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+try:                                      # 0.4.x home (what we validate on)
+    from jax.experimental.shard_map import shard_map
+except ImportError:                       # pragma: no cover - jax >= 0.7
+    from jax import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.losses import grid_sorting_loss, mean_pairwise_distance
 from repro.core.softsort import softsort_apply_chunked
@@ -105,9 +119,17 @@ def _outer_round_impl(x, order, key, tau_r, norm, *, hw,
         w = w - cfg.lr * mhat / (jnp.sqrt(nuhat) + 1e-8)
         return (w, mu, nu, loss)
 
+    # unroll=True: inner_steps is small and static, and an XLA while
+    # loop here miscompiles under shard_map on this jax build —
+    # non-zero shards silently compute different values (bit-identity
+    # breaker found while validating the mesh engine; the unrolled body
+    # is bit-exact on every shard).  Unrolling also fuses the few inner
+    # steps into one block, which is what the short inner loop wants
+    # anyway.
     w, _, _, loss = jax.lax.fori_loop(
         0, cfg.inner_steps, inner,
-        (w0, jnp.zeros_like(w0), jnp.zeros_like(w0), jnp.float32(0.0)))
+        (w0, jnp.zeros_like(w0), jnp.zeros_like(w0), jnp.float32(0.0)),
+        unroll=True)
 
     # Commit the hard permutation through the shuffle:
     #   new_grid[shuf[i]] = x_shuf[sort_idx[i]] = x_cur[shuf[sort_idx[i]]]
@@ -149,13 +171,8 @@ def _outer_round_batched(xs, orders, keys, tau_r, norms, *, hw,
     return jax.vmap(one)(xs, orders, keys, norms)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("hw", "cfg", "apply_fn"),
-    donate_argnums=(1,),
-)
-def _run_rounds_batched(xs, orders, keys, taus, norms, *, hw,
-                        cfg: ShuffleSoftSortConfig, apply_fn):
+def _run_rounds_impl(xs, orders, keys, taus, norms, *, hw,
+                     cfg: ShuffleSoftSortConfig, apply_fn):
     """Whole-schedule batched run: lax.scan over the R outer rounds.
 
     One device program instead of R dispatches — the throughput path the
@@ -164,8 +181,16 @@ def _run_rounds_batched(xs, orders, keys, taus, norms, *, hw,
     vmapped round, consuming the same per-instance key splits), so
     results stay bit-identical to the sequential API per seed.
 
+    Un-jitted on purpose: this is both the body ``_run_rounds_batched``
+    jits for the single-device vmap engine AND the per-shard program
+    ``_run_rounds_sharded`` maps over the mesh "data" axis — the two
+    paths literally run the same code per instance, which is what makes
+    the sharded engine's bit-identity contract hold.
+
     Args:
-      taus: (R,) float32 precomputed outer-round temperature schedule.
+      taus: (R,) float32 precomputed outer-round temperature schedule
+        (any contiguous slice of the full schedule works — the
+        tournament scheduler runs the anneal rung by rung).
 
     Returns:
       (orders (BS, N), keys (BS, 2), losses (R, BS)).
@@ -183,6 +208,105 @@ def _run_rounds_batched(xs, orders, keys, taus, norms, *, hw,
         return (orders, keys), losses
 
     (orders, keys), losses = jax.lax.scan(step, (orders, keys), taus)
+    return orders, keys, losses
+
+
+_run_rounds_batched = functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)(_run_rounds_impl)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "hw", "cfg", "apply_fn"),
+)
+def _run_rounds_sharded(xs, orders, keys, taus, norms, *, mesh, hw,
+                        cfg: ShuffleSoftSortConfig, apply_fn):
+    """Mesh-sharded whole-schedule run: ``_run_rounds_impl`` shard_mapped
+    over the mesh's "data" axis.
+
+    The flattened B x S instance axis is split across devices; each
+    shard runs the identical scanned program on its slice (instances
+    are embarrassingly parallel — no collectives until best-restart
+    selection), so per-seed results are bit-identical to the vmap
+    engine.  Callers pad the leading axis to a multiple of the mesh
+    size first (``_pad_instances``).  Measured scaling lives in
+    EXPERIMENTS.md §Scaling.
+    """
+    body = functools.partial(_run_rounds_impl, hw=hw, cfg=cfg,
+                             apply_fn=apply_fn)
+    # check_rep=False: the body is purely per-shard (no collectives), and
+    # jax 0.4.x's replication checker both rejects some nested-pjit
+    # bodies (TypeError in _check_rep) and — worse — its rewrite pass
+    # silently perturbs values computed on non-zero shards, breaking
+    # the bit-identity contract.  Verified identical with the vmap
+    # engine per seed on 1/2/3/6/8 forced-host devices.
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data"), P(), P("data")),
+        out_specs=(P("data"), P("data"), P(None, "data")),
+        check_rep=False,
+    )(xs, orders, keys, taus, norms)
+
+
+@functools.partial(jax.jit, static_argnames=("b", "s"))
+def _best_restart_device(orders, losses_rb, *, b, s):
+    """Cross-device argmin over the restart axis.
+
+    One jitted program over the still-sharded engine outputs; XLA
+    inserts the gather/reduce collectives, so winner selection is a
+    mesh-native step rather than host post-processing.  (The batched
+    result contract also reports every restart, so the host gathers
+    the full arrays regardless — this function exists to keep the
+    selection itself on-device, and the tests assert it agrees with
+    the host-side argmin exactly.)
+
+    Returns (best (B,) int32, best_orders (B, N) int32).
+    """
+    final = losses_rb[-1, :b * s].reshape(b, s)
+    best = jnp.argmin(final, axis=1)
+    rows = jnp.arange(b) * s + best
+    return best, orders[rows]
+
+
+def _pad_instances(arrs, to: int):
+    """Pad each array's leading instance axis to ``to`` rows by repeating
+    instance 0 — valid (discarded) work, so uneven B x S grids shard
+    over any mesh size."""
+    out = []
+    for a in arrs:
+        p = to - a.shape[0]
+        out.append(a if p == 0 else
+                   jnp.concatenate([a, jnp.repeat(a[:1], p, axis=0)], axis=0))
+    return out
+
+
+def _engine_run(xs_t, orders, keys, taus, norms_t, *, hw, cfg, apply_fn,
+                mesh):
+    """Run one contiguous slice of the anneal on BS flattened instances,
+    dispatching to the vmap engine (``mesh=None``) or the shard_map
+    engine (padding/unpadding the instance axis to the mesh size).
+
+    Returns (orders (BS, N), keys (BS, 2), losses (R_slice, BS)) — the
+    sharded outputs stay device-resident jax Arrays sharded over "data".
+    """
+    taus = jnp.asarray(taus)
+    if mesh is None:
+        return _run_rounds_batched(xs_t, orders, keys, taus, norms_t,
+                                   hw=hw, cfg=cfg, apply_fn=apply_fn)
+    d_mesh = mesh.shape["data"]
+    bs = xs_t.shape[0]
+    pad = (-bs) % d_mesh
+    if pad:
+        xs_t, orders, keys, norms_t = _pad_instances(
+            (xs_t, orders, keys, norms_t), bs + pad)
+    orders, keys, losses = _run_rounds_sharded(
+        xs_t, orders, keys, taus, norms_t,
+        mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
+    if pad:
+        orders, keys, losses = orders[:bs], keys[:bs], losses[:, :bs]
     return orders, keys, losses
 
 
@@ -264,6 +388,44 @@ def shuffle_soft_sort(
 # Batched multi-problem / multi-restart engine.
 # --------------------------------------------------------------------------
 
+def _prep_instances(xs, hw, n_restarts, key, keys):
+    """Normalize the batched-engine inputs into flattened instance arrays.
+
+    Shared by ``shuffle_soft_sort_batched`` and ``restart_tournament``
+    so both consume identical (BS, ...) instance layouts and identical
+    PRNG streams — problem-major order, restart s of problem b at row
+    ``b * S + s``.
+
+    Returns (xs (B, N, d), B, S, N, keys (BS, 2), xs_t (BS, N, d),
+    norms_t (BS,), orders (BS, N)).
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    assert xs.ndim == 3, f"xs must be (B, N, d), got {xs.shape}"
+    b, n, _ = xs.shape
+    s = int(n_restarts)
+    assert s >= 1, n_restarts
+    assert n == hw[0] * hw[1], (n, hw)
+    bs = b * s
+
+    if keys is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(key, bs)
+    keys = jnp.asarray(keys)
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        # New-style typed keys (jax.random.key) — unwrap to raw uint32
+        # data so both key flavours drive identical streams.
+        keys = jax.random.key_data(keys)
+    keys = keys.reshape(bs, 2)
+
+    # Per-problem loss normalization, tiled over restarts.
+    norms = jax.vmap(mean_pairwise_distance)(xs).astype(jnp.float32)
+    xs_t = jnp.repeat(xs, s, axis=0)                     # (BS, N, d)
+    norms_t = jnp.repeat(norms, s, axis=0)               # (BS,)
+    orders = jnp.tile(jnp.arange(n, dtype=jnp.int32), (bs, 1))
+    return xs, b, s, n, keys, xs_t, norms_t, orders
+
+
 @dataclasses.dataclass(frozen=True)
 class BatchedSortResult:
     """Result of ``shuffle_soft_sort_batched`` over B problems x S restarts.
@@ -289,8 +451,9 @@ def shuffle_soft_sort_batched(
     key: jax.Array | None = None,
     keys: jax.Array | None = None,
     callback: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+    mesh=None,
 ) -> BatchedSortResult:
-    """Sort B problems at once, S random restarts each, on one device.
+    """Sort B problems at once, S random restarts each.
 
     Runs B x S independent ShuffleSoftSort instances as a single vmapped
     program: one ``_outer_round_batched`` device call per round instead
@@ -299,10 +462,17 @@ def shuffle_soft_sort_batched(
     N-parameter footprint makes possible (an N^2-parameter method could
     not hold B x S instances in memory).
 
+    With ``mesh`` (a 1-D "data" mesh from
+    ``repro.launch.mesh.make_sort_mesh``) the flattened B x S instance
+    axis is additionally sharded across devices via ``shard_map`` — the
+    same per-instance program, split over the mesh, with the tail shard
+    padded and the winning restart picked by a cross-device argmin.
+    Measured devices x B x S scaling: EXPERIMENTS.md §Scaling.
+
     Each instance consumes exactly the PRNG stream the sequential API
     would: instance (b, s) with key ``keys[b, s]`` returns an order
     bit-identical to ``shuffle_soft_sort(xs[b], hw, cfg,
-    key=keys[b, s])``.
+    key=keys[b, s])`` — on the vmap path AND on any mesh size.
 
     Args:
       xs: (B, N, d) batch of problems; all share N = hw[0] * hw[1].
@@ -315,45 +485,31 @@ def shuffle_soft_sort_batched(
       keys: optional explicit instance keys, shape (B, S, 2) or (B*S, 2)
         uint32, ordered problem-major.
       callback: optional ``f(round, orders (B*S, N), losses (B*S,))``
-        streamed per round (forces a host sync, like the sequential API).
+        streamed per round (forces a host sync, like the sequential
+        API).  Unsupported on the sharded path — streaming every round
+        through the host would defeat the point of the mesh.
+      mesh: optional jax Mesh with a "data" axis; shards the instance
+        grid across its devices.
 
     Returns:
       ``BatchedSortResult`` — see its field docs.
     """
-    xs = jnp.asarray(xs, jnp.float32)
-    assert xs.ndim == 3, f"xs must be (B, N, d), got {xs.shape}"
-    b, n, _ = xs.shape
-    s = int(n_restarts)
-    assert s >= 1, n_restarts
-    assert n == hw[0] * hw[1], (n, hw)
+    if mesh is not None and callback is not None:
+        raise ValueError("callback streaming is not supported on the "
+                         "sharded path; use mesh=None")
+    xs, b, s, n, keys, xs_t, norms_t, orders = _prep_instances(
+        xs, hw, n_restarts, key, keys)
     bs = b * s
-
-    if keys is None:
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        keys = jax.random.split(key, bs)
-    keys = jnp.asarray(keys)
-    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
-        # New-style typed keys (jax.random.key) — unwrap to raw uint32
-        # data so both key flavours drive identical streams.
-        keys = jax.random.key_data(keys)
-    keys = keys.reshape(bs, 2)
-
-    # Per-problem loss normalization, tiled over restarts.
-    norms = jax.vmap(mean_pairwise_distance)(xs).astype(jnp.float32)
-    xs_t = jnp.repeat(xs, s, axis=0)                     # (BS, N, d)
-    norms_t = jnp.repeat(norms, s, axis=0)               # (BS,)
-
     apply_fn = _select_apply_fn(cfg)
-    orders = jnp.tile(jnp.arange(n, dtype=jnp.int32), (bs, 1))
     taus = _tau_schedule(cfg)
 
     if callback is None:
         # Fast path: the whole R-round schedule as one scanned device
-        # program — no per-round host round-trips.
-        orders, _, losses_rb = _run_rounds_batched(
-            xs_t, orders, keys, jnp.asarray(taus), norms_t,
-            hw=hw, cfg=cfg, apply_fn=apply_fn)
+        # program — no per-round host round-trips.  With a mesh the
+        # same program runs per shard of the instance axis.
+        orders, _, losses_rb = _engine_run(
+            xs_t, orders, keys, taus, norms_t,
+            hw=hw, cfg=cfg, apply_fn=apply_fn, mesh=mesh)
         all_losses = np.asarray(losses_rb).T             # (BS, R)
     else:
         # Streaming path: one dispatch per round so the callback can
@@ -372,8 +528,17 @@ def shuffle_soft_sort_batched(
 
     all_losses = all_losses.reshape(b, s, cfg.rounds)    # (B, S, R)
     all_orders = np.asarray(orders).reshape(b, s, n)     # (B, S, N)
-    best = np.argmin(all_losses[:, :, -1], axis=1)       # (B,)
-    order = all_orders[np.arange(b), best]               # (B, N)
+    if mesh is not None:
+        # Winner selection as a cross-device argmin + gather over the
+        # sharded restart axis (identical result to the host argmin
+        # below — asserted in tests/test_sharded.py).
+        best_dev, order_dev = _best_restart_device(orders, losses_rb,
+                                                   b=b, s=s)
+        best = np.asarray(best_dev)                      # (B,)
+        order = np.asarray(order_dev)                    # (B, N)
+    else:
+        best = np.argmin(all_losses[:, :, -1], axis=1)   # (B,)
+        order = all_orders[np.arange(b), best]           # (B, N)
     xs_np = np.asarray(xs)
     xs_sorted = np.take_along_axis(xs_np, order[:, :, None], axis=1)
     return BatchedSortResult(
@@ -383,6 +548,173 @@ def shuffle_soft_sort_batched(
         best_restart=best,
         all_orders=all_orders,
         all_losses=all_losses,
+    )
+
+
+# --------------------------------------------------------------------------
+# Restart tournament: successive-halving over the restart axis.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TournamentResult:
+    """Result of ``restart_tournament`` — successive-halving restarts.
+
+    ``rounds_run / rounds_full`` is the compute fraction the tournament
+    spent vs. running every restart to completion; the quality cost of
+    that saving (culling can drop a late-blooming seed) is measured in
+    EXPERIMENTS.md §Scaling.
+    """
+    order: np.ndarray          # (B, N) int32 — winning restart's permutation
+    sorted: np.ndarray         # (B, N, d) — xs gathered by ``order``
+    final_loss: np.ndarray     # (B,) — winner's last-round loss
+    best_restart: np.ndarray   # (B,) — winner's ORIGINAL restart index
+    survivors: tuple           # per rung: (B, S_k) original restart indices
+    all_losses: np.ndarray     # (B, S, R) — NaN after a restart is culled
+    rounds_run: int            # instance-rounds executed on device, pad
+                               # slots included (mesh path: each rung's
+                               # live set rounds up to the mesh size)
+    rounds_full: int           # B * S * R — the no-culling engine's cost
+
+
+def _rung_boundaries(rounds: int, n_rungs: int) -> list[int]:
+    """Split the R-round anneal into ``n_rungs`` contiguous segments;
+    returns the (strictly increasing) end round of each rung, last == R."""
+    assert n_rungs >= 1, n_rungs
+    edges, prev = [], 0
+    for k in range(n_rungs):
+        end = round(rounds * (k + 1) / n_rungs)
+        if end > prev:
+            edges.append(end)
+            prev = end
+    assert edges[-1] == rounds, (edges, rounds)
+    return edges
+
+
+def _tournament_cull(final_losses: np.ndarray, keep: int) -> np.ndarray:
+    """Pick the ``keep`` best restart slots per problem.
+
+    Args:
+      final_losses: (B, S_k) rung-end losses of the live restarts.
+      keep: how many slots survive.
+
+    Returns:
+      (B, keep) int64 slot indices into the CURRENT live set, sorted
+      ascending per problem so survivor bookkeeping stays problem-major
+      and deterministic (stable sort — ties keep the lower slot).
+    """
+    b, s_k = final_losses.shape
+    assert 1 <= keep <= s_k, (keep, s_k)
+    sel = np.argsort(final_losses, axis=1, kind="stable")[:, :keep]
+    sel.sort(axis=1)
+    return sel
+
+
+def restart_tournament(
+    xs: jnp.ndarray,
+    hw: tuple[int, int],
+    cfg: ShuffleSoftSortConfig = ShuffleSoftSortConfig(),
+    n_restarts: int = 8,
+    key: jax.Array | None = None,
+    keys: jax.Array | None = None,
+    cull_fraction: float = 0.5,
+    n_rungs: int = 3,
+    mesh=None,
+) -> TournamentResult:
+    """Successive-halving restart scheduler over the batched engine.
+
+    Runs S restarts per problem for the first ``1/n_rungs`` fraction of
+    the anneal, then at each rung boundary culls the worst
+    ``cull_fraction`` of the live restarts (per problem, by rung-end
+    loss) and keeps annealing only the survivors — so the device batch
+    physically shrinks and later rounds run proportionally faster.  The
+    freed wall-clock is the reinvestment: at equal time budget a caller
+    can afford a larger initial S than the run-everything-to-the-end
+    engine (measured tradeoff: EXPERIMENTS.md §Scaling).
+
+    Surviving restarts consume exactly the PRNG stream an uninterrupted
+    run would (segment keys are carried across rungs), so a restart
+    that survives every cull finishes bit-identical to the same (b, s)
+    instance under ``shuffle_soft_sort_batched`` — culling never
+    perturbs the survivors' trajectories, it only stops losers early.
+
+    Args:
+      xs, hw, cfg, n_restarts, key, keys: as in
+        ``shuffle_soft_sort_batched``.
+      cull_fraction: fraction of live restarts dropped at each rung
+        boundary (0 disables culling; 0.5 halves).
+      n_rungs: number of anneal segments; culls happen at the
+        ``n_rungs - 1`` interior boundaries.
+      mesh: optional 1-D "data" mesh — each rung's (shrinking) instance
+        grid is shard_mapped across it.
+
+    Returns:
+      ``TournamentResult`` — see its field docs.
+    """
+    assert 0.0 <= cull_fraction < 1.0, cull_fraction
+    xs, b, s, n, keys_fl, xs_t, norms_t, orders = _prep_instances(
+        xs, hw, n_restarts, key, keys)
+    apply_fn = _select_apply_fn(cfg)
+    taus = _tau_schedule(cfg)
+    edges = _rung_boundaries(cfg.rounds, n_rungs)
+
+    # Live-set state, always problem-major: restart s_live of problem b
+    # at flattened row b * s_k + s_live.  ``alive`` maps live slots back
+    # to original restart indices.
+    alive = np.tile(np.arange(s), (b, 1))                 # (B, S_k)
+    xs_np = np.asarray(xs)
+    cur = dict(xs=xs_t, orders=orders, keys=keys_fl, norms=norms_t)
+    all_losses = np.full((b, s, cfg.rounds), np.nan, np.float32)
+    survivors_log: list[np.ndarray] = []
+    rounds_run = 0
+    start = 0
+    d_mesh = 1 if mesh is None else mesh.shape["data"]
+    for k, end in enumerate(edges):
+        s_k = alive.shape[1]
+        orders_d, keys_d, losses_d = _engine_run(
+            cur["xs"], cur["orders"], cur["keys"], taus[start:end],
+            cur["norms"], hw=hw, cfg=cfg, apply_fn=apply_fn, mesh=mesh)
+        # Device compute actually spent: padded instances burn rounds
+        # too, so uneven shards don't let rounds_run overstate savings.
+        bs_exec = -(-b * s_k // d_mesh) * d_mesh
+        rounds_run += (end - start) * bs_exec
+        seg = np.asarray(losses_d).T.reshape(b, s_k, end - start)
+        all_losses[np.arange(b)[:, None], alive, start:end] = seg
+
+        keep = max(1, int(np.ceil(s_k * (1.0 - cull_fraction))))
+        if k < len(edges) - 1 and keep < s_k:
+            sel = _tournament_cull(seg[:, :, -1], keep)   # (B, keep)
+            alive = np.take_along_axis(alive, sel, axis=1)
+            # Survivor gather stays on device — only the (small) rung
+            # losses crossed to the host for the cull decision above.
+            rows = jnp.asarray(
+                (np.arange(b)[:, None] * s_k + sel).reshape(-1))
+            cur = dict(
+                xs=jnp.repeat(xs, keep, axis=0),
+                orders=jnp.take(orders_d, rows, axis=0),
+                keys=jnp.take(keys_d, rows, axis=0),
+                norms=jnp.take(cur["norms"], rows, axis=0),
+            )
+        else:
+            cur = dict(xs=cur["xs"], orders=orders_d, keys=keys_d,
+                       norms=cur["norms"])
+        survivors_log.append(alive.copy())
+        start = end
+
+    s_fin = alive.shape[1]
+    final = all_losses[np.arange(b)[:, None], alive, -1]  # (B, S_fin)
+    win = np.argmin(final, axis=1)                        # live slot
+    best_restart = alive[np.arange(b), win]
+    order = np.asarray(cur["orders"]).reshape(b, s_fin, n)[np.arange(b), win]
+    xs_sorted = np.take_along_axis(xs_np, order[:, :, None], axis=1)
+    return TournamentResult(
+        order=order,
+        sorted=xs_sorted,
+        final_loss=final[np.arange(b), win],
+        best_restart=best_restart,
+        survivors=tuple(survivors_log),
+        all_losses=all_losses,
+        rounds_run=rounds_run,
+        rounds_full=b * s * cfg.rounds,
     )
 
 

@@ -1,18 +1,32 @@
-"""Mesh factory + per-mesh axis rules.
+"""Mesh factories + per-mesh axis rules.
 
-``make_production_mesh`` is a FUNCTION (not a module constant) so
-importing this module never touches jax device state — the dry-run
-entrypoint sets XLA_FLAGS before any jax initialization.
+Every factory here is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — entrypoints set XLA_FLAGS
+(e.g. ``--xla_force_host_platform_device_count``) before any jax
+initialization.
 
-Topology (DESIGN.md §7):
-  single-pod: (16, 16)      axes ("data", "model")      — 256 chips
-  multi-pod : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+Two workload families share this module:
 
-Batch shards over ("pod","data"); params/optimizer FSDP over "data"
-(ZeRO-3 inside a pod, pure DP across pods — gradient all-reduce over
-"pod" is the only cross-DCN collective in the baseline); tensor/expert
-parallelism over "model".  The factory generalizes to any (P, D, T) for
-elastic restarts.
+* **LM training/serving** (``make_production_mesh``) — 2-D / 3-D meshes:
+
+      single-pod: (16, 16)      axes ("data", "model")        — 256 chips
+      multi-pod : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+  Rationale: the batch shards over ("pod", "data"); params/optimizer
+  FSDP over "data" (ZeRO-3 inside a pod, pure DP across pods — the
+  gradient all-reduce over "pod" is the only cross-DCN collective in
+  the baseline); tensor/expert parallelism over "model".  The "model"
+  axis is kept innermost so TP collectives stay on the fastest (ICI)
+  links.  The factory generalizes to any (P, D, T) for elastic
+  restarts.
+
+* **Permutation workloads** (``make_sort_mesh``) — a 1-D mesh with a
+  single "data" axis.  ShuffleSoftSort instances are embarrassingly
+  parallel (N parameters each, zero cross-instance communication until
+  the final best-restart argmin), so the right topology is the
+  degenerate one: flatten the B problems x S restarts grid and shard it
+  over every device.  See EXPERIMENTS.md §Scaling for measured
+  devices x B x S sweeps.
 """
 from __future__ import annotations
 
@@ -37,6 +51,25 @@ def make_production_mesh(*, multi_pod: bool = False,
             "entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
             "device_count before importing jax")
     return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev])
+
+
+def make_sort_mesh(n_devices: int | None = None):
+    """1-D ("data",) mesh for sharded permutation workloads.
+
+    ``n_devices=None`` uses every visible device.  The sharded engine
+    (``shuffle_soft_sort_batched(..., mesh=...)``) splits the flattened
+    B x S instance axis over "data", padding the tail shard; per-seed
+    results are bit-identical to the single-device vmap engine, so the
+    mesh size is purely a throughput knob (EXPERIMENTS.md §Scaling).
+    """
+    avail = jax.devices()
+    n = len(avail) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(avail):
+        raise RuntimeError(
+            f"sort mesh wants {n} devices, have {len(avail)}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "importing jax to fake more on CPU")
+    return jax.make_mesh((n,), ("data",), devices=avail[:n])
 
 
 def axis_rules_for(mesh) -> AxisRules:

@@ -20,6 +20,11 @@ Two workloads share this entrypoint:
 
       PYTHONPATH=src python -m repro.launch.serve \
           --workload sort --requests 8 --sort-n 256 --rounds 30
+
+  Scale-out: ``--mesh-devices D`` shards each coalesced batch across a
+  D-device "data" mesh, and ``--tournament-rungs K --restarts S`` runs
+  the S seeds per request as a successive-halving tournament
+  (EXPERIMENTS.md §Scaling).
 """
 from __future__ import annotations
 
@@ -70,10 +75,21 @@ class SortServer:
     per-request ``(order, sorted, losses)`` triple of the winning
     restart — bit-identical to a sequential ``shuffle_soft_sort`` call
     with the same key when ``n_restarts == 1``.
+
+    Scale-out knobs (EXPERIMENTS.md §Scaling):
+
+    * ``mesh`` — a 1-D "data" mesh (``repro.launch.mesh.make_sort_mesh``);
+      the coalesced batch's flattened requests x restarts grid is
+      shard_mapped across its devices.  Per-seed results are unchanged.
+    * ``tournament_rungs > 1`` (with ``n_restarts > 1``) — restarts run
+      as a successive-halving tournament instead of all-to-the-end, so
+      the same latency budget affords more seeds per request.
     """
 
     def __init__(self, hw, d, cfg=None, max_batch: int = 8,
-                 max_wait_ms: float = 2.0, n_restarts: int = 1):
+                 max_wait_ms: float = 2.0, n_restarts: int = 1,
+                 mesh=None, tournament_rungs: int = 1,
+                 cull_fraction: float = 0.5):
         from repro.core.shufflesoftsort import ShuffleSoftSortConfig
         self.hw = tuple(hw)
         self.n = self.hw[0] * self.hw[1]
@@ -82,6 +98,9 @@ class SortServer:
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
         self.n_restarts = n_restarts
+        self.mesh = mesh
+        self.tournament_rungs = int(tournament_rungs)
+        self.cull_fraction = float(cull_fraction)
         self.stats = {"requests": 0, "batches": 0, "batch_sizes": []}
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
@@ -126,8 +145,29 @@ class SortServer:
             batch.append(req)
         return batch
 
+    def _dispatch(self, xs, keys):
+        """One coalesced device call: plain batched engine, or the
+        successive-halving tournament when configured.  Both honour
+        ``self.mesh``.  Returns per-request (order, sorted, losses)."""
+        from repro.core.shufflesoftsort import (
+            restart_tournament,
+            shuffle_soft_sort_batched,
+        )
+        if self.tournament_rungs > 1 and self.n_restarts > 1:
+            res = restart_tournament(
+                xs, self.hw, self.cfg, n_restarts=self.n_restarts,
+                keys=keys, cull_fraction=self.cull_fraction,
+                n_rungs=self.tournament_rungs, mesh=self.mesh)
+            losses = res.all_losses[
+                np.arange(xs.shape[0]), res.best_restart]
+        else:
+            res = shuffle_soft_sort_batched(
+                xs, self.hw, self.cfg, n_restarts=self.n_restarts,
+                keys=keys, mesh=self.mesh)
+            losses = res.losses
+        return res.order, res.sorted, losses
+
     def _run(self):
-        from repro.core.shufflesoftsort import shuffle_soft_sort_batched
         while not self._stop.is_set():
             batch = self._drain()
             if not batch:
@@ -146,15 +186,13 @@ class SortServer:
                                 jax.random.fold_in(r.key, 1),
                                 self.n_restarts - 1)])
                         for r in batch])
-                res = shuffle_soft_sort_batched(
-                    xs, self.hw, self.cfg, n_restarts=self.n_restarts,
-                    keys=keys)
+                orders, sorteds, losses = self._dispatch(xs, keys)
                 self.stats["requests"] += len(batch)
                 self.stats["batches"] += 1
                 self.stats["batch_sizes"].append(len(batch))
                 for i, r in enumerate(batch):
                     r.future.set_result(
-                        (res.order[i], res.sorted[i], res.losses[i]))
+                        (orders[i], sorteds[i], losses[i]))
             except Exception as e:      # pragma: no cover - defensive
                 for r in batch:
                     if not r.future.done():
@@ -174,14 +212,18 @@ def serve_sorts(args):
     """CLI driver: fire concurrent sort requests at a SortServer."""
     from repro.core.metrics import mean_neighbor_distance
     from repro.core.shufflesoftsort import ShuffleSoftSortConfig
+    from repro.launch.mesh import make_sort_mesh
 
     hw = (args.sort_hw, args.sort_n // args.sort_hw)
     assert hw[0] * hw[1] == args.sort_n, (args.sort_n, args.sort_hw)
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
                                 chunk=min(256, args.sort_n))
+    mesh = make_sort_mesh(args.mesh_devices) if args.mesh_devices else None
     server = SortServer(hw, d=args.sort_d, cfg=cfg,
                         max_batch=args.max_batch, max_wait_ms=args.wait_ms,
-                        n_restarts=args.restarts)
+                        n_restarts=args.restarts, mesh=mesh,
+                        tournament_rungs=args.tournament_rungs,
+                        cull_fraction=args.cull_fraction)
     rng = np.random.RandomState(0)
     xs = rng.rand(args.requests, args.sort_n, args.sort_d).astype(np.float32)
 
@@ -226,6 +268,13 @@ def main(argv=None):
     ap.add_argument("--restarts", type=int, default=1)
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--wait-ms", type=float, default=5.0)
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="shard coalesced batches over this many devices "
+                         "(0 = single-device vmap engine)")
+    ap.add_argument("--tournament-rungs", type=int, default=1,
+                    help=">1 runs restarts as a successive-halving "
+                         "tournament (needs --restarts > 1)")
+    ap.add_argument("--cull-fraction", type=float, default=0.5)
     args = ap.parse_args(argv)
 
     if args.workload == "sort":

@@ -2,7 +2,7 @@
 
 Every ``init_*`` returns ``(params, specs)`` where ``specs`` mirrors the
 params pytree with ``jax.sharding.PartitionSpec`` leaves.  Sharding
-rules (DESIGN.md §7):
+rules (mesh topology rationale: ``repro/launch/mesh.py``):
 
   * tensor-parallel dims (heads, ffn hidden, experts, vocab) -> "model"
   * one remaining large dim per weight -> FSDP axis ("data", and

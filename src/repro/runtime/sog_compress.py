@@ -26,10 +26,24 @@ from repro.core.shufflesoftsort import ShuffleSoftSortConfig, shuffle_soft_sort
 
 
 def _grid_hw(n: int) -> tuple[int, int]:
+    """Near-square sorting grid for n columns; h * w >= n.
+
+    Prefers an exact factorization when a near-square one exists
+    (aspect ratio <= 2, no padding).  Otherwise — prime n, or n whose
+    largest divisor <= sqrt(n) is tiny — walking h down degenerates
+    toward a 1 x n grid whose "neighborhood" is a line, which defeats
+    the 2-D neighbor loss entirely.  For those n we return a padded
+    ceil(sqrt) x ceil grid instead (h * w - n < h extra cells); callers
+    pad the feature rows and drop pad indices from the returned
+    permutation (see ``sog_compress_tensor``).
+    """
     h = int(np.sqrt(n))
     while n % h:
         h -= 1
-    return h, n // h
+    if n // h <= 2 * h:
+        return h, n // h
+    h = int(np.ceil(np.sqrt(n)))
+    return h, int(np.ceil(n / h))
 
 
 def _quantize(w: np.ndarray) -> tuple[np.ndarray, float]:
@@ -65,9 +79,22 @@ def sog_compress_tensor(
     feats = w[rows].T                                    # (F, <=32)
 
     hw = _grid_hw(f)
+    m = hw[0] * hw[1]
+    if m > f:
+        # Padded grid (f prime or near-prime): replicate trailing columns
+        # as pad features — maximally correlated with real columns, so
+        # they cluster beside their twins without distorting the layout —
+        # then drop the pad indices, leaving a permutation of the real f
+        # columns in grid-scan order.
+        feats = np.concatenate([feats, feats[f - (m - f):]], axis=0)
+    # chunk must divide the (possibly padded) grid size; largest such
+    # divisor <= 256 keeps the streamed apply's O(chunk * m) footprint.
+    chunk = m if m <= 256 else max(c for c in range(1, 257) if m % c == 0)
     cfg = ShuffleSoftSortConfig(rounds=sort_rounds, inner_steps=4,
-                                chunk=min(256, f))
+                                chunk=chunk)
     order, _, _ = shuffle_soft_sort(jnp.asarray(feats), hw, cfg, key=key)
+    if m > f:
+        order = order[order < f]
 
     q_sorted, scale = _quantize(w.T[order])              # (F, D) sorted
     q_plain, _ = _quantize(w.T)

@@ -210,6 +210,32 @@ def test_sog_tensor_roundtrip_exact_at_int8():
     assert q_err <= (np.max(np.abs(w)) / 127.0) * 1.01 + 1e-6
 
 
+def test_sog_grid_never_degenerates_to_a_line():
+    """Prime F used to collapse the sorting grid to 1 x F, starving the
+    neighbor loss of its second dimension; now those F get a padded
+    near-square grid (h * w >= F with fewer than one extra row)."""
+    from repro.runtime.sog_compress import _grid_hw
+
+    for n in (97, 113, 178, 254, 1009):    # primes and 2*prime shapes
+        h, w = _grid_hw(n)
+        assert h > 1, (n, h, w)
+        assert w <= 2 * h, (n, h, w)       # near-square
+        assert h * w >= n and h * w - n < h, (n, h, w)
+    for n in (64, 100, 256, 12):           # composites keep exact grids
+        h, w = _grid_hw(n)
+        assert h * w == n, (n, h, w)
+
+
+def test_sog_prime_column_count_roundtrips():
+    w = _structured_weight(d=32, f=97)     # F=97 is prime
+    blob = sog_compress_tensor(w, sort_rounds=30)
+    assert sorted(blob["perm"].tolist()) == list(range(97))
+    rec = sog_decompress_tensor(blob)
+    assert rec.shape == w.shape
+    q_err = np.max(np.abs(rec - w))
+    assert q_err <= (np.max(np.abs(w)) / 127.0) * 1.01 + 1e-6
+
+
 def test_sog_sorting_beats_unsorted_baseline():
     # larger tensor so the stored permutation (4F bytes) amortizes;
     # see EXPERIMENTS.md §SOG for the measured ~10% deflate gain

@@ -5,8 +5,16 @@
 
 Checks, for each given markdown file:
   * relative links `[..](path)` point at files/dirs that exist;
-  * `§Section` references into EXPERIMENTS.md (the convention used by
-    code docstrings) name a real `## §Section` heading.
+  * `[..](path#fragment)` / `[..](#fragment)` fragments name a real
+    heading in the target markdown file (GitHub slugification);
+
+and, repo-wide (every .py file under the project trees):
+  * every section-sign token — the convention code docstrings use to
+    cite the experiments log, with or without an explicit
+    `EXPERIMENTS.md` prefix — names a real section heading in
+    EXPERIMENTS.md, so a heading rename or deletion fails CI instead of
+    silently stranding the docstrings that cite it.  Roman-numeral
+    tokens (paper sections like `paper §IV-A`) are exempt.
 
 External (http/https/mailto) links are not fetched.
 """
@@ -16,35 +24,73 @@ import pathlib
 import re
 import sys
 
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]*)(#[^)\s]*)?\)")
+SECTION_RE = re.compile(r"§[\w-]+")
+# §IV-A / §II etc. cite the source paper, not EXPERIMENTS.md.
+PAPER_SECTION_RE = re.compile(r"§[IVXLC]+(?:-[A-Z\d]+)?$")
+# Markdown files only flag explicitly prefixed citations — prose there
+# legitimately mentions other documents' section signs.
+MD_SECTION_RE = re.compile(r"EXPERIMENTS(?:\.md)?\s+(§[\w-]+)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's markdown heading -> anchor id (ASCII approximation)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def md_anchors(path: pathlib.Path) -> set[str]:
+    anchors = set()
+    for line in path.read_text().splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            anchors.add(github_slug(m.group(1)))
+    return anchors
 
 
 def check_file(path: pathlib.Path) -> list[str]:
     errors = []
     text = path.read_text()
     for m in LINK_RE.finditer(text):
-        target = m.group(1)
+        target, frag = m.group(1), m.group(2)
         if target.startswith(("http://", "https://", "mailto:")):
             continue
-        resolved = (path.parent / target).resolve()
+        resolved = (path.parent / target).resolve() if target else path
         if not resolved.exists():
             errors.append(f"{path}: broken link -> {target}")
+            continue
+        if frag and resolved.suffix == ".md":
+            anchor = frag.lstrip("#")
+            if anchor not in md_anchors(resolved):
+                errors.append(
+                    f"{path}: dangling anchor -> {target or path.name}{frag}")
     return errors
 
 
 def check_section_refs(repo: pathlib.Path) -> list[str]:
-    """Every section mention of the experiments log must have a heading."""
+    """Every section citation in project Python files must have a
+    heading in EXPERIMENTS.md."""
     exp = repo / "EXPERIMENTS.md"
     if not exp.exists():
         return [f"{exp} is missing but referenced by docstrings"]
-    headings = set(re.findall(r"^##\s+(§\S+)", exp.read_text(), re.M))
+    headings = set(re.findall(r"^##\s+(§[\w-]+)", exp.read_text(), re.M))
+    this_file = pathlib.Path(__file__).resolve()
     errors = []
-    for src in list(repo.rglob("*.py")) + list(repo.glob("*.md")):
-        if ".git" in src.parts:
-            continue
-        for ref in re.findall(r"EXPERIMENTS\.md\s+(§[\w-]+)", src.read_text()):
+    for tree in ("src", "benchmarks", "examples", "tests", "tools"):
+        for src in sorted((repo / tree).rglob("*.py")):
+            if src.resolve() == this_file:
+                continue          # the checker's own docstring
+            for ref in sorted(set(SECTION_RE.findall(src.read_text()))):
+                if ref in headings or PAPER_SECTION_RE.match(ref):
+                    continue
+                errors.append(f"{src}: dangling section reference {ref} "
+                              "(no such EXPERIMENTS.md heading)")
+    for src in sorted(repo.glob("*.md")):
+        for ref in sorted(set(MD_SECTION_RE.findall(src.read_text()))):
             if ref not in headings:
-                errors.append(f"{src}: dangling reference EXPERIMENTS.md {ref}")
+                errors.append(f"{src}: dangling section reference {ref} "
+                              "(no such EXPERIMENTS.md heading)")
     return errors
 
 
