@@ -1,14 +1,43 @@
-"""Microbenchmarks for the paper's compute hot spot (SoftSort apply) —
-one per implementation layer:
+"""Kernel-tier microbenchmark: the SoftSort apply, fwd and fwd+grad,
+one row per implementation layer:
 
-  dense ref (O(N^2) memory)  vs  chunked-jnp stream  vs  Pallas kernel
-  (interpret mode on CPU — numbers are *relative*, the kernel's real
-  target is the TPU MXU; see EXPERIMENTS.md §Roofline for the model).
+  * ``dense``     — O(N^2)-memory jnp oracle (``kernels/ref.py``)
+  * ``chunked``   — streamed pure-jnp row blocks (``core/softsort.py``)
+  * ``kernel_v1`` — v1 Pallas path: 3-pass forward + chunked jnp-scan
+                    backward (``ops.softsort_apply_v1``, PR 1/2 design)
+  * ``fused``     — fused online-softmax forward (2 passes) + full
+                    Pallas backward with (perm, ws, m, l, y) residuals
 
-Also times one ShuffleSoftSort outer round (the trainer's unit of work).
+Emits ``BENCH_kernels.json`` (committed at the repo root; validated by
+``tools/check_bench.py``).  Two kinds of columns:
+
+  * measured wall-clock (``fwd_s`` / ``fwdgrad_s``) — on a CPU CI
+    backend the Pallas kernels run in INTERPRET mode, so these are
+    shape/ordering signals only: interpretation emulates the grid
+    block-by-block and cannot show an HBM-traffic win (the jnp scan
+    backward gets native XLA fusion while the Pallas backward pays
+    emulation overhead).  On a real TPU the same columns are the
+    roofline numbers.
+  * parity (``parity``) — max abs error of each implementation's
+    forward and d(loss)/dw against the dense oracle.  EXACT everywhere,
+    backend-independent; CI gates on these (``--check``).
+  * modeled HBM traffic (``model_hbm_mb``) — per-pass bytes moved
+    between HBM and VMEM for one fwd+grad step, counted mechanically
+    from the block specs (block bytes x revisit count; see
+    ``_model_hbm_bytes``).  At the paper's d <= 50 the apply is
+    memory-bound (EXPERIMENTS.md §Roofline), so TPU step time is
+    proportional to these bytes and ``model_fused_over_v1`` is the
+    expected on-TPU fwd+grad speedup of the fused path.
+
+Usage:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench            # full sweep
+    PYTHONPATH=src python -m benchmarks.kernel_bench --smoke --check
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -17,60 +46,218 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.softsort import softsort_apply_chunked
-from repro.core.shufflesoftsort import ShuffleSoftSortConfig
+from repro.kernels.ops import (
+    _block_geometry,
+    softsort_apply,
+    softsort_apply_v1,
+)
 from repro.kernels.ref import softsort_apply_ref
 
+FULL_CELLS = [  # (N, d, B)
+    (1024, 8, 1),
+    (1024, 8, 8),
+    (1024, 50, 1),
+    (4096, 8, 1),
+]
+SMOKE_CELLS = [(384, 8, 2)]    # multi-block grid (2x2 tiles), tiny runtime
 
-def _time(fn, *args, reps=3):
-    fn(*args)                                   # compile
+F32 = 4                        # bytes
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    out = fn(*args)            # compile
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6   # us
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
 
 
-def bench(ns=(1024, 4096), d=8, tau=0.5):
+def _batched_ref(w, x, tau):
+    return jax.vmap(lambda wi, xi: softsort_apply_ref(wi, xi, tau))(w, x)
+
+
+def _impls(tau):
+    """name -> apply(w (B,N), x (B,N,d)) returning (y, c)."""
+    return {
+        "dense": lambda w, x: _batched_ref(w, x, tau),
+        "chunked": lambda w, x: softsort_apply_chunked(w, x, tau, 256),
+        "kernel_v1": lambda w, x: softsort_apply_v1(w, x, tau),
+        "fused": lambda w, x: softsort_apply(w, x, tau),
+    }
+
+
+def _model_hbm_bytes(n: int, d: int, bsz: int) -> dict:
+    """Per-step (fwd+grad) HBM<->VMEM bytes for the two kernel paths,
+    counted from the block specs: each pass moves ``block bytes x
+    revisit count`` per operand (an operand whose index map ignores the
+    innermost grid axis is fetched once per outer step and reused).
+
+    N^2-scale terms exist ONLY in the v1 jnp-scan backward: its einsum
+    boundaries materialize p / dP / ds as (B, chunk, N) HBM arrays —
+    one write + one read each, 6 x N^2 x 4 bytes per instance (delta,
+    s, sgn fold into fused elementwise ops and are not counted — the
+    model is conservative in v1's favor).  The fused backward consumes
+    every score block inside its VMEM tile.
+    """
+    br, bc, np_, dp = _block_geometry(n, d, 256, 256)
+    ni, nj = np_ // br, np_ // bc
+    keys = np_ * F32                      # one (Np,)-sized vector
+    xmat = np_ * dp * F32                 # one (Np, dp)-sized matrix
+
+    # Streamed passes (per instance).  "re-read k x" = the operand's
+    # index map varies with the inner grid axis.
+    fwd_fused = (
+        (keys + keys * ni + xmat * ni + 2 * keys + xmat)   # fused sweep:
+        #  ws once, w re-read per row block, x re-read per row block,
+        #  m/l/y written once
+        + (2 * keys + 2 * keys * nj + keys + xmat * nj)    # colsum: ws/m/l
+        #  re-read per col block, c written once, (x absent)
+    )
+    bwd_fused = (
+        # delta: dy/y row-aligned (once), w/dc re-read per row block
+        (2 * xmat + 2 * keys * ni + 4 * keys)
+        # dx pass: dy re-read per col block, x once, dx/dwc/dtc written
+        + (xmat * nj + xmat + 3 * keys + 4 * keys * nj + xmat)
+        # dws pass: x re-read per row block, dy once, dws written
+        + (xmat * ni + xmat + 4 * keys * ni + keys)
+    )
+    fwd_v1 = (
+        (keys + keys * ni + 2 * keys)                      # stats pass
+        + (keys + keys * ni + xmat * ni + 2 * keys + xmat)  # apply pass
+        + (2 * keys + 2 * keys * nj + keys)                # colsum pass
+        # + m/l round-trip between stats and apply (written then re-read
+        # per row block) — the mid-forward HBM traffic the fusion removes
+        + 2 * keys * 2
+    )
+    n2 = 6 * n * n * F32                                   # p/dP/ds, w+r
+    bwd_v1 = n2 + 2 * n * d * F32 * (n // min(256, n))     # + x/dy per chunk
+
+    return {
+        "kernel_v1": bsz * (fwd_v1 + bwd_v1) / 1e6,
+        "fused": bsz * (fwd_fused + bwd_fused) / 1e6,
+    }
+
+
+def run_cell(n: int, d: int, bsz: int, tau: float = 0.5,
+             reps: int = 3) -> dict:
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(n + d + bsz), 4)
+    # Keys are unique by construction (shuffled linspace, the trainer's
+    # arange-scale state): at a bitwise-equal tie |.| has no derivative
+    # and blocked vs dense autodiff legitimately pick different
+    # subgradients, which would poison the parity gate with a
+    # measure-zero artifact (a normal draw at N=4096 f32 does collide).
+    w = jax.vmap(lambda k: jax.random.permutation(
+        k, jnp.linspace(-2.0, 2.0, n)))(jax.random.split(k1, bsz))
+    x = jax.random.normal(k2, (bsz, n, d))
+    a = jax.random.normal(k3, (bsz, n, d))
+    b = jax.random.normal(k4, (bsz, n))
+
+    impls = _impls(tau)
+
+    def loss_fn(apply_fn):
+        def f(w, x):
+            y, c = apply_fn(w, x)
+            return jnp.sum(y * a) + jnp.sum(c * b)
+        return f
+
+    fwd_s, fwdgrad_s, grads, outs = {}, {}, {}, {}
+    for name, fn in impls.items():
+        jfn = jax.jit(fn)
+        fwd_s[name] = _time(jfn, w, x, reps=reps)
+        jg = jax.jit(jax.value_and_grad(loss_fn(fn)))
+        fwdgrad_s[name] = _time(jg, w, x, reps=reps)
+        outs[name] = jfn(w, x)
+        grads[name] = jg(w, x)[1]
+
+    y_ref, c_ref = outs["dense"]
+    dw_ref = grads["dense"]
+
+    def relerr(got, want):
+        # max abs error relative to the oracle's max magnitude — scale-
+        # free, so one tolerance gates every N/d/B cell.
+        scale = float(jnp.max(jnp.abs(want))) + 1e-9
+        return float(jnp.max(jnp.abs(got - want))) / scale
+
+    parity = {}
+    for name in ("chunked", "kernel_v1", "fused"):
+        parity[f"{name}_y_relerr"] = relerr(outs[name][0], y_ref)
+        parity[f"{name}_c_relerr"] = relerr(outs[name][1], c_ref)
+        parity[f"{name}_dw_relerr"] = relerr(grads[name], dw_ref)
+
+    model = _model_hbm_bytes(n, d, bsz)
+    return {
+        "N": n, "d": d, "B": bsz, "tau": tau,
+        "fwd_s": fwd_s,
+        "fwdgrad_s": fwdgrad_s,
+        "parity": parity,
+        "model_hbm_mb": model,
+        "model_fused_over_v1": model["kernel_v1"] / model["fused"],
+        "passes": {"kernel_v1_fwd": 3, "fused_fwd": 2, "fused_bwd": 3,
+                   "kernel_v1_bwd": 0},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single tiny multi-block cell (CI)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert every parity column <= --tol and exit "
+                         "non-zero otherwise")
+    ap.add_argument("--tol", type=float, default=2e-3,
+                    help="parity gate: max abs error vs the dense "
+                         "oracle, scaled by the gradient magnitude")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: BENCH_kernels.json "
+                         "for the full sweep, stdout-only for --smoke)")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    cells = SMOKE_CELLS if args.smoke else FULL_CELLS
     rows = []
-    for n in ns:
-        w = jax.random.normal(jax.random.PRNGKey(0), (n,))
-        x = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    for n, d, bsz in cells:
+        cell = run_cell(n, d, bsz, reps=args.reps)
+        rows.append(cell)
+        print(f"N={n} d={d} B={bsz}: "
+              f"fwd fused {cell['fwd_s']['fused']*1e3:.1f}ms "
+              f"(v1 {cell['fwd_s']['kernel_v1']*1e3:.1f}ms), "
+              f"fwd+grad fused {cell['fwdgrad_s']['fused']*1e3:.1f}ms "
+              f"(v1 {cell['fwdgrad_s']['kernel_v1']*1e3:.1f}ms), "
+              f"model fused/v1 HBM {cell['model_fused_over_v1']:.2f}x, "
+              f"fused dw err {cell['parity']['fused_dw_relerr']:.2e}")
 
-        ref = jax.jit(lambda w, x: softsort_apply_ref(w, x, tau))
-        chunked = jax.jit(
-            lambda w, x: softsort_apply_chunked(w, x, tau, chunk=256))
-        rows.append((f"softsort_ref_n{n}", _time(ref, w, x),
-                     f"dense O(N^2) mem"))
-        rows.append((f"softsort_chunked_n{n}", _time(chunked, w, x),
-                     f"stream O(N*256) mem"))
-    return rows
+    doc = {
+        "bench": "kernel_bench",
+        "backend": jax.default_backend(),
+        "note": ("off-TPU the Pallas kernels run in interpret mode: "
+                 "wall-clock columns are shape signals only (emulation "
+                 "overhead penalizes the Pallas backward; the jnp-scan "
+                 "baseline gets native XLA fusion); parity columns are "
+                 "exact; model_hbm_mb counts per-step HBM<->VMEM bytes "
+                 "from the block specs and is the memory-bound TPU "
+                 "projection (EXPERIMENTS.md §Roofline)"),
+        "cells": rows,
+    }
+    out = args.out or (None if args.smoke else "BENCH_kernels.json")
+    if out:
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {out}")
 
-
-def bench_outer_round(n=1024, d=3):
-    from repro.core.shufflesoftsort import _outer_round
-    import functools
-    from repro.core.softsort import softsort_apply_chunked as ch
-    cfg = ShuffleSoftSortConfig(chunk=256)
-    x = jax.random.uniform(jax.random.PRNGKey(0), (n, d))
-    order = jnp.arange(n, dtype=jnp.int32)
-    apply_fn = functools.partial(ch, chunk=cfg.chunk)
-
-    def step(x, order):
-        return _outer_round(x, order, jax.random.PRNGKey(1),
-                            jnp.float32(0.5), jnp.float32(1.0),
-                            hw=(32, 32), cfg=cfg, apply_fn=apply_fn)
-
-    o, _ = step(x, order)                       # compile
-    t0 = time.perf_counter()
-    reps = 5
-    for _ in range(reps):
-        o, l = step(x, o)
-    jax.block_until_ready(o)
-    us = (time.perf_counter() - t0) / reps * 1e6
-    return [("shufflesort_round_n1024", us,
-             "I=8 grad steps + commit")]
+    if args.check:
+        bad = []
+        for cell in rows:
+            for key, val in cell["parity"].items():
+                if not np.isfinite(val) or val > args.tol:
+                    bad.append((cell["N"], cell["d"], cell["B"], key, val))
+        if bad:
+            raise SystemExit(f"parity gate failed (tol={args.tol}): {bad}")
+        print(f"parity gate OK (tol={args.tol}, "
+              f"{sum(len(c['parity']) for c in rows)} columns)")
+    return doc
 
 
 if __name__ == "__main__":
-    for name, us, derived in bench() + bench_outer_round():
-        print(f"{name},{us:.0f},{derived}")
+    main()

@@ -327,11 +327,17 @@ def _select_apply_fn(cfg: ShuffleSoftSortConfig):
     """Resolve the ``use_kernel`` switch to a per-instance apply callable.
 
     ``use_kernel=False`` — streamed pure-jnp ``softsort_apply_chunked``
-    (runs everywhere).  ``use_kernel=True`` — the fused Pallas TPU path
-    from ``repro.kernels.ops`` (``interpret=True`` automatically
-    off-TPU).  Both compute (P_soft @ x, colsum(P_soft)) in O(N * block)
-    memory and both are vmap-compatible, so the batched engine accepts
-    either transparently.
+    (runs everywhere; the everywhere-runnable oracle twin of the kernel
+    path).  ``use_kernel=True`` — the fused Pallas TPU path from
+    ``repro.kernels.ops``, which now covers the FULL train step: the
+    forward is one online-softmax sweep plus the colsum pass, and the
+    backward runs in Pallas too, reusing the forward's ``(perm, ws, m,
+    l, y)`` residuals instead of falling back to a jnp re-computation
+    (``interpret=True`` automatically off-TPU; measured pass-count /
+    HBM-traffic win in EXPERIMENTS.md §Perf).  Both compute
+    (P_soft @ x, colsum(P_soft)) in O(N * block) memory and both are
+    vmap- and grad-compatible, so every engine (sequential, vmap, mesh,
+    tournament) accepts either transparently.
     """
     if cfg.use_kernel:
         from repro.kernels.ops import softsort_apply
@@ -353,9 +359,10 @@ def shuffle_soft_sort(
     — are ever stored, which is the paper's headline claim.  ``losses``
     is the Python list of per-round final losses (one host sync per
     round; use ``shuffle_soft_sort_batched`` for the sync-free
-    throughput path).  ``cfg.use_kernel`` routes the SoftSort apply
-    through the fused Pallas kernel instead of the chunked-jnp stream —
-    identical semantics, see ``repro.kernels.ops``.
+    throughput path).  ``cfg.use_kernel`` routes the SoftSort apply —
+    forward AND backward — through the fused Pallas kernel tier instead
+    of the chunked-jnp stream; identical semantics, see
+    ``repro.kernels.ops``.
 
     For many problems or random restarts at once, use
     ``shuffle_soft_sort_batched`` — per-seed bit-identical to this

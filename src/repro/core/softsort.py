@@ -11,14 +11,21 @@ Two implementations live here:
                                   Reference path; fine up to N ~ 8k.
 * ``softsort_apply_chunked``    — row-block streaming evaluation of
                                   (P @ x, column_sums(P)) in O(N * chunk)
-                                  memory.  This is the paper's "row-wise
+                                  memory, any N (the tail block pads and
+                                  masks).  This is the paper's "row-wise
                                   manner" requirement (Sec. II) and the
-                                  pure-jnp twin of the Pallas kernel in
-                                  ``repro.kernels.softsort_apply``.
+                                  everywhere-runnable pure-jnp oracle
+                                  twin of the Pallas kernel tier in
+                                  ``repro.kernels`` — same math, no
+                                  accelerator or interpret-mode
+                                  dependency, the reference the kernel
+                                  parity tests stream against.
 
 Everything is differentiable; the chunked path uses ``jax.lax.map`` so
 autodiff re-streams the blocks in the backward pass instead of saving an
-N^2 residual.
+N^2 residual (the Pallas tier goes further: its custom VJP saves the
+(perm, ws, m, l, y) residuals and runs the backward as kernels too —
+see ``repro.kernels.ops``).
 """
 from __future__ import annotations
 
@@ -61,7 +68,9 @@ def softsort_apply_chunked(
       chunk: rows of P evaluated per step; memory is O(chunk * N)
         (O(B * chunk * N) batched — the batch stays vectorized inside
         each streamed row block, the same layout the batched engine's
-        vmap produces).
+        vmap produces).  N need not divide by chunk: the tail row block
+        is padded (and masked out of the colsum), matching the Pallas
+        wrapper's padding contract.
 
     Returns:
       y: (N, d) soft-sorted payload ((B, N, d) batched).
@@ -74,22 +83,34 @@ def softsort_apply_chunked(
             lambda wi, xi: softsort_apply_chunked(wi, xi, tau, chunk)
         )(w, x)
     n = w.shape[0]
-    assert n % chunk == 0 or n < chunk, (n, chunk)
     if n <= chunk:
         p = softsort_matrix(w, tau)
         return p @ x, p.sum(axis=0)
 
     ws = _sort_diff(w)
-    ws_blocks = ws.reshape(n // chunk, chunk)
+    # Arbitrary N: pad the tail row block (matching the Pallas wrapper's
+    # padding contract) — pad rows are not rows of P, so they are masked
+    # out of the colsum and their y rows sliced off.
+    nb = -(-n // chunk)
+    pad = nb * chunk - n
+    if pad:
+        ws = jnp.concatenate([ws, jax.lax.stop_gradient(ws[-1:]) *
+                              jnp.ones((pad,), ws.dtype)])
+    ws_blocks = ws.reshape(nb, chunk)
+    valid_blocks = (jnp.arange(nb * chunk) < n).astype(
+        w.dtype).reshape(nb, chunk)
 
-    def row_block(ws_blk):
+    def row_block(blk):
+        ws_blk, valid_blk = blk
         # (chunk, N) scores for this row block — peak live memory.
         s = -jnp.abs(ws_blk[:, None] - w[None, :]) / tau
-        p = jax.nn.softmax(s, axis=-1)
+        p = jax.nn.softmax(s, axis=-1) * valid_blk[:, None]
         return p @ x, p.sum(axis=0)
 
-    y_blocks, colsum_blocks = jax.lax.map(row_block, ws_blocks)
-    return y_blocks.reshape(n, x.shape[-1]), colsum_blocks.sum(axis=0)
+    y_blocks, colsum_blocks = jax.lax.map(
+        row_block, (ws_blocks, valid_blocks))
+    return y_blocks.reshape(nb * chunk, x.shape[-1])[:n], \
+        colsum_blocks.sum(axis=0)
 
 
 def hard_permutation(w: jnp.ndarray, tau: float | jnp.ndarray = 1.0,

@@ -1,13 +1,21 @@
 # Pallas TPU kernel layer for the paper's compute hot spot: the fused
 # SoftSort apply (P_soft @ x, colsum(P_soft)) streamed flash-attention
-# style, plus the flash attention used by the LM serving workloads.
+# style — forward AND backward — plus the flash attention used by the
+# LM serving workloads.
 #
 #   ops.py              — public custom-VJP wrapper ``softsort_apply``;
-#                         accepts (N,)/(N, d) or batched (B, N)/(B, N, d)
-#   softsort_apply.py   — the forward kernels (batch = outermost grid dim)
+#                         accepts (N,)/(N, d) or batched (B, N)/(B, N, d);
+#                         saves (perm, ws, m, l, y) residuals so the
+#                         backward never re-sorts or re-normalizes.
+#                         ``softsort_apply_v1`` keeps the previous
+#                         3-pass-fwd / jnp-scan-bwd design as the
+#                         benchmark baseline (benchmarks/kernel_bench.py)
+#   softsort_apply.py   — the kernels: fused online-softmax forward
+#                         (2 pallas_calls) + 3-pass backward (batch =
+#                         outermost grid dim everywhere)
 #   ref.py              — O(N^2) pure-jnp oracle the tests assert against
 #
 # Kernels self-select ``interpret=True`` off-TPU, so this package works
 # (slowly) on CPU — CI exercises exactly that path.
-from repro.kernels.ops import softsort_apply  # noqa: F401
+from repro.kernels.ops import softsort_apply, softsort_apply_v1  # noqa: F401
 from repro.kernels.ref import softsort_apply_ref  # noqa: F401

@@ -1,9 +1,19 @@
-"""jit'd public wrapper for the fused SoftSort-apply kernel.
+"""jit'd public wrappers for the fused SoftSort-apply kernels.
 
 ``softsort_apply(w, x, tau)`` returns ``(P_soft @ x, column_sums(P_soft))``
-in O(N * block) memory with a custom VJP whose backward pass re-streams
-the score blocks (flash-attention style recomputation) instead of saving
-an N^2 residual.
+in O(N * block) memory with a custom VJP that runs BOTH directions in
+Pallas.  The forward is one fused online-softmax sweep plus a colsum
+reduction (two ``pallas_call``s); it hands ``(perm, ws, m, l, y)`` to
+the backward as residuals, so the backward neither re-sorts nor
+re-derives the softmax normalizers — it streams three Pallas passes
+(delta, transposed-grid ``dx = P^T @ dy`` + ``dw``/``dtau`` column
+reductions, row-grid ``dws``) that never materialize a ``(B, chunk, N)``
+temporary in HBM.  See ``repro.kernels.softsort_apply`` for the kernel
+structure and EXPERIMENTS.md §Perf for the measured pass-count / HBM
+traffic win over the v1 design (kernel forward + chunked-jnp backward),
+which retired the earlier claim that a hand backward "would add risk
+without a roofline win": with residual reuse it is a straight
+HBM-traffic win.
 
 Shape convention (batched throughput path, used by
 ``shuffle_soft_sort_batched`` and the serving layer):
@@ -14,13 +24,15 @@ Shape convention (batched throughput path, used by
     a shared scalar ``tau``.
 
 Internally everything runs batched: the unbatched call is the B = 1
-special case, so there is exactly one kernel code path.  The forward
-runs the Pallas TPU kernels from ``softsort_apply.py`` with the batch as
-the outermost grid dimension (``interpret=True`` automatically off-TPU);
-the backward is a chunked ``lax.scan`` in plain jnp — it is
-bandwidth-bound and XLA fuses it well, so a hand kernel there would add
-risk without a roofline win (see EXPERIMENTS.md §Perf for the
-measurement).
+special case, so there is exactly one kernel code path.  Kernels run
+with the batch as the outermost grid dimension (``interpret=True``
+automatically off-TPU), which keeps the whole train step — forward AND
+backward — on the kernel tier.
+
+``softsort_apply_v1`` preserves the previous design (three forward
+passes, chunked ``lax.scan`` jnp backward that re-sorts and re-softmaxes
+from scratch) purely as the benchmark baseline for
+``benchmarks/kernel_bench.py``; production callers should never use it.
 """
 from __future__ import annotations
 
@@ -29,7 +41,11 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.softsort_apply import softsort_apply_fwd_pallas
+from repro.kernels.softsort_apply import (
+    softsort_apply_bwd_pallas,
+    softsort_apply_fwd_pallas,
+    softsort_apply_fwd_pallas_v1,
+)
 
 _LANE = 128      # TPU lane width: pad d and pick Bc as multiples
 _SUBLANE = 8
@@ -43,11 +59,48 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _block_geometry(n: int, d: int, block_rows: int, block_cols: int):
+    """Resolve (br, bc, padded N, padded d) exactly as the forward does —
+    the backward re-derives the same geometry from the same statics, so
+    residual shapes always line up."""
+    br = min(block_rows, _round_up(n, _SUBLANE))
+    bc = min(block_cols, _round_up(n, _LANE))
+    np_ = _round_up(n, max(br, bc))
+    # Re-derive block sizes that tile the padded length exactly.
+    br = min(br, np_)
+    bc = min(bc, np_)
+    dp = _round_up(d, _LANE)
+    return br, bc, np_, dp
+
+
+def _pad_operands(wb, xb, n, np_, dp, perm=None):
+    """Pad (B, N)/(B, N, d) operands to kernel tiles.  Pad rows of ws are
+    masked out of every reduction in-kernel, pad cols of w are masked via
+    the score mask, x pads with zeros.  Pass the forward's saved ``perm``
+    to gather the sorted keys without re-running argsort (the backward
+    path)."""
+    bsz = wb.shape[0]
+    d = xb.shape[-1]
+    pad_n = np_ - n
+    if perm is None:
+        perm = jnp.argsort(jax.lax.stop_gradient(wb), axis=-1)
+    ws = jnp.take_along_axis(wb, perm, axis=-1)
+    ws_p = jnp.pad(ws, ((0, 0), (0, pad_n))).reshape(bsz, np_, 1)
+    w_p = jnp.pad(wb, ((0, 0), (0, pad_n))).reshape(bsz, 1, np_)
+    x_p = jnp.pad(xb.astype(jnp.float32), ((0, 0), (0, pad_n), (0, dp - d)))
+    return perm, ws_p.astype(jnp.float32), w_p.astype(jnp.float32), x_p
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def softsort_apply(w, x, tau, block_rows: int = 256, block_cols: int = 256,
                    bwd_chunk: int = 256):
-    """Fused (P_soft @ x, colsum(P_soft)); w: (N,) or (B, N), tau scalar."""
-    y, c = _fwd_impl(w, x, tau, block_rows, block_cols)
+    """Fused (P_soft @ x, colsum(P_soft)); w: (N,) or (B, N), tau scalar.
+
+    ``bwd_chunk`` is accepted for API stability but unused: the backward
+    is a Pallas kernel tiled by (block_rows, block_cols), not a chunked
+    jnp scan.
+    """
+    (y, c), _ = _fwd_impl(w, x, tau, block_rows, block_cols)
     return y, c
 
 
@@ -58,38 +111,114 @@ def _fwd_impl(w, x, tau, block_rows, block_cols):
     bsz, n = wb.shape
     d = xb.shape[-1]
     assert xb.shape == (bsz, n, d), (w.shape, x.shape)
-    br = min(block_rows, _round_up(n, _SUBLANE))
-    bc = min(block_cols, _round_up(n, _LANE))
-    np_ = _round_up(n, max(br, bc))
-    # Re-derive block sizes that tile the padded length exactly.
-    br = min(br, np_)
-    bc = min(bc, np_)
-    dp = _round_up(d, _LANE)
-
-    perm = jnp.argsort(jax.lax.stop_gradient(wb), axis=-1)
-    ws = jnp.take_along_axis(wb, perm, axis=-1)
-
-    pad_n = np_ - n
-    # Pad rows of ws with finite values (masked as rows, sliced off), cols
-    # of w with anything (masked in-kernel), x with zeros.
-    ws_p = jnp.pad(ws, ((0, 0), (0, pad_n))).reshape(bsz, np_, 1)
-    w_p = jnp.pad(wb, ((0, 0), (0, pad_n))).reshape(bsz, 1, np_)
-    x_p = jnp.pad(xb.astype(jnp.float32), ((0, 0), (0, pad_n), (0, dp - d)))
+    br, bc, np_, dp = _block_geometry(n, d, block_rows, block_cols)
+    perm, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp)
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
 
-    y_p, c_p = softsort_apply_fwd_pallas(
-        ws_p.astype(jnp.float32), w_p.astype(jnp.float32), x_p, tau_arr,
+    y_p, c_p, m, l = softsort_apply_fwd_pallas(
+        ws_p, w_p, x_p, tau_arr,
+        n=n, br=br, bc=bc, interpret=not _on_tpu())
+    y, c = y_p[:, :n, :d], c_p[:, 0, :n]
+    out = (y, c) if batched else (y[0], c[0])
+    # The y residual is the SLICED (B, N, d) output, not the lane-padded
+    # kernel buffer: dp = round_up(d, 128) would inflate residual HBM by
+    # dp/d (16x at the paper's d=8); the backward re-pads it with zeros
+    # alongside x for the cost of an O(N d) pad.
+    return out, (perm, m, l, y)
+
+
+def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk):
+    out, (perm, m, l, y) = _fwd_impl(w, x, tau, block_rows, block_cols)
+    # Residuals: primals plus (perm, m, l, y) — everything the backward
+    # needs to skip the argsort and the softmax-stats recomputation.
+    return out, (w, x, jnp.asarray(tau, jnp.float32), perm, m, l, y)
+
+
+def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
+    del bwd_chunk                      # legacy knob of the jnp-scan backward
+    w, x, tau, perm, m, l, y = res
+    dy, dc = cot
+    batched = w.ndim == 2
+    wb = w if batched else w[None]
+    xb = x if batched else x[None]
+    yb = y                             # saved in batched (B, N, d) form
+    dyb = dy if batched else dy[None]
+    dcb = dc if batched else dc[None]
+    bsz, n = wb.shape
+    d = xb.shape[-1]
+    br, bc, np_, dp = _block_geometry(n, d, block_rows, block_cols)
+    pad_n = np_ - n
+
+    # Same padded operand layout as the forward (the sorted keys are
+    # re-gathered through the SAVED perm — a cheap O(B N) gather, no
+    # argsort here); cotangent pads are zero so pad slots contribute
+    # nothing to any reduction.
+    _, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp, perm=perm)
+    y_p = jnp.pad(yb, ((0, 0), (0, pad_n), (0, dp - d)))
+    dy_p = jnp.pad(dyb.astype(jnp.float32),
+                   ((0, 0), (0, pad_n), (0, dp - d)))
+    dc_p = jnp.pad(dcb.astype(jnp.float32),
+                   ((0, 0), (0, pad_n))).reshape(bsz, 1, np_)
+    tau_arr = tau.reshape(1, 1)
+
+    dws, dw_cols, dx_p, dtau_cols = softsort_apply_bwd_pallas(
+        ws_p, w_p, x_p, tau_arr,
+        m, l, y_p, dy_p, dc_p,
+        n=n, br=br, bc=bc, interpret=not _on_tpu())
+
+    dws = dws[:, :n, 0]                                  # (B, N) sorted rows
+    dw = dw_cols[:, 0, :n]                               # (B, N) column part
+    # Scatter the sorted-row gradient back through the saved permutation.
+    dw = dw.at[jnp.arange(bsz)[:, None], perm].add(dws)
+    dx = dx_p[:, :n, :d]
+    dtau = jnp.sum(dtau_cols)
+    if not batched:
+        dw, dx = dw[0], dx[0]
+    return dw.astype(w.dtype), dx.astype(x.dtype), dtau
+
+
+softsort_apply.defvjp(_fwd_rule, _bwd_rule)
+
+
+# --------------------------------------------------------------------------
+# v1 baseline: split three-pass forward + chunked jnp-scan backward.
+# Benchmark-only (benchmarks/kernel_bench.py measures fused vs this); the
+# backward re-sorts and re-normalizes from scratch and materializes
+# (B, chunk, N) temporaries — exactly the HBM traffic the fused path
+# eliminates.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def softsort_apply_v1(w, x, tau, block_rows: int = 256,
+                      block_cols: int = 256, bwd_chunk: int = 256):
+    """Previous-generation (P_soft @ x, colsum(P_soft)) — baseline only."""
+    return _fwd_impl_v1(w, x, tau, block_rows, block_cols)
+
+
+def _fwd_impl_v1(w, x, tau, block_rows, block_cols):
+    batched = w.ndim == 2
+    wb = w if batched else w[None]
+    xb = x if batched else x[None]
+    bsz, n = wb.shape
+    d = xb.shape[-1]
+    assert xb.shape == (bsz, n, d), (w.shape, x.shape)
+    br, bc, np_, dp = _block_geometry(n, d, block_rows, block_cols)
+    _, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp)
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+
+    y_p, c_p = softsort_apply_fwd_pallas_v1(
+        ws_p, w_p, x_p, tau_arr,
         n=n, br=br, bc=bc, interpret=not _on_tpu())
     y, c = y_p[:, :n, :d], c_p[:, 0, :n]
     return (y, c) if batched else (y[0], c[0])
 
 
-def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk):
-    y, c = _fwd_impl(w, x, tau, block_rows, block_cols)
+def _fwd_rule_v1(w, x, tau, block_rows, block_cols, bwd_chunk):
+    y, c = _fwd_impl_v1(w, x, tau, block_rows, block_cols)
     return (y, c), (w, x, jnp.asarray(tau, jnp.float32))
 
 
-def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
+def _bwd_rule_v1(block_rows, block_cols, bwd_chunk, res, cot):
     w, x, tau = res
     dy, dc = cot
     batched = w.ndim == 2
@@ -153,4 +282,4 @@ def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
     return dw.astype(w.dtype), dx.astype(x.dtype), dtau
 
 
-softsort_apply.defvjp(_fwd_rule, _bwd_rule)
+softsort_apply_v1.defvjp(_fwd_rule_v1, _bwd_rule_v1)

@@ -1,4 +1,4 @@
-"""Fused flash-style SoftSort-apply Pallas TPU kernels (batched).
+"""Fused flash-style SoftSort-apply Pallas TPU kernels (batched, fwd + bwd).
 
 Computes, without ever materializing the (N, N) soft permutation matrix,
 for every instance b of a leading batch axis:
@@ -8,36 +8,67 @@ for every instance b of a leading batch axis:
     colsum[b] = sum_i P[b]_ij        (B, N)
 
 Structure is exactly flash attention with an L1-distance score and the
-sorted keys playing the role of queries:
+sorted keys playing the role of queries.
 
-  * ``_stats_kernel``  — pass 1: streaming row max ``m`` and denominator
-    ``l`` over column blocks (grid = (B, Ni, Nj), j innermost; m/l output
-    blocks are revisited consecutively so they live in VMEM as
-    accumulators — the TPU sequential-grid idiom).
-  * ``_apply_kernel``  — pass 2: exact P block = exp(s - m)/l, fused
-    (Br, Bc) @ (Bc, d) MXU matmul accumulated into the y block.
-  * ``_colsum_kernel`` — pass 2': same P block math with the i/j grid
-    axes transposed (j outer, i inner) so the colsum block accumulates
-    over row blocks.
+Forward — ONE online-softmax sweep (FlashAttention-2 style) plus the
+colsum reduction, two ``pallas_call``s total, so the score block is
+computed exactly twice and the softmax stats never round-trip to HBM
+mid-forward:
+
+  * ``_fwd_fused_kernel`` — streaming row max ``m``, denominator ``l``
+    AND the un-normalized y accumulator in one pass (grid = (B, Ni, Nj),
+    j innermost; the m/l/y output blocks are revisited consecutively so
+    they live in VMEM as accumulators — the TPU sequential-grid idiom).
+    Each column block rescales the running y by ``exp(m_prev - m_new)``;
+    the final ``1/l`` is applied once at the last column block.  ``m``
+    and ``l`` are kernel *outputs*: the backward reuses them as
+    residuals instead of re-deriving the softmax.
+  * ``_colsum_kernel``    — exact P block = exp(s - m)/l with the i/j
+    grid axes transposed (j outer, i inner) so the colsum block
+    accumulates over row blocks.
+
+Backward — three Pallas passes driven by the ``custom_vjp`` in
+``repro.kernels.ops``, which saves ``(perm, ws, m, l, y)`` from the
+forward so no pass re-sorts or re-normalizes.  With
+``dP_ij = dy_i . x_j + dc_j`` and ``ds = P * (dP - D)`` where
+``D_i = sum_j P_ij dP_ij``:
+
+  * ``_bwd_delta_kernel`` — row grid: ``D_i = dy_i . y_i + (P @ dc)_i``
+    (the first term is flash attention's delta trick — ``sum_j P_ij
+    (dy_i . x_j) = dy_i . y_i`` because y was saved; only the colsum
+    cotangent needs a streamed ``P @ dc``).
+  * ``_bwd_dx_kernel``    — transposed grid (j outer, i inner):
+    ``dx_j = sum_i P_ij dy_i`` (a (Bc, Br) x (Br, d) MXU contraction),
+    plus the column-indexed reductions ``dw_cols_j = sum_i ds_ij
+    sgn_ij / tau`` and a per-column ``dtau`` partial.
+  * ``_bwd_dws_kernel``   — row grid: ``dws_i = -sum_j ds_ij sgn_ij
+    / tau`` (scattered back through ``perm`` by the wrapper).
+
+No (B, chunk, N) ``delta``/``p``/``dp``/``ds`` temporaries ever touch
+HBM — every score/probability block is consumed inside its VMEM tile.
 
 The batch axis is the OUTERMOST grid dimension: each instance is an
 independent sweep over its own (Ni, Nj) tile space, so the accumulator
 idiom above is untouched — b changes only after an instance's tiles are
 exhausted.  Instances share one scalar ``tau`` (the trainer anneals a
 single schedule across the whole batch).  The batch block size is
-``None`` (squeezed), so the kernels themselves see the same 2-D blocks
-as the single-problem version — this file's kernels serve both; the
-unbatched wrapper in ``repro.kernels.ops`` simply runs B = 1.
+``None`` (squeezed), so the kernels themselves see 2-D blocks.
 
 VMEM working set per step ~ Br*Bc (scores) + Bc*d (x block) + Br*d
-(y accumulator) floats; with the default Br = Bc = 256, d <= 512 this is
+(y/dy blocks) floats; with the default Br = Bc = 256, d <= 512 this is
 well under the ~16 MB/core budget and independent of B.  Block shapes
 are (8k, 128m)-aligned so the MXU sees aligned contractions.
 
-All kernels mask columns/rows >= n (true length) with -inf / zero, so
-the wrapper may pad N up to block multiples with arbitrary finite
-values.  ``tau`` arrives as a (1, 1) array so it can be a traced value
-inside jit without retriggering compilation.
+All kernels mask columns >= n (true length) with -inf scores and rows
+>= n out of every column-indexed reduction, so the wrapper may pad N up
+to block multiples with arbitrary finite values.  ``tau`` arrives as a
+(1, 1) array so it can be a traced value inside jit without
+retriggering compilation.
+
+The v1 split forward (separate stats + apply passes, three
+``pallas_call``s) is kept at the bottom as the benchmark baseline for
+``benchmarks/kernel_bench.py`` — it is what PR 1/2 shipped, and the
+fused-vs-v1 rows in BENCH_kernels.json quantify the win.
 """
 from __future__ import annotations
 
@@ -64,6 +95,309 @@ def _row_mask(i, br, n):
     row_ids = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
     return row_ids < n
 
+
+# --------------------------------------------------------------------------
+# Forward: fused online-softmax sweep + colsum.
+# --------------------------------------------------------------------------
+
+def _fwd_fused_kernel(ws_ref, w_ref, x_ref, tau_ref, y_ref, m_ref, l_ref,
+                      *, n: int, bc: int, nj: int):
+    j = pl.program_id(2)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    s = _score(ws_ref[...], w_ref[...], inv_tau)               # (Br, Bc)
+    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    m_prev = m_ref[...]                                        # (Br, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    correction = jnp.exp(m_prev - m_new)
+    p_un = jnp.exp(s - m_new)                                  # un-normalized
+    l_ref[...] = l_ref[...] * correction + jnp.sum(
+        p_un, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    y_ref[...] = y_ref[...] * correction + jnp.dot(
+        p_un, x_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _normalize():
+        y_ref[...] = y_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
+                   *, n: int, br: int, bc: int):
+    # Grid is (B, Nj, Ni): i innermost so the c block accumulates in VMEM.
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
+    p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+    p = jnp.where(_row_mask(i, br, n), p, 0.0)                 # mask pad rows
+
+    @pl.when(i == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.sum(p, axis=0, keepdims=True)
+
+
+def softsort_apply_fwd_pallas(
+    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded
+    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded
+    x: jnp.ndarray,       # (B, Np, dp) payload, padded
+    tau: jnp.ndarray,     # (1, 1) — shared across the batch
+    *,
+    n: int,               # true length
+    br: int,
+    bc: int,
+    interpret: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused forward: (y (B, Np, dp), colsum (B, 1, Np), m, l (B, Np, 1)).
+
+    Two ``pallas_call``s: the fused online-softmax sweep and the
+    transposed-grid colsum reduction.  ``m``/``l`` are returned so the
+    backward can reuse them as residuals.
+    """
+    bsz, np_, dp = x.shape
+    ni, nj = np_ // br, np_ // bc
+    f32 = jnp.float32
+
+    y, m, l = pl.pallas_call(
+        functools.partial(_fwd_fused_kernel, n=n, bc=bc, nj=nj),
+        grid=(bsz, ni, nj),
+        in_specs=[
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # ws rows
+            pl.BlockSpec((None, 1, bc), lambda b, i, j: (b, 0, j)),   # w cols
+            pl.BlockSpec((None, bc, dp), lambda b, i, j: (b, j, 0)),  # x block
+            pl.BlockSpec((1, 1), lambda b, i, j: (0, 0)),             # tau
+        ],
+        out_specs=[
+            pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),  # y
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # m
+            pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # l
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, np_, dp), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        ],
+        interpret=interpret,
+    )(ws, w, x, tau)
+
+    colsum = pl.pallas_call(
+        functools.partial(_colsum_kernel, n=n, br=br, bc=bc),
+        grid=(bsz, nj, ni),
+        in_specs=[
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # ws
+            pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # w
+            pl.BlockSpec((1, 1), lambda b, j, i: (0, 0)),             # tau
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # m
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # l
+        ],
+        out_specs=pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        interpret=interpret,
+    )(ws, w, tau, m, l)
+
+    return y, colsum, m, l
+
+
+# --------------------------------------------------------------------------
+# Backward: three Pallas passes over the saved residuals.
+# --------------------------------------------------------------------------
+
+def _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n):
+    """Exact normalized P block from the saved softmax stats (no re-max,
+    no re-sum) — the residual-reuse core of the backward."""
+    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
+    p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
+    return s, p
+
+
+def _bwd_delta_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, dy_ref, y_ref,
+                      dc_ref, d_ref, *, n: int, bc: int):
+    """D_i = dy_i . y_i + sum_j P_ij dc_j, streamed over column blocks."""
+    j = pl.program_id(2)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    _, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n)
+
+    @pl.when(j == 0)
+    def _init():
+        d_ref[...] = jnp.sum(dy_ref[...] * y_ref[...], axis=-1,
+                             keepdims=True)
+
+    d_ref[...] += jax.lax.dot_general(
+        p, dc_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _bwd_dx_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, dy_ref,
+                   dc_ref, d_ref, dx_ref, dwc_ref, dtc_ref,
+                   *, n: int, br: int, bc: int):
+    """Transposed grid (B, Nj, Ni): per column block accumulate
+    dx_j = P^T @ dy, dw_cols_j = sum_i ds * sgn / tau, and the
+    per-column dtau partial sum_i ds * (-s) / tau."""
+    j = pl.program_id(1)
+    i = pl.program_id(2)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    s, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n)
+    p = jnp.where(_row_mask(i, br, n), p, 0.0)      # pad rows are not rows of P
+    # dP_ij = dy_i . x_j + dc_j
+    dp = jax.lax.dot_general(
+        dy_ref[...], x_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + dc_ref[...]
+    ds = p * (dp - d_ref[...])                                  # (Br, Bc)
+    sgn = jnp.sign(ws_ref[...] - w_ref[...])
+
+    @pl.when(i == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+        dwc_ref[...] = jnp.zeros_like(dwc_ref)
+        dtc_ref[...] = jnp.zeros_like(dtc_ref)
+
+    dx_ref[...] += jax.lax.dot_general(
+        p, dy_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                     # (Bc, dp)
+    dwc_ref[...] += jnp.sum(ds * sgn, axis=0, keepdims=True) * inv_tau
+    # s = -|delta|/tau  =>  d s / d tau = -s / tau; masked cols have
+    # ds == 0 exactly, and NEG_INF is finite, so 0 * (-NEG_INF) == 0.
+    dtc_ref[...] += jnp.sum(ds * (-s), axis=0, keepdims=True) * inv_tau
+
+
+def _bwd_dws_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, dy_ref,
+                    dc_ref, d_ref, dws_ref, *, n: int, bc: int):
+    """Row grid (B, Ni, Nj): dws_i = -sum_j ds_ij * sgn_ij / tau."""
+    j = pl.program_id(2)
+    inv_tau = 1.0 / tau_ref[0, 0]
+    _, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n)
+    dp = jax.lax.dot_general(
+        dy_ref[...], x_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + dc_ref[...]
+    ds = p * (dp - d_ref[...])
+    sgn = jnp.sign(ws_ref[...] - w_ref[...])
+
+    @pl.when(j == 0)
+    def _init():
+        dws_ref[...] = jnp.zeros_like(dws_ref)
+
+    dws_ref[...] += jnp.sum(ds * (-sgn), axis=-1, keepdims=True) * inv_tau
+
+
+def softsort_apply_bwd_pallas(
+    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded
+    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded
+    x: jnp.ndarray,       # (B, Np, dp) payload, padded
+    tau: jnp.ndarray,     # (1, 1)
+    m: jnp.ndarray,       # (B, Np, 1) saved row maxes
+    l: jnp.ndarray,       # (B, Np, 1) saved row denominators
+    y: jnp.ndarray,       # (B, Np, dp) saved forward output
+    dy: jnp.ndarray,      # (B, Np, dp) cotangent of y (pad rows zero)
+    dc: jnp.ndarray,      # (B, 1, Np) cotangent of colsum (pad cols zero)
+    *,
+    n: int,
+    br: int,
+    bc: int,
+    interpret: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused backward from saved residuals.
+
+    Returns (dws (B, Np, 1) — gradient w.r.t. the SORTED keys, to be
+    scattered through ``perm`` by the caller; dw_cols (B, 1, Np);
+    dx (B, Np, dp); dtau_cols (B, 1, Np) — per-column dtau partials,
+    summed to a scalar by the caller).
+    """
+    bsz, np_, dp = x.shape
+    ni, nj = np_ // br, np_ // bc
+    f32 = jnp.float32
+
+    row_spec = pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0))
+    col_spec = pl.BlockSpec((None, 1, bc), lambda b, i, j: (b, 0, j))
+    tau_spec = pl.BlockSpec((1, 1), lambda b, i, j: (0, 0))
+
+    delta = pl.pallas_call(
+        functools.partial(_bwd_delta_kernel, n=n, bc=bc),
+        grid=(bsz, ni, nj),
+        in_specs=[
+            row_spec,                                                 # ws
+            col_spec,                                                 # w
+            tau_spec,                                                 # tau
+            row_spec,                                                 # m
+            row_spec,                                                 # l
+            pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),  # dy
+            pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),  # y
+            col_spec,                                                 # dc
+        ],
+        out_specs=row_spec,                                           # D
+        out_shape=jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        interpret=interpret,
+    )(ws, w, tau, m, l, dy, y, dc)
+
+    # Transposed grid: j outer, i inner, so the column-indexed outputs
+    # (dx, dw_cols, dtau_cols) accumulate in VMEM.
+    dx, dw_cols, dtau_cols = pl.pallas_call(
+        functools.partial(_bwd_dx_kernel, n=n, br=br, bc=bc),
+        grid=(bsz, nj, ni),
+        in_specs=[
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # ws
+            pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # w
+            pl.BlockSpec((None, bc, dp), lambda b, j, i: (b, j, 0)),  # x
+            pl.BlockSpec((1, 1), lambda b, j, i: (0, 0)),             # tau
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # m
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # l
+            pl.BlockSpec((None, br, dp), lambda b, j, i: (b, i, 0)),  # dy
+            pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # dc
+            pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # D
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bc, dp), lambda b, j, i: (b, j, 0)),  # dx
+            pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # dw_cols
+            pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # dtau
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, np_, dp), f32),
+            jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+            jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        ],
+        interpret=interpret,
+    )(ws, w, x, tau, m, l, dy, dc, delta)
+
+    dws = pl.pallas_call(
+        functools.partial(_bwd_dws_kernel, n=n, bc=bc),
+        grid=(bsz, ni, nj),
+        in_specs=[
+            row_spec,                                                 # ws
+            col_spec,                                                 # w
+            pl.BlockSpec((None, bc, dp), lambda b, i, j: (b, j, 0)),  # x
+            tau_spec,                                                 # tau
+            row_spec,                                                 # m
+            row_spec,                                                 # l
+            pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),  # dy
+            col_spec,                                                 # dc
+            row_spec,                                                 # D
+        ],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        interpret=interpret,
+    )(ws, w, x, tau, m, l, dy, dc, delta)
+
+    return dws, dw_cols, dx, dtau_cols
+
+
+# --------------------------------------------------------------------------
+# v1 split forward (stats + apply + colsum, three pallas_calls) — kept as
+# the measured baseline for benchmarks/kernel_bench.py.  Not used by the
+# production path.
+# --------------------------------------------------------------------------
 
 def _stats_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, *, n: int, bc: int):
     j = pl.program_id(2)
@@ -99,36 +433,20 @@ def _apply_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, y_ref,
     y_ref[...] += jnp.dot(p, x_ref[...], preferred_element_type=jnp.float32)
 
 
-def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
-                   *, n: int, br: int, bc: int):
-    # Grid is (B, Nj, Ni): i innermost so the c block accumulates in VMEM.
-    j = pl.program_id(1)
-    i = pl.program_id(2)
-    inv_tau = 1.0 / tau_ref[0, 0]
-    s = _score(ws_ref[...], w_ref[...], inv_tau)
-    s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
-    p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
-    p = jnp.where(_row_mask(i, br, n), p, 0.0)                 # mask pad rows
-
-    @pl.when(i == 0)
-    def _init():
-        c_ref[...] = jnp.zeros_like(c_ref)
-
-    c_ref[...] += jnp.sum(p, axis=0, keepdims=True)
-
-
-def softsort_apply_fwd_pallas(
-    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded
-    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded
-    x: jnp.ndarray,       # (B, Np, dp) payload, padded
-    tau: jnp.ndarray,     # (1, 1) — shared across the batch
+def softsort_apply_fwd_pallas_v1(
+    ws: jnp.ndarray,
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    tau: jnp.ndarray,
     *,
-    n: int,               # true length
+    n: int,
     br: int,
     bc: int,
     interpret: bool,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Batched fused forward: returns (y (B, Np, dp), colsum (B, 1, Np))."""
+    """v1 baseline forward: three passes (stats, apply, colsum), scores
+    computed three times, m/l round-tripping through HBM between passes.
+    Returns (y (B, Np, dp), colsum (B, 1, Np))."""
     bsz, np_, dp = x.shape
     ni, nj = np_ // br, np_ // bc
     f32 = jnp.float32

@@ -24,7 +24,9 @@ Two workloads share this entrypoint:
   Scale-out: ``--mesh-devices D`` shards each coalesced batch across a
   D-device "data" mesh, and ``--tournament-rungs K --restarts S`` runs
   the S seeds per request as a successive-halving tournament
-  (EXPERIMENTS.md §Scaling).
+  (EXPERIMENTS.md §Scaling).  ``--use-kernel`` routes every instance's
+  SoftSort apply — forward AND backward — through the fused Pallas
+  kernel tier (EXPERIMENTS.md §Perf) instead of the chunked-jnp stream.
 """
 from __future__ import annotations
 
@@ -217,7 +219,8 @@ def serve_sorts(args):
     hw = (args.sort_hw, args.sort_n // args.sort_hw)
     assert hw[0] * hw[1] == args.sort_n, (args.sort_n, args.sort_hw)
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
-                                chunk=min(256, args.sort_n))
+                                chunk=min(256, args.sort_n),
+                                use_kernel=args.use_kernel)
     mesh = make_sort_mesh(args.mesh_devices) if args.mesh_devices else None
     server = SortServer(hw, d=args.sort_d, cfg=cfg,
                         max_batch=args.max_batch, max_wait_ms=args.wait_ms,
@@ -275,6 +278,9 @@ def main(argv=None):
                     help=">1 runs restarts as a successive-halving "
                          "tournament (needs --restarts > 1)")
     ap.add_argument("--cull-fraction", type=float, default=0.5)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="run the SoftSort apply (fwd+bwd) through the "
+                         "fused Pallas kernel tier instead of chunked jnp")
     args = ap.parse_args(argv)
 
     if args.workload == "sort":

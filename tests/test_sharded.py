@@ -272,3 +272,35 @@ def test_sort_server_mesh_and_tournament_dispatch():
     for order, _, losses in results:
         np.testing.assert_array_equal(np.sort(order), np.arange(n))
         assert np.isfinite(np.asarray(losses)).all()
+
+
+def test_sort_server_kernel_dispatch():
+    """--use-kernel serving path: the coalesced batch runs the fused
+    Pallas apply (fwd+bwd, interpret mode on CPU) end to end and keeps
+    the sequential-identity contract against a kernel-config run."""
+    from repro.launch.serve import SortServer, main
+
+    n, hw, d = 16, (4, 4), 2
+    cfg = ShuffleSoftSortConfig(rounds=2, inner_steps=2, chunk=16,
+                                use_kernel=True)
+    rng = np.random.RandomState(1)
+    xs = rng.rand(2, n, d).astype(np.float32)
+    server = SortServer(hw, d=d, cfg=cfg, max_batch=2, max_wait_ms=200.0)
+    try:
+        futs = [server.submit(xs[i], key=jax.random.PRNGKey(i))
+                for i in range(2)]
+        results = [f.result(timeout=300) for f in futs]
+    finally:
+        server.close()
+    for i, (order, _, losses) in enumerate(results):
+        np.testing.assert_array_equal(np.sort(order), np.arange(n))
+        assert np.isfinite(np.asarray(losses)).all()
+        o_ref, _, _ = shuffle_soft_sort(xs[i], hw, cfg,
+                                        key=jax.random.PRNGKey(i))
+        np.testing.assert_array_equal(order, o_ref)
+
+    # CLI smoke: --use-kernel threads into the coalesced batch config.
+    out = main(["--workload", "sort", "--requests", "2", "--sort-n", "16",
+                "--sort-hw", "4", "--sort-d", "2", "--rounds", "2",
+                "--use-kernel"])
+    assert out["batches"] >= 1

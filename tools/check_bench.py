@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Schema validator for the committed ``BENCH_*.json`` benchmark records.
+
+Benchmarks are committed artifacts that docs tables are built from, so
+CI gates their shape: every record must carry the common envelope
+(``bench`` name, ``backend``, a non-empty ``cells`` list of objects)
+and every numeric leaf anywhere in the document must be finite — a NaN
+or Infinity in a committed benchmark means a sweep silently diverged.
+
+Bench-specific checks:
+
+  * ``kernel_bench``  — every cell needs the measured/parity/model
+    columns, and every ``parity`` entry must be within ``--tol`` of the
+    dense oracle (relative error; the columns are backend-independent,
+    so a committed file that fails this was generated from broken
+    kernels, whatever machine produced it).
+  * ``batched_bench --devices`` (BENCH_scaling.json) — cells need the
+    sweep axes and timing columns.
+
+Usage (CI runs exactly this, see .github/workflows/ci.yml):
+
+    python tools/check_bench.py                 # validates all BENCH_*.json
+    python tools/check_bench.py BENCH_kernels.json --tol 2e-3
+
+Exit code 0 = every file valid.  No third-party deps — runs anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import sys
+
+ENVELOPE_KEYS = ("bench", "backend", "cells")
+
+KERNEL_CELL_KEYS = ("N", "d", "B", "fwd_s", "fwdgrad_s", "parity",
+                    "model_hbm_mb", "model_fused_over_v1", "passes")
+KERNEL_IMPLS = ("dense", "chunked", "kernel_v1", "fused")
+
+SCALING_CELL_KEYS = ("devices", "B", "S", "N", "vmap_s", "shard_s",
+                     "tournament_s", "tournament_loss_gap")
+
+
+def _walk_numbers(obj, path=""):
+    """Yield (path, value) for every numeric leaf."""
+    if isinstance(obj, bool):
+        return
+    if isinstance(obj, (int, float)):
+        yield path, float(obj)
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk_numbers(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _walk_numbers(v, f"{path}[{i}]")
+
+
+def check_file(path: str, tol: float) -> list[str]:
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object"]
+    for key in ENVELOPE_KEYS:
+        if key not in doc:
+            errors.append(f"{path}: missing required key '{key}'")
+    cells = doc.get("cells")
+    if not isinstance(cells, list) or not cells:
+        errors.append(f"{path}: 'cells' must be a non-empty list")
+        cells = []
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            errors.append(f"{path}: cells[{i}] is not an object")
+
+    for p, v in _walk_numbers(doc):
+        if not math.isfinite(v):
+            errors.append(f"{path}: non-finite number at {p}: {v}")
+
+    bench = doc.get("bench", "")
+    if bench == "kernel_bench":
+        for i, cell in enumerate(cells):
+            if not isinstance(cell, dict):
+                continue
+            for key in KERNEL_CELL_KEYS:
+                if key not in cell:
+                    errors.append(
+                        f"{path}: cells[{i}] missing '{key}'")
+            for col in ("fwd_s", "fwdgrad_s"):
+                for impl in KERNEL_IMPLS:
+                    if impl not in cell.get(col, {}):
+                        errors.append(
+                            f"{path}: cells[{i}].{col} missing '{impl}'")
+            for name, val in cell.get("parity", {}).items():
+                if not isinstance(val, (int, float)) or val > tol:
+                    errors.append(
+                        f"{path}: cells[{i}].parity.{name} = {val} "
+                        f"exceeds tol {tol}")
+    elif bench.startswith("batched_bench"):
+        for i, cell in enumerate(cells):
+            if not isinstance(cell, dict):
+                continue
+            for key in SCALING_CELL_KEYS:
+                if key not in cell:
+                    errors.append(f"{path}: cells[{i}] missing '{key}'")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json files (default: glob the cwd)")
+    ap.add_argument("--tol", type=float, default=2e-3,
+                    help="max allowed parity error for kernel_bench")
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("check_bench: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+
+    all_errors: list[str] = []
+    for path in files:
+        errs = check_file(path, args.tol)
+        status = "FAIL" if errs else "ok"
+        print(f"check_bench: {path}: {status}")
+        all_errors.extend(errs)
+    for e in all_errors:
+        print(f"  {e}", file=sys.stderr)
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
