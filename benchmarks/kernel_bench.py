@@ -6,10 +6,15 @@ one row per implementation layer:
   * ``kernel_v1`` — v1 Pallas path: 3-pass forward + chunked jnp-scan
                     backward (``ops.softsort_apply_v1``, PR 1/2 design)
   * ``fused``     — fused online-softmax forward (2 passes) + full
-                    Pallas backward with (perm, ws, m, l, y) residuals
+                    Pallas backward with (perm, m, l, y) residuals
+  * ``banded``    — O(N*K) band-grid Pallas path
+                    (``ops.softsort_apply_banded``): both axes in
+                    sorted-rank order, width-(2K+1) band scored,
+                    payload carried d-on-sublanes; each cell's K is the
+                    fourth sweep axis
 
 Emits ``BENCH_kernels.json`` (committed at the repo root; validated by
-``tools/check_bench.py``).  Two kinds of columns:
+``tools/check_bench.py``).  Three kinds of columns:
 
   * measured wall-clock (``fwd_s`` / ``fwdgrad_s``) — on a CPU CI
     backend the Pallas kernels run in INTERPRET mode, so these are
@@ -18,16 +23,21 @@ Emits ``BENCH_kernels.json`` (committed at the repo root; validated by
     backward gets native XLA fusion while the Pallas backward pays
     emulation overhead).  On a real TPU the same columns are the
     roofline numbers.
-  * parity (``parity``) — max abs error of each implementation's
-    forward and d(loss)/dw against the dense oracle.  EXACT everywhere,
-    backend-independent; CI gates on these (``--check``).
+  * parity (``parity`` / ``band``) — max abs error against the dense
+    oracle (and, for the banded kernel, against the windowed jnp oracle
+    it must match EXACTLY).  Backend-independent; CI gates on these
+    (``--check``).  Banded-vs-dense parity is gated against the
+    recorded ``band.tail_bound`` (plus float tolerance): the keys here
+    are a shuffled arange — the trainer's per-round linear init — so
+    the K-rank gap is K exactly and the bound is astronomically small.
   * modeled HBM traffic (``model_hbm_mb``) — per-pass bytes moved
     between HBM and VMEM for one fwd+grad step, counted mechanically
     from the block specs (block bytes x revisit count; see
     ``_model_hbm_bytes``).  At the paper's d <= 50 the apply is
     memory-bound (EXPERIMENTS.md §Roofline), so TPU step time is
-    proportional to these bytes and ``model_fused_over_v1`` is the
-    expected on-TPU fwd+grad speedup of the fused path.
+    proportional to these bytes; ``model_fused_over_v1`` and
+    ``model_banded_over_fused`` are the expected on-TPU fwd+grad
+    speedups of each transition.
 
 Usage:
 
@@ -45,51 +55,61 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.softsort import softsort_apply_chunked
+from repro.core.softsort import (
+    band_tail_bound,
+    softsort_apply_banded as banded_oracle,
+    softsort_apply_chunked,
+)
 from repro.kernels.ops import (
+    _band_geometry,
     _block_geometry,
     softsort_apply,
+    softsort_apply_banded,
     softsort_apply_v1,
 )
 from repro.kernels.ref import softsort_apply_ref
 
-FULL_CELLS = [  # (N, d, B)
-    (1024, 8, 1),
-    (1024, 8, 8),
-    (1024, 50, 1),
-    (4096, 8, 1),
+FULL_CELLS = [  # (N, d, B, K)
+    (1024, 8, 1, 128),
+    (1024, 8, 8, 128),
+    (1024, 50, 1, 128),
+    (4096, 8, 1, 256),
 ]
-SMOKE_CELLS = [(384, 8, 2)]    # multi-block grid (2x2 tiles), tiny runtime
+SMOKE_CELLS = [(384, 8, 2, 64)]    # multi-block grids, tiny runtime
 
 F32 = 4                        # bytes
 
 
-def _time(fn, *args, reps: int = 3) -> float:
+def _time(fn, *args, reps: int = 3):
+    """(mean seconds over reps, last output) — the output is returned so
+    parity columns reuse it instead of re-running the (interpret-mode
+    slow) computation a third time."""
     out = fn(*args)            # compile
     jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+    return (time.perf_counter() - t0) / reps, out
 
 
 def _batched_ref(w, x, tau):
     return jax.vmap(lambda wi, xi: softsort_apply_ref(wi, xi, tau))(w, x)
 
 
-def _impls(tau):
+def _impls(tau, band):
     """name -> apply(w (B,N), x (B,N,d)) returning (y, c)."""
     return {
         "dense": lambda w, x: _batched_ref(w, x, tau),
         "chunked": lambda w, x: softsort_apply_chunked(w, x, tau, 256),
         "kernel_v1": lambda w, x: softsort_apply_v1(w, x, tau),
         "fused": lambda w, x: softsort_apply(w, x, tau),
+        "banded": lambda w, x: softsort_apply_banded(w, x, tau, band),
     }
 
 
-def _model_hbm_bytes(n: int, d: int, bsz: int) -> dict:
-    """Per-step (fwd+grad) HBM<->VMEM bytes for the two kernel paths,
+def _model_hbm_bytes(n: int, d: int, bsz: int, band: int) -> dict:
+    """Per-step (fwd+grad) HBM<->VMEM bytes for the kernel paths,
     counted from the block specs: each pass moves ``block bytes x
     revisit count`` per operand (an operand whose index map ignores the
     innermost grid axis is fetched once per outer step and reused).
@@ -99,34 +119,41 @@ def _model_hbm_bytes(n: int, d: int, bsz: int) -> dict:
     one write + one read each, 6 x N^2 x 4 bytes per instance (delta,
     s, sgn fold into fused elementwise ops and are not counted — the
     model is conservative in v1's favor).  The fused backward consumes
-    every score block inside its VMEM tile.
+    every score block inside its VMEM tile but still STREAMS the full
+    (N/block)^2 tile space; the banded path visits only the
+    (N/blk) * (2*ceil(K/blk)+1) band cells AND carries the payload
+    d-on-sublanes (dsub = round_up(d, 8) instead of the 128-lane pad),
+    which is where its order-of-magnitude byte reduction comes from at
+    the paper's small d.
     """
     br, bc, np_, dp = _block_geometry(n, d, 256, 256)
     ni, nj = np_ // br, np_ // bc
     keys = np_ * F32                      # one (Np,)-sized vector
-    xmat = np_ * dp * F32                 # one (Np, dp)-sized matrix
+    xmat = np_ * dp * F32                 # one lane-padded (Np, dp) matrix
 
     # Streamed passes (per instance).  "re-read k x" = the operand's
     # index map varies with the inner grid axis.
     fwd_fused = (
-        (keys + keys * ni + xmat * ni + 2 * keys + xmat)   # fused sweep:
-        #  ws once, w re-read per row block, x re-read per row block,
-        #  m/l/y written once
-        + (2 * keys + 2 * keys * nj + keys + xmat * nj)    # colsum: ws/m/l
-        #  re-read per col block, c written once, (x absent)
+        # fused sweep: ws once, w/x re-read per row block, y/m/l written
+        (keys + keys * ni + xmat * ni + xmat + 2 * keys)
+        # colsum: w once, ws/m/l re-read per col block, c written
+        + (keys + 3 * keys * nj + keys)
     )
     bwd_fused = (
-        # delta: dy/y row-aligned (once), w/dc re-read per row block
-        (2 * xmat + 2 * keys * ni + 4 * keys)
-        # dx pass: dy re-read per col block, x once, dx/dwc/dtc written
-        + (xmat * nj + xmat + 3 * keys + 4 * keys * nj + xmat)
-        # dws pass: x re-read per row block, dy once, dws written
-        + (xmat * ni + xmat + 4 * keys * ni + keys)
+        # delta: dy/y row-aligned (once), ws/m/l once, w/dc re-read per
+        # row block, D written
+        (2 * xmat + 3 * keys + 2 * keys * ni + keys)
+        # dx pass: dy re-read per col block, x once, ws/m/l/D re-read,
+        # w/dc once, dx/dw_cols/dtau written
+        + (xmat * nj + xmat + 4 * keys * nj + 2 * keys + xmat + 2 * keys)
+        # dws pass: x re-read per row block, dy once, w/dc re-read,
+        # ws/m/l/D once, dws written
+        + (xmat * ni + xmat + 2 * keys * ni + 4 * keys + keys)
     )
     fwd_v1 = (
         (keys + keys * ni + 2 * keys)                      # stats pass
         + (keys + keys * ni + xmat * ni + 2 * keys + xmat)  # apply pass
-        + (2 * keys + 2 * keys * nj + keys)                # colsum pass
+        + (keys + 3 * keys * nj + keys)                    # colsum pass
         # + m/l round-trip between stats and apply (written then re-read
         # per row block) — the mid-forward HBM traffic the fusion removes
         + 2 * keys * 2
@@ -134,27 +161,58 @@ def _model_hbm_bytes(n: int, d: int, bsz: int) -> dict:
     n2 = 6 * n * n * F32                                   # p/dP/ds, w+r
     bwd_v1 = n2 + 2 * n * d * F32 * (n // min(256, n))     # + x/dy per chunk
 
+    # Banded path: square blk-blocks, band cells only, transposed
+    # payload (dsub sublanes x Np lanes).
+    blk, npb, dsub = _band_geometry(n, d, 256)
+    nib = npb // blk
+    off = -(-band // blk)
+    cells = nib * (2 * off + 1)           # vs nib^2 dense grid cells
+    bkeys = npb * F32
+    keyblk = blk * F32
+    xtb = blk * dsub * F32                # one payload band block
+    xt = npb * dsub * F32                 # whole transposed payload
+    fwd_banded = (
+        # band sweep: wr once, wc/xt re-read per band cell, y/m/l written
+        (bkeys + cells * keyblk + cells * xtb + xt + 2 * bkeys)
+        # band colsum: wc once, wr/m/l re-read per band cell, c written
+        + (bkeys + 3 * cells * keyblk + bkeys)
+    )
+    bwd_banded = (
+        # delta: dy_t/y_t row-aligned once, wr/m/l once, wc/dc per cell
+        (2 * xt + 3 * bkeys + 2 * cells * keyblk + bkeys)
+        # dcol: dy_t per cell, xs_t once, wr/m/l/D per cell, wc/dc once,
+        # dxs_t/dw_col/dtau written
+        + (cells * xtb + xt + 4 * cells * keyblk + 2 * bkeys + xt
+           + 2 * bkeys)
+        # dws: xs_t per cell, dy_t once, wc/dc per cell, wr/m/l/D once,
+        # dws written
+        + (cells * xtb + xt + 2 * cells * keyblk + 4 * bkeys + bkeys)
+    )
+
     return {
         "kernel_v1": bsz * (fwd_v1 + bwd_v1) / 1e6,
         "fused": bsz * (fwd_fused + bwd_fused) / 1e6,
+        "banded": bsz * (fwd_banded + bwd_banded) / 1e6,
     }
 
 
-def run_cell(n: int, d: int, bsz: int, tau: float = 0.5,
+def run_cell(n: int, d: int, bsz: int, band: int, tau: float = 0.5,
              reps: int = 3) -> dict:
     k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(n + d + bsz), 4)
-    # Keys are unique by construction (shuffled linspace, the trainer's
-    # arange-scale state): at a bitwise-equal tie |.| has no derivative
-    # and blocked vs dense autodiff legitimately pick different
-    # subgradients, which would poison the parity gate with a
-    # measure-zero artifact (a normal draw at N=4096 f32 does collide).
+    # Keys are a shuffled arange — exactly the per-round linear init the
+    # trainer uses (w = arange(N) re-shuffled each round), so the bench
+    # measures the operating regime: unit rank gaps, no bitwise ties (at
+    # a bitwise-equal tie |.| has no derivative and blocked vs dense
+    # autodiff legitimately pick different subgradients), and a K-rank
+    # key spread of exactly K, which is what makes the banded tier's
+    # tail bound (and hence its vs-dense parity gate) meaningful.
     w = jax.vmap(lambda k: jax.random.permutation(
-        k, jnp.linspace(-2.0, 2.0, n)))(jax.random.split(k1, bsz))
+        k, jnp.arange(n, dtype=jnp.float32)))(jax.random.split(k1, bsz))
     x = jax.random.normal(k2, (bsz, n, d))
     a = jax.random.normal(k3, (bsz, n, d))
     b = jax.random.normal(k4, (bsz, n))
 
-    impls = _impls(tau)
+    impls = _impls(tau, band)
 
     def loss_fn(apply_fn):
         def f(w, x):
@@ -164,12 +222,9 @@ def run_cell(n: int, d: int, bsz: int, tau: float = 0.5,
 
     fwd_s, fwdgrad_s, grads, outs = {}, {}, {}, {}
     for name, fn in impls.items():
-        jfn = jax.jit(fn)
-        fwd_s[name] = _time(jfn, w, x, reps=reps)
+        fwd_s[name], outs[name] = _time(jax.jit(fn), w, x, reps=reps)
         jg = jax.jit(jax.value_and_grad(loss_fn(fn)))
-        fwdgrad_s[name] = _time(jg, w, x, reps=reps)
-        outs[name] = jfn(w, x)
-        grads[name] = jg(w, x)[1]
+        fwdgrad_s[name], (_, grads[name]) = _time(jg, w, x, reps=reps)
 
     y_ref, c_ref = outs["dense"]
     dw_ref = grads["dense"]
@@ -186,16 +241,35 @@ def run_cell(n: int, d: int, bsz: int, tau: float = 0.5,
         parity[f"{name}_c_relerr"] = relerr(outs[name][1], c_ref)
         parity[f"{name}_dw_relerr"] = relerr(grads[name], dw_ref)
 
-    model = _model_hbm_bytes(n, d, bsz)
+    # Banded: exact against its windowed jnp oracle, within the analytic
+    # tail bound (plus float noise) against the dense oracle.
+    ob = jax.jit(lambda w, x: banded_oracle(w, x, tau, band))
+    y_ob, c_ob = ob(w, x)
+    dw_ob = jax.jit(jax.grad(loss_fn(
+        lambda w, x: banded_oracle(w, x, tau, band))))(w, x)
+    band_cols = {
+        "K": band,
+        "tail_bound": float(jnp.max(band_tail_bound(w, tau, band))),
+        "vs_oracle_y_relerr": relerr(outs["banded"][0], y_ob),
+        "vs_oracle_c_relerr": relerr(outs["banded"][1], c_ob),
+        "vs_oracle_dw_relerr": relerr(grads["banded"], dw_ob),
+        "vs_dense_y_relerr": relerr(outs["banded"][0], y_ref),
+        "vs_dense_c_relerr": relerr(outs["banded"][1], c_ref),
+        "vs_dense_dw_relerr": relerr(grads["banded"], dw_ref),
+    }
+
+    model = _model_hbm_bytes(n, d, bsz, band)
     return {
         "N": n, "d": d, "B": bsz, "tau": tau,
         "fwd_s": fwd_s,
         "fwdgrad_s": fwdgrad_s,
         "parity": parity,
+        "band": band_cols,
         "model_hbm_mb": model,
         "model_fused_over_v1": model["kernel_v1"] / model["fused"],
+        "model_banded_over_fused": model["fused"] / model["banded"],
         "passes": {"kernel_v1_fwd": 3, "fused_fwd": 2, "fused_bwd": 3,
-                   "kernel_v1_bwd": 0},
+                   "banded_fwd": 2, "banded_bwd": 3, "kernel_v1_bwd": 0},
     }
 
 
@@ -204,8 +278,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="single tiny multi-block cell (CI)")
     ap.add_argument("--check", action="store_true",
-                    help="assert every parity column <= --tol and exit "
-                         "non-zero otherwise")
+                    help="assert every parity column <= --tol (banded-vs-"
+                         "dense <= tol + tail bound) and exit non-zero "
+                         "otherwise")
     ap.add_argument("--tol", type=float, default=2e-3,
                     help="parity gate: max abs error vs the dense "
                          "oracle, scaled by the gradient magnitude")
@@ -217,16 +292,18 @@ def main(argv=None):
 
     cells = SMOKE_CELLS if args.smoke else FULL_CELLS
     rows = []
-    for n, d, bsz in cells:
-        cell = run_cell(n, d, bsz, reps=args.reps)
+    for n, d, bsz, band in cells:
+        cell = run_cell(n, d, bsz, band, reps=args.reps)
         rows.append(cell)
-        print(f"N={n} d={d} B={bsz}: "
+        print(f"N={n} d={d} B={bsz} K={band}: "
               f"fwd fused {cell['fwd_s']['fused']*1e3:.1f}ms "
-              f"(v1 {cell['fwd_s']['kernel_v1']*1e3:.1f}ms), "
-              f"fwd+grad fused {cell['fwdgrad_s']['fused']*1e3:.1f}ms "
-              f"(v1 {cell['fwdgrad_s']['kernel_v1']*1e3:.1f}ms), "
+              f"banded {cell['fwd_s']['banded']*1e3:.1f}ms, "
               f"model fused/v1 HBM {cell['model_fused_over_v1']:.2f}x, "
-              f"fused dw err {cell['parity']['fused_dw_relerr']:.2e}")
+              f"banded/fused win {cell['model_banded_over_fused']:.2f}x, "
+              f"banded dw err vs oracle "
+              f"{cell['band']['vs_oracle_dw_relerr']:.2e} "
+              f"(vs dense {cell['band']['vs_dense_dw_relerr']:.2e}, "
+              f"bound {cell['band']['tail_bound']:.2e})")
 
     doc = {
         "bench": "kernel_bench",
@@ -237,7 +314,8 @@ def main(argv=None):
                  "baseline gets native XLA fusion); parity columns are "
                  "exact; model_hbm_mb counts per-step HBM<->VMEM bytes "
                  "from the block specs and is the memory-bound TPU "
-                 "projection (EXPERIMENTS.md §Roofline)"),
+                 "projection (EXPERIMENTS.md §Roofline); banded "
+                 "vs-dense parity is gated against band.tail_bound"),
         "cells": rows,
     }
     out = args.out or (None if args.smoke else "BENCH_kernels.json")
@@ -252,10 +330,18 @@ def main(argv=None):
             for key, val in cell["parity"].items():
                 if not np.isfinite(val) or val > args.tol:
                     bad.append((cell["N"], cell["d"], cell["B"], key, val))
+            bound = cell["band"]["tail_bound"]
+            for key, val in cell["band"].items():
+                if key in ("K", "tail_bound"):
+                    continue
+                lim = args.tol + (bound if key.startswith("vs_dense") else 0)
+                if not np.isfinite(val) or val > lim:
+                    bad.append((cell["N"], cell["d"], cell["B"],
+                                f"band.{key}", val))
         if bad:
             raise SystemExit(f"parity gate failed (tol={args.tol}): {bad}")
-        print(f"parity gate OK (tol={args.tol}, "
-              f"{sum(len(c['parity']) for c in rows)} columns)")
+        ncols = sum(len(c["parity"]) + len(c["band"]) - 2 for c in rows)
+        print(f"parity gate OK (tol={args.tol}, {ncols} columns)")
     return doc
 
 

@@ -2,7 +2,9 @@
 # with N parameters (softsort, Algorithm 1 driver, losses eq. 2-4,
 # metrics, and the baselines the paper compares against).
 from repro.core.softsort import (  # noqa: F401
+    band_tail_bound,
     softsort_matrix,
+    softsort_apply_banded,
     softsort_apply_chunked,
     hard_permutation,
     is_valid_permutation,

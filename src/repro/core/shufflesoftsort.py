@@ -37,6 +37,15 @@ top: anneal in rungs, cull the worst restarts at each boundary, spend
 the freed compute finishing only plausible seeds.  Scaling and
 cull-tradeoff measurements: EXPERIMENTS.md §Scaling.
 
+Orthogonally, ``cfg.band`` swaps the O(N^2) SoftSort apply for the
+O(N * K) banded tier once the anneal is cold enough: the schedule
+splits at a single dense->banded switch round (``_band_switch_round``,
+a host-side model of the tail bound on the trainer's linear re-init),
+so every engine — sequential, vmap, shard_map, tournament — runs the
+identical per-round apply and the bit-identity contracts above carry
+over unchanged.  Banded model + measured tradeoff: EXPERIMENTS.md
+§Perf.
+
 Return contract, shared by every driver here: ``order`` is the (N,)
 int32 permutation mapping grid cell -> input row, ``sorted`` is
 ``x[order]``, and ``losses`` is the per-round loss trace (leading batch
@@ -59,7 +68,7 @@ except ImportError:                       # pragma: no cover - jax >= 0.7
 from jax.sharding import PartitionSpec as P
 
 from repro.core.losses import grid_sorting_loss, mean_pairwise_distance
-from repro.core.softsort import softsort_apply_chunked
+from repro.core.softsort import softsort_apply_banded, softsort_apply_chunked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +85,12 @@ class ShuffleSoftSortConfig:
     lambda_sigma: float = 2.0
     chunk: int = 256            # row-block size for streamed softsort
     use_kernel: bool = False    # route the apply through the Pallas kernel
+    # Banded apply tier (EXPERIMENTS.md §Perf): None = always dense;
+    # an int K or "auto" enables the O(N*K) banded apply once the anneal
+    # is cold enough that its modeled tail bound drops below band_eps —
+    # early hot-tau rounds still run dense (see _band_switch_round).
+    band: int | str | None = None
+    band_eps: float = 1e-6      # tail-mass threshold for the tau switch
 
 
 def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
@@ -310,6 +325,36 @@ def _engine_run(xs_t, orders, keys, taus, norms_t, *, hw, cfg, apply_fn,
     return orders, keys, losses
 
 
+def _run_segments(xs_t, orders, keys, taus, norms_t, *, start: int,
+                  switch: int, hw, cfg: ShuffleSoftSortConfig,
+                  dense_fn, band_fn, mesh):
+    """Run a contiguous slice of the anneal, splitting it at the
+    dense->banded switch round.
+
+    ``taus`` is the slice covering global rounds [start, start +
+    len(taus)); ``switch`` is the GLOBAL round index from
+    ``_band_switch_round`` (so the tournament's per-rung slices land on
+    the same per-round apply the uninterrupted engines use — the
+    bit-identity contract needs every engine to agree round-by-round on
+    which apply ran).  At most two ``_engine_run`` calls: the dense
+    prefix and the banded suffix; keys/orders chain through, so the PRNG
+    streams are exactly those of a single unsegmented run.
+
+    Returns (orders (BS, N), keys (BS, 2), losses (R_slice, BS)).
+    """
+    end = start + len(taus)
+    cut = min(max(switch, start), end)
+    parts = []
+    for s0, s1, fn in ((start, cut, dense_fn), (cut, end, band_fn)):
+        if s1 > s0:
+            orders, keys, seg = _engine_run(
+                xs_t, orders, keys, taus[s0 - start:s1 - start], norms_t,
+                hw=hw, cfg=cfg, apply_fn=fn, mesh=mesh)
+            parts.append(seg)
+    losses = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return orders, keys, losses
+
+
 def _tau_schedule(cfg: ShuffleSoftSortConfig) -> np.ndarray:
     """Outer-round temperatures, (R,) float32: geometric anneal from
     tau_start to tau_end.
@@ -323,26 +368,92 @@ def _tau_schedule(cfg: ShuffleSoftSortConfig) -> np.ndarray:
                       ** (np.arange(1, cfg.rounds + 1) / cfg.rounds))
 
 
-def _select_apply_fn(cfg: ShuffleSoftSortConfig):
-    """Resolve the ``use_kernel`` switch to a per-instance apply callable.
+def _select_apply_fn(cfg: ShuffleSoftSortConfig, band: int | None = None):
+    """Resolve (``use_kernel``, ``band``) to a per-instance apply callable.
 
     ``use_kernel=False`` — streamed pure-jnp ``softsort_apply_chunked``
     (runs everywhere; the everywhere-runnable oracle twin of the kernel
     path).  ``use_kernel=True`` — the fused Pallas TPU path from
     ``repro.kernels.ops``, which now covers the FULL train step: the
     forward is one online-softmax sweep plus the colsum pass, and the
-    backward runs in Pallas too, reusing the forward's ``(perm, ws, m,
-    l, y)`` residuals instead of falling back to a jnp re-computation
+    backward runs in Pallas too, reusing the forward's ``(perm, m, l,
+    y)`` residuals instead of falling back to a jnp re-computation
     (``interpret=True`` automatically off-TPU; measured pass-count /
-    HBM-traffic win in EXPERIMENTS.md §Perf).  Both compute
-    (P_soft @ x, colsum(P_soft)) in O(N * block) memory and both are
-    vmap- and grad-compatible, so every engine (sequential, vmap, mesh,
-    tournament) accepts either transparently.
+    HBM-traffic win in EXPERIMENTS.md §Perf).
+
+    ``band`` (a RESOLVED half-width, see ``resolve_band``) swaps in the
+    O(N * K) banded variant of whichever tier is selected — the windowed
+    pure-jnp oracle or the band-grid Pallas kernels.  All four callables
+    compute (P_soft @ x, colsum(P_soft)) without an (N, N) array and all
+    are vmap- and grad-compatible, so every engine (sequential, vmap,
+    mesh, tournament) accepts any of them transparently.
     """
     if cfg.use_kernel:
         from repro.kernels.ops import softsort_apply
+        from repro.kernels.ops import softsort_apply_banded as kernel_banded
+        if band is not None:
+            return functools.partial(kernel_banded, band=band)
         return softsort_apply
+    if band is not None:
+        return functools.partial(softsort_apply_banded, band=band)
     return functools.partial(softsort_apply_chunked, chunk=cfg.chunk)
+
+
+def resolve_band(cfg: ShuffleSoftSortConfig, n: int) -> int | None:
+    """Resolve ``cfg.band`` to a concrete half-width K (or None = dense).
+
+    ``"auto"`` sizes the band from two requirements (EXPERIMENTS.md
+    §Perf): (a) large enough that the modeled tail bound clears
+    ``band_eps`` at the COLDEST schedule temperature ``tau_end`` — the
+    regime the run must finish banded in; hot early rounds are the
+    DISPATCHER's job (``_band_switch_round`` holds them dense), so they
+    don't inflate K.  With the trainer's linear re-init ``w =
+    arange(N)`` each round the K-rank gap starts at K exactly and the
+    per-round Adam drift is a few units, hence the half-gap model
+    ``K >= 2 * tau_end * ln(N / eps)``.  And (b) a floor of N/16
+    (rounded up to 64) so the asymptotic O(N/K) saving doesn't chase a
+    needlessly tight window at large N.
+
+    A resolved K >= N - 1 (tiny N, or an oversized explicit ``band``)
+    covers every pair, so it resolves to None: the exact DENSE apply is
+    the same math with none of the windowed gather overhead.
+    """
+    if cfg.band is None:
+        return None
+    if cfg.band == "auto":
+        eps = max(cfg.band_eps, 1e-30)
+        safety = int(np.ceil(2.0 * cfg.tau_end * np.log(max(n, 2) / eps)))
+        floor = -(-max(n // 16, 1) // 64) * 64
+        k = max(64, safety, floor)
+    else:
+        k = int(cfg.band)
+    if k >= n - 1:
+        return None
+    return max(1, k)
+
+
+def _band_switch_round(cfg: ShuffleSoftSortConfig, n: int) -> int:
+    """First outer round whose temperature admits the banded apply;
+    ``cfg.rounds`` means "never" (and None band means exactly that).
+
+    The decision must be key-independent (the whole schedule compiles
+    into one scanned program), so it uses the linear-init gap model: the
+    trainer re-initializes ``w = arange(N)`` every round, making the
+    K-rank key gap start at exactly K; a safety factor of 2 absorbs the
+    few units of Adam drift the short inner loop can introduce.  A round
+    switches once ``(N - K) * exp(-(K/2) / tau_r) <= band_eps`` at the
+    round's hottest inner temperature ``tau_r``; the geometric anneal is
+    monotone, so the rounds split into one dense prefix and one banded
+    suffix.  The true data-dependent tail is reported by
+    ``core.softsort.band_tail_bound`` for auditing.
+    """
+    k = resolve_band(cfg, n)
+    if k is None:
+        return cfg.rounds
+    taus = _tau_schedule(cfg)
+    ok = (n - k) * np.exp(-(k / 2.0) / taus) <= cfg.band_eps
+    idx = np.flatnonzero(ok)
+    return int(idx[0]) if idx.size else cfg.rounds
 
 
 def shuffle_soft_sort(
@@ -374,7 +485,10 @@ def shuffle_soft_sort(
     assert n == hw[0] * hw[1], (n, hw)
     x = jnp.asarray(x, jnp.float32)
     norm = jnp.float32(mean_pairwise_distance(x))
-    apply_fn = _select_apply_fn(cfg)
+    dense_fn = _select_apply_fn(cfg)
+    band = resolve_band(cfg, n)
+    switch = _band_switch_round(cfg, n)
+    band_fn = dense_fn if band is None else _select_apply_fn(cfg, band)
 
     order = jnp.arange(n, dtype=jnp.int32)
     taus = _tau_schedule(cfg)
@@ -383,7 +497,8 @@ def shuffle_soft_sort(
         key, sub = jax.random.split(key)
         order, loss = _outer_round(
             x, order, sub, jnp.float32(taus[r]), norm,
-            hw=hw, cfg=cfg, apply_fn=apply_fn)
+            hw=hw, cfg=cfg,
+            apply_fn=band_fn if r >= switch else dense_fn)
         losses.append(float(loss))
         if callback is not None:
             callback(r, np.asarray(order), losses[-1])
@@ -507,16 +622,20 @@ def shuffle_soft_sort_batched(
     xs, b, s, n, keys, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
     bs = b * s
-    apply_fn = _select_apply_fn(cfg)
+    dense_fn = _select_apply_fn(cfg)
+    band = resolve_band(cfg, n)
+    switch = _band_switch_round(cfg, n)
+    band_fn = dense_fn if band is None else _select_apply_fn(cfg, band)
     taus = _tau_schedule(cfg)
 
     if callback is None:
         # Fast path: the whole R-round schedule as one scanned device
-        # program — no per-round host round-trips.  With a mesh the
-        # same program runs per shard of the instance axis.
-        orders, _, losses_rb = _engine_run(
-            xs_t, orders, keys, taus, norms_t,
-            hw=hw, cfg=cfg, apply_fn=apply_fn, mesh=mesh)
+        # program (two when the band switch splits the anneal) — no
+        # per-round host round-trips.  With a mesh the same program
+        # runs per shard of the instance axis.
+        orders, _, losses_rb = _run_segments(
+            xs_t, orders, keys, taus, norms_t, start=0, switch=switch,
+            hw=hw, cfg=cfg, dense_fn=dense_fn, band_fn=band_fn, mesh=mesh)
         all_losses = np.asarray(losses_rb).T             # (BS, R)
     else:
         # Streaming path: one dispatch per round so the callback can
@@ -528,7 +647,8 @@ def shuffle_soft_sort_batched(
             keys, subs = pair[:, 0], pair[:, 1]
             orders, losses = _outer_round_batched(
                 xs_t, orders, subs, jnp.float32(taus[r]), norms_t,
-                hw=hw, cfg=cfg, apply_fn=apply_fn)
+                hw=hw, cfg=cfg,
+                apply_fn=band_fn if r >= switch else dense_fn)
             loss_rounds.append(losses)
             callback(r, np.asarray(orders), np.asarray(losses))
         all_losses = np.asarray(jnp.stack(loss_rounds, axis=-1))
@@ -660,7 +780,10 @@ def restart_tournament(
     assert 0.0 <= cull_fraction < 1.0, cull_fraction
     xs, b, s, n, keys_fl, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
-    apply_fn = _select_apply_fn(cfg)
+    dense_fn = _select_apply_fn(cfg)
+    band = resolve_band(cfg, n)
+    switch = _band_switch_round(cfg, n)
+    band_fn = dense_fn if band is None else _select_apply_fn(cfg, band)
     taus = _tau_schedule(cfg)
     edges = _rung_boundaries(cfg.rounds, n_rungs)
 
@@ -677,9 +800,10 @@ def restart_tournament(
     d_mesh = 1 if mesh is None else mesh.shape["data"]
     for k, end in enumerate(edges):
         s_k = alive.shape[1]
-        orders_d, keys_d, losses_d = _engine_run(
+        orders_d, keys_d, losses_d = _run_segments(
             cur["xs"], cur["orders"], cur["keys"], taus[start:end],
-            cur["norms"], hw=hw, cfg=cfg, apply_fn=apply_fn, mesh=mesh)
+            cur["norms"], start=start, switch=switch,
+            hw=hw, cfg=cfg, dense_fn=dense_fn, band_fn=band_fn, mesh=mesh)
         # Device compute actually spent: padded instances burn rounds
         # too, so uneven shards don't let rounds_run overstate savings.
         bs_exec = -(-b * s_k // d_mesh) * d_mesh
@@ -766,10 +890,18 @@ def soft_sort_baseline(
     cfg: ShuffleSoftSortConfig = ShuffleSoftSortConfig(),
     steps: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray, float]:
-    """Pure SoftSort with the same budget (R*I steps by default)."""
+    """Pure SoftSort with the same budget (R*I steps by default).
+
+    The baseline anneals tau continuously inside one ``fori_loop``, so
+    there is no per-round boundary to segment at: ``cfg.band`` is
+    honoured only when the switch model admits the band for the WHOLE
+    schedule (switch round 0), otherwise the run stays dense.
+    """
     x = jnp.asarray(x, jnp.float32)
     norm = jnp.float32(mean_pairwise_distance(x))
-    apply_fn = _select_apply_fn(cfg)
+    band = resolve_band(cfg, x.shape[0])
+    use_band = band is not None and _band_switch_round(cfg, x.shape[0]) == 0
+    apply_fn = _select_apply_fn(cfg, band if use_band else None)
     steps = steps or cfg.rounds * cfg.inner_steps
     order, loss = _softsort_train(x, norm, hw=hw, cfg=cfg, apply_fn=apply_fn,
                                   steps=steps)

@@ -5,7 +5,7 @@
 Row i of the soft permutation matrix concentrates on the element of `w`
 holding rank i, so ``P_soft @ x`` approximates ``x[argsort(w)]``.
 
-Two implementations live here:
+Three implementations live here:
 
 * ``softsort_matrix``           — materializes the full (N, N) matrix.
                                   Reference path; fine up to N ~ 8k.
@@ -15,17 +15,35 @@ Two implementations live here:
                                   masks).  This is the paper's "row-wise
                                   manner" requirement (Sec. II) and the
                                   everywhere-runnable pure-jnp oracle
-                                  twin of the Pallas kernel tier in
+                                  twin of the fused Pallas kernel tier in
                                   ``repro.kernels`` — same math, no
                                   accelerator or interpret-mode
                                   dependency, the reference the kernel
-                                  parity tests stream against.
+                                  parity tests stream against.  Exact:
+                                  every key pair is still scored, so the
+                                  compute stays O(N^2 * d).
+* ``softsort_apply_banded``     — O(N * K * d) *windowed* evaluation:
+                                  the payload is gathered into sorted-key
+                                  order and row i softmaxes only over the
+                                  2K+1 keys whose rank is within K of i.
+                                  At annealed temperatures SoftSort rows
+                                  are exponentially concentrated near the
+                                  diagonal in rank space, so the dropped
+                                  tail mass is analytically bounded by
+                                  ``band_tail_bound`` — the oracle twin
+                                  of the banded Pallas kernels in
+                                  ``repro.kernels.ops.softsort_apply_banded``
+                                  and the parity reference the banded
+                                  tests stream against.
 
 Everything is differentiable; the chunked path uses ``jax.lax.map`` so
 autodiff re-streams the blocks in the backward pass instead of saving an
 N^2 residual (the Pallas tier goes further: its custom VJP saves the
-(perm, ws, m, l, y) residuals and runs the backward as kernels too —
-see ``repro.kernels.ops``).
+(perm, m, l, y) residuals and runs the backward as kernels too —
+see ``repro.kernels.ops``).  ``band_tail_bound`` is the diagnostic that
+licenses the banded truncation; the engine dispatcher in
+``repro.core.shufflesoftsort`` uses the same bound shape to decide when
+the anneal is cold enough to switch from dense to banded.
 """
 from __future__ import annotations
 
@@ -57,6 +75,7 @@ def softsort_apply_chunked(
     x: jnp.ndarray,
     tau: float | jnp.ndarray,
     chunk: int = 256,
+    descending: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Streaming (P_soft @ x, column_sums(P_soft)) without an (N, N) array.
 
@@ -71,12 +90,19 @@ def softsort_apply_chunked(
         vmap produces).  N need not divide by chunk: the tail row block
         is padded (and masked out of the colsum), matching the Pallas
         wrapper's padding contract.
+      descending: row i targets rank N-1-i instead of rank i, matching
+        ``softsort_matrix(..., descending=True)``.  Reversing the sorted
+        keys only reverses the ROW order of P, so this is a flip of y;
+        the column sums are row-order invariant.
 
     Returns:
       y: (N, d) soft-sorted payload ((B, N, d) batched).
       colsum: (N,) column sums of P_soft, for the stochastic loss eq. 3
         ((B, N) batched).
     """
+    if descending:
+        y, colsum = softsort_apply_chunked(w, x, tau, chunk)
+        return jnp.flip(y, axis=-2), colsum
     if w.ndim == 2:
         assert x.ndim == 3 and x.shape[:2] == w.shape, (w.shape, x.shape)
         return jax.vmap(
@@ -113,8 +139,111 @@ def softsort_apply_chunked(
         colsum_blocks.sum(axis=0)
 
 
-def hard_permutation(w: jnp.ndarray, tau: float | jnp.ndarray = 1.0,
-                     chunk: int = 4096) -> jnp.ndarray:
+def softsort_apply_banded(
+    w: jnp.ndarray,
+    x: jnp.ndarray,
+    tau: float | jnp.ndarray,
+    band: int,
+    descending: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Windowed (P_soft @ x, column_sums(P_soft)) in O(N * K * d).
+
+    The payload is gathered into sorted-key order (differentiable via
+    the same gather-by-argsort trick as ``_sort_diff``); row i then
+    softmaxes only over the keys whose RANK is within ``band`` of i —
+    a width-(2K+1) diagonal band of the soft permutation matrix in rank
+    space.  Out-of-band entries are treated as exactly zero; the
+    neglected mass is upper-bounded by ``band_tail_bound(w, tau, band)``
+    per row, which is what licenses the truncation once the anneal is
+    cold.  The banded Pallas kernels
+    (``repro.kernels.ops.softsort_apply_banded``) compute the identical
+    truncated math — this function is their everywhere-runnable parity
+    reference, vmap- and grad-compatible, any N.
+
+    Args:
+      w: (N,) sort keys, or (B, N) for a batch sharing one ``tau``.
+      x: (N, d) payload ((B, N, d) batched).
+      tau: temperature.
+      band: K, the band half-width in rank space.  ``band >= N - 1``
+        degenerates to the exact dense result.
+      descending: as in ``softsort_apply_chunked`` — flips the row
+        order of y, leaves colsum untouched.
+
+    Returns:
+      (y (N, d), colsum (N,)) — same contract (and same row/column
+      order) as the dense and chunked paths, batched shapes when
+      ``w.ndim == 2``.
+    """
+    if descending:
+        y, colsum = softsort_apply_banded(w, x, tau, band)
+        return jnp.flip(y, axis=-2), colsum
+    if w.ndim == 2:
+        assert x.ndim == 3 and x.shape[:2] == w.shape, (w.shape, x.shape)
+        return jax.vmap(
+            lambda wi, xi: softsort_apply_banded(wi, xi, tau, band)
+        )(w, x)
+    n = w.shape[0]
+    k = int(band)
+    assert k >= 1, band
+    perm = jnp.argsort(jax.lax.stop_gradient(w))
+    ws = w[perm]                                 # sorted keys, grad-carrying
+    xs = x[perm]                                 # payload in rank order
+    # (N, 2K+1) window of rank indices around each row's own rank; the
+    # clip keeps gathers in-bounds and the mask zeroes the clipped slots,
+    # so duplicated edge indices contribute exactly nothing.
+    idx = jnp.arange(n)[:, None] + jnp.arange(-k, k + 1)[None, :]
+    valid = (idx >= 0) & (idx < n)
+    idxc = jnp.clip(idx, 0, n - 1)
+    s = -jnp.abs(ws[:, None] - ws[idxc]) / tau
+    # Finite mask value (not -inf): exp(-1e30 - m) underflows to exactly
+    # 0.0 in f32 with no inf arithmetic in the softmax or its VJP —
+    # same convention as the kernel tier's NEG_INF.
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)               # (N, 2K+1), masked slots 0
+    y = jnp.einsum("nk,nkd->nd", p, xs[idxc])
+    # Column sums in rank order (scatter-add over the windows; masked
+    # p entries are exactly zero so clipped duplicates are harmless),
+    # then back to original column order through the permutation.
+    colsum_sorted = jnp.zeros(n, p.dtype).at[idxc.reshape(-1)].add(
+        p.reshape(-1))
+    colsum = jnp.zeros(n, p.dtype).at[perm].set(colsum_sorted)
+    return y, colsum
+
+
+def band_tail_bound(w: jnp.ndarray, tau: float | jnp.ndarray,
+                    band: int) -> jnp.ndarray:
+    """Analytic upper bound on the per-row probability mass a banded
+    apply drops: ``(N - K) * exp(-g_K / tau)``.
+
+    Row i of SoftSort scores key j as ``-|sort(w)_i - w_j| / tau`` with
+    its own key at distance 0, so the softmax denominator is >= 1 (the
+    ``exp(0)`` diagonal term).  Every key more than K ranks away sits at
+    least ``g_K = min_i(sort(w)_{i+K} - sort(w)_i)`` — the tightest key
+    spread across K ranks — from row i's key, so each of the <= N - K
+    out-of-band terms contributes at most ``exp(-g_K / tau)`` to the
+    dropped (un-normalized, hence also normalized) mass.  Exact-arithmetic
+    bound; a float32 evaluation adds rounding noise of a few ULP on top.
+
+    Args:
+      w: (N,) keys or (B, N) batch.
+      tau: temperature (scalar, may be traced).
+      band: K, the band half-width in rank space.
+
+    Returns:
+      scalar bound ((B,) batched); exactly 0 when the band already
+      covers every pair (``band >= N - 1``).
+    """
+    n = w.shape[-1]
+    k = int(band)
+    assert k >= 1, band
+    if k >= n - 1:
+        return jnp.zeros(w.shape[:-1], jnp.float32)
+    ws = jnp.sort(w, axis=-1)
+    g = jnp.min(ws[..., k:] - ws[..., :n - k], axis=-1)
+    return (n - k) * jnp.exp(-g / tau)
+
+
+def hard_permutation(w: jnp.ndarray) -> jnp.ndarray:
     """argmax over rows of P_soft == argsort(w) with stable tie handling.
 
     Row i of SoftSort peaks at the element nearest to sort(w)[i]; for a
@@ -122,7 +251,6 @@ def hard_permutation(w: jnp.ndarray, tau: float | jnp.ndarray = 1.0,
     it directly as argsort (O(N log N), no N^2), matching what
     ``argmax(P_soft, -1)`` returns in exact arithmetic.
     """
-    del tau, chunk
     return jnp.argsort(w)
 
 

@@ -3,19 +3,31 @@
 # style — forward AND backward — plus the flash attention used by the
 # LM serving workloads.
 #
-#   ops.py              — public custom-VJP wrapper ``softsort_apply``;
-#                         accepts (N,)/(N, d) or batched (B, N)/(B, N, d);
-#                         saves (perm, ws, m, l, y) residuals so the
-#                         backward never re-sorts or re-normalizes.
+#   ops.py              — public custom-VJP wrappers ``softsort_apply``
+#                         (exact, O(N^2) compute streamed in O(N*block)
+#                         memory) and ``softsort_apply_banded`` (O(N*K)
+#                         compute AND traffic: both axes gathered into
+#                         sorted-rank order, only a width-(2K+1) band
+#                         scored, tail mass bounded by
+#                         ``core.softsort.band_tail_bound``); both accept
+#                         (N,)/(N, d) or batched (B, N)/(B, N, d) and
+#                         save (perm, m, l, y) residuals so the backward
+#                         never re-sorts or re-normalizes.
 #                         ``softsort_apply_v1`` keeps the previous
 #                         3-pass-fwd / jnp-scan-bwd design as the
 #                         benchmark baseline (benchmarks/kernel_bench.py)
 #   softsort_apply.py   — the kernels: fused online-softmax forward
 #                         (2 pallas_calls) + 3-pass backward (batch =
-#                         outermost grid dim everywhere)
+#                         outermost grid dim everywhere), plus the banded
+#                         variants whose grids visit only the band's
+#                         2*ceil(K/blk)+1 column blocks per row block
 #   ref.py              — O(N^2) pure-jnp oracle the tests assert against
 #
 # Kernels self-select ``interpret=True`` off-TPU, so this package works
 # (slowly) on CPU — CI exercises exactly that path.
-from repro.kernels.ops import softsort_apply, softsort_apply_v1  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    softsort_apply,
+    softsort_apply_banded,
+    softsort_apply_v1,
+)
 from repro.kernels.ref import softsort_apply_ref  # noqa: F401

@@ -1,19 +1,33 @@
-"""jit'd public wrappers for the fused SoftSort-apply kernels.
+"""jit'd public wrappers for the SoftSort-apply kernel tiers.
 
 ``softsort_apply(w, x, tau)`` returns ``(P_soft @ x, column_sums(P_soft))``
 in O(N * block) memory with a custom VJP that runs BOTH directions in
 Pallas.  The forward is one fused online-softmax sweep plus a colsum
-reduction (two ``pallas_call``s); it hands ``(perm, ws, m, l, y)`` to
+reduction (two ``pallas_call``s); it hands ``(perm, m, l, y)`` to
 the backward as residuals, so the backward neither re-sorts nor
 re-derives the softmax normalizers — it streams three Pallas passes
 (delta, transposed-grid ``dx = P^T @ dy`` + ``dw``/``dtau`` column
 reductions, row-grid ``dws``) that never materialize a ``(B, chunk, N)``
-temporary in HBM.  See ``repro.kernels.softsort_apply`` for the kernel
-structure and EXPERIMENTS.md §Perf for the measured pass-count / HBM
-traffic win over the v1 design (kernel forward + chunked-jnp backward),
-which retired the earlier claim that a hand backward "would add risk
-without a roofline win": with residual reuse it is a straight
-HBM-traffic win.
+temporary in HBM.  Exact, but still O(N^2) compute: every key pair is
+scored.
+
+``softsort_apply_banded(w, x, tau, band)`` is the O(N * K) tier on top:
+both matrix axes are gathered into sorted-rank order, only the
+width-(2K+1) diagonal band is scored (out-of-band mass exactly zero,
+analytically bounded by ``core.softsort.band_tail_bound``), and the
+payload rides d-on-sublanes so small paper-scale d stops paying the
+128-lane pad.  Same custom-VJP structure — band-grid forward sweep +
+colsum, three band-grid backward passes over the saved ``(perm, m, l,
+y)`` residuals — with the key gradient's row and column components
+summed and scattered through the saved permutation.  The engine
+dispatcher (``core.shufflesoftsort``) runs dense while tau is hot and
+switches to this path once the tail bound clears its epsilon.
+
+See ``repro.kernels.softsort_apply`` for the kernel structure and
+EXPERIMENTS.md §Perf for the measured pass-count / HBM traffic wins
+(fused-over-v1, and banded-over-fused), which retired the earlier claim
+that a hand backward "would add risk without a roofline win": with
+residual reuse it is a straight HBM-traffic win.
 
 Shape convention (batched throughput path, used by
 ``shuffle_soft_sort_batched`` and the serving layer):
@@ -42,7 +56,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.softsort_apply import (
+    softsort_apply_bwd_banded_pallas,
     softsort_apply_bwd_pallas,
+    softsort_apply_fwd_banded_pallas,
     softsort_apply_fwd_pallas,
     softsort_apply_fwd_pallas_v1,
 )
@@ -91,15 +107,27 @@ def _pad_operands(wb, xb, n, np_, dp, perm=None):
     return perm, ws_p.astype(jnp.float32), w_p.astype(jnp.float32), x_p
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def softsort_apply(w, x, tau, block_rows: int = 256, block_cols: int = 256,
-                   bwd_chunk: int = 256):
+                   bwd_chunk: int = 256, descending: bool = False):
     """Fused (P_soft @ x, colsum(P_soft)); w: (N,) or (B, N), tau scalar.
 
     ``bwd_chunk`` is accepted for API stability but unused: the backward
     is a Pallas kernel tiled by (block_rows, block_cols), not a chunked
-    jnp scan.
+    jnp scan.  ``descending`` matches ``softsort_matrix(...,
+    descending=True)``: reversing the sorted keys only reverses the row
+    order of P, so it is a flip of y (colsum is row-order invariant) —
+    applied outside the custom VJP, where autodiff handles it.
     """
+    y, c = _softsort_apply_dense(w, x, tau, block_rows, block_cols,
+                                 bwd_chunk)
+    if descending:
+        y = jnp.flip(y, axis=-2)
+    return y, c
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _softsort_apply_dense(w, x, tau, block_rows: int = 256,
+                          block_cols: int = 256, bwd_chunk: int = 256):
     (y, c), _ = _fwd_impl(w, x, tau, block_rows, block_cols)
     return y, c
 
@@ -177,7 +205,150 @@ def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
     return dw.astype(w.dtype), dx.astype(x.dtype), dtau
 
 
-softsort_apply.defvjp(_fwd_rule, _bwd_rule)
+_softsort_apply_dense.defvjp(_fwd_rule, _bwd_rule)
+
+
+# --------------------------------------------------------------------------
+# Banded tier: O(N * K) windowed apply in sorted-rank coordinates.
+# --------------------------------------------------------------------------
+
+def _band_geometry(n: int, d: int, block: int):
+    """Resolve (square block edge, padded N, sublane-padded d) for the
+    banded kernels — shared by forward and backward so residual shapes
+    always line up.  Blocks are square (the band offset arithmetic wants
+    one edge length) and 128-aligned; the payload pads d to the 8-row
+    SUBLANE quantum instead of the 128-lane quantum because it is
+    carried transposed (see kernels docstring)."""
+    blk = min(block, _round_up(n, _LANE))
+    np_ = _round_up(n, blk)
+    dsub = _round_up(max(d, 1), _SUBLANE)
+    return blk, np_, dsub
+
+
+def _band_operands(wb, xb, n, np_, dsub, perm=None):
+    """Gather both matrix axes into sorted-rank order and pad to kernel
+    tiles: (perm, wr (B, 1, Np), wc (B, Np, 1), xt (B, dsub, Np)).
+    Pad slots are masked in-kernel via the rank bounds, so the pad value
+    is irrelevant."""
+    bsz, _ = wb.shape
+    d = xb.shape[-1]
+    pad_n = np_ - n
+    if perm is None:
+        perm = jnp.argsort(jax.lax.stop_gradient(wb), axis=-1)
+    ws = jnp.take_along_axis(wb, perm, axis=-1).astype(jnp.float32)
+    xs = jnp.take_along_axis(xb.astype(jnp.float32), perm[..., None],
+                             axis=1)
+    ws_p = jnp.pad(ws, ((0, 0), (0, pad_n)))
+    xt = jnp.pad(xs, ((0, 0), (0, pad_n), (0, dsub - d))).transpose(0, 2, 1)
+    return (perm, ws_p.reshape(bsz, 1, np_), ws_p.reshape(bsz, np_, 1), xt)
+
+
+def softsort_apply_banded(w, x, tau, band: int, block: int = 256,
+                          descending: bool = False):
+    """Banded (P_soft @ x, colsum(P_soft)) in O(N * K) compute and HBM
+    traffic; w: (N,) or (B, N), tau scalar, ``band`` = K the static band
+    half-width in rank space.
+
+    Kernel twin of ``repro.core.softsort.softsort_apply_banded`` — the
+    identical truncated math (out-of-band mass exactly zero, bounded by
+    ``core.softsort.band_tail_bound``), with forward AND backward as
+    band-grid Pallas passes reusing the fused tier's online-softmax +
+    residual-saving custom_vjp design.  ``band >= N - 1`` covers every
+    pair, so it delegates to the exact fused dense path.
+    """
+    n = w.shape[-1]
+    band = int(band)
+    assert band >= 1, band
+    if band >= n - 1:
+        return softsort_apply(w, x, tau, descending=descending)
+    y, c = _softsort_apply_banded(w, x, tau, band, int(block))
+    if descending:
+        y = jnp.flip(y, axis=-2)
+    return y, c
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _softsort_apply_banded(w, x, tau, band: int, block: int):
+    (y, c), _ = _fwd_impl_banded(w, x, tau, band, block)
+    return y, c
+
+
+def _fwd_impl_banded(w, x, tau, band, block):
+    batched = w.ndim == 2
+    wb = w if batched else w[None]
+    xb = x if batched else x[None]
+    bsz, n = wb.shape
+    d = xb.shape[-1]
+    assert xb.shape == (bsz, n, d), (w.shape, x.shape)
+    blk, np_, dsub = _band_geometry(n, d, block)
+    perm, wr, wc, xt = _band_operands(wb, xb, n, np_, dsub)
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+
+    y_t, c_s, m, l = softsort_apply_fwd_banded_pallas(
+        wr, wc, xt, tau_arr,
+        n=n, k=band, blk=blk, interpret=not _on_tpu())
+    y = y_t[:, :d, :n].transpose(0, 2, 1)                # (B, N, d)
+    # Column sums come back in rank order; scatter to original columns.
+    bidx = jnp.arange(bsz)[:, None]
+    c = jnp.zeros((bsz, n), jnp.float32).at[bidx, perm].set(c_s[:, :n, 0])
+    out = (y, c) if batched else (y[0], c[0])
+    # Same residual economy as the dense tier: y is saved SLICED and
+    # untransposed; the backward re-pads/re-transposes it for O(N d).
+    return out, (perm, m, l, y)
+
+
+def _fwd_rule_banded(w, x, tau, band, block):
+    out, (perm, m, l, y) = _fwd_impl_banded(w, x, tau, band, block)
+    return out, (w, x, jnp.asarray(tau, jnp.float32), perm, m, l, y)
+
+
+def _bwd_rule_banded(band, block, res, cot):
+    w, x, tau, perm, m, l, y = res
+    dy, dc = cot
+    batched = w.ndim == 2
+    wb = w if batched else w[None]
+    xb = x if batched else x[None]
+    dyb = dy if batched else dy[None]
+    dcb = dc if batched else dc[None]
+    bsz, n = wb.shape
+    d = xb.shape[-1]
+    blk, np_, dsub = _band_geometry(n, d, block)
+    pad_n = np_ - n
+
+    # Re-gather through the SAVED perm (no argsort here) and mirror the
+    # forward's padded transposed layout; cotangent pads are zero so pad
+    # slots contribute nothing to any reduction.
+    _, wr, wc, xt = _band_operands(wb, xb, n, np_, dsub, perm=perm)
+
+    def to_t(a):                                         # (B, N, d) pads
+        return jnp.pad(a.astype(jnp.float32),
+                       ((0, 0), (0, pad_n), (0, dsub - d))).transpose(
+                           0, 2, 1)
+
+    yt, dyt = to_t(y), to_t(dyb)
+    # colsum cotangent into rank order (c[perm[r]] = c_sorted[r]).
+    dc_s = jnp.take_along_axis(dcb.astype(jnp.float32), perm, axis=-1)
+    dc_p = jnp.pad(dc_s, ((0, 0), (0, pad_n))).reshape(bsz, np_, 1)
+
+    dws_row, dws_col, dxt, dtau_cols = softsort_apply_bwd_banded_pallas(
+        wr, wc, xt, tau.reshape(1, 1), m, l, yt, dyt, dc_p,
+        n=n, k=band, blk=blk, interpret=not _on_tpu())
+
+    # Both matrix axes are sorted keys here, so the key gradient has a
+    # row and a column component; sum them in rank order, then scatter
+    # through the permutation (likewise the payload gradient).
+    dws = dws_row[:, 0, :n] + dws_col[:, :n, 0]          # (B, N)
+    bidx = jnp.arange(bsz)[:, None]
+    dw = jnp.zeros((bsz, n), jnp.float32).at[bidx, perm].add(dws)
+    dxs = dxt[:, :d, :n].transpose(0, 2, 1)              # (B, N, d)
+    dx = jnp.zeros((bsz, n, d), jnp.float32).at[bidx, perm].add(dxs)
+    dtau = jnp.sum(dtau_cols)
+    if not batched:
+        dw, dx = dw[0], dx[0]
+    return dw.astype(w.dtype), dx.astype(x.dtype), dtau
+
+
+_softsort_apply_banded.defvjp(_fwd_rule_banded, _bwd_rule_banded)
 
 
 # --------------------------------------------------------------------------

@@ -28,7 +28,7 @@ mid-forward:
     accumulates over row blocks.
 
 Backward — three Pallas passes driven by the ``custom_vjp`` in
-``repro.kernels.ops``, which saves ``(perm, ws, m, l, y)`` from the
+``repro.kernels.ops``, which saves ``(perm, m, l, y)`` from the
 forward so no pass re-sorts or re-normalizes.  With
 ``dP_ij = dy_i . x_j + dc_j`` and ``ds = P * (dP - D)`` where
 ``D_i = sum_j P_ij dP_ij``:
@@ -391,6 +391,358 @@ def softsort_apply_bwd_pallas(
     )(ws, w, x, tau, m, l, dy, dc, delta)
 
     return dws, dw_cols, dx, dtau_cols
+
+
+# --------------------------------------------------------------------------
+# Banded tier: O(N * K) windowed kernels in sorted-rank coordinates.
+#
+# The wrapper (ops.softsort_apply_banded) gathers BOTH matrix axes into
+# sorted-key order, so the soft permutation matrix P~ is diagonally
+# dominant in rank space and only the width-(2K+1) band around the
+# diagonal is scored — out-of-band entries are treated as exactly zero
+# (neglected mass bounded by core.softsort.band_tail_bound).  Each row
+# block i therefore touches only the nbj = 2*ceil(K/blk) + 1 column
+# blocks u = i - off .. i + off, shrinking the grid from (N/blk)^2 to
+# (N/blk) * nbj cells per pass; edge blocks clip their index map into
+# range and mask themselves out entirely.
+#
+# Two layout changes vs the dense kernels above, both HBM-traffic wins
+# at the paper's small payload widths (d = 3..50):
+#
+#   * scores live TRANSPOSED, (bc, br) with matrix columns on sublanes
+#     and rows on lanes, so the running softmax stats m/l are (1, br)
+#     lane vectors and every reduction stays a lane-wise op;
+#   * the payload is carried transposed, (dsub, Np) with dsub =
+#     round_up(d, 8) on SUBLANES — padding d to the 8-sublane quantum
+#     instead of the 128-lane quantum cuts payload blocks 16x at d = 8
+#     (the (bc, d) @ -> y contraction becomes x_t @ p_un on the MXU).
+#
+# Same online-softmax + residual-saving custom_vjp structure as the
+# fused dense tier: one forward sweep emitting (y_t, m, l), a
+# transposed-grid colsum, and three backward passes (delta, column-
+# indexed dx/dw/dtau, row-indexed dws).  Because both axes are sorted,
+# the key gradient has a row AND a column component here — the wrapper
+# sums them before scattering through the saved perm.
+# --------------------------------------------------------------------------
+
+
+def _band_mask(i, u, blk: int, k: int, n: int):
+    """(bc, br) validity of a banded score block: |rank_col - rank_row|
+    <= K, both ranks real (not padding), both block ids in range (a
+    clipped edge block computes its UNCLIPPED ids here, so it masks
+    itself out entirely instead of double-counting the block it was
+    clamped onto)."""
+    rows = i * blk + jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1)
+    cols = u * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)
+    return ((jnp.abs(cols - rows) <= k)
+            & (cols >= 0) & (cols < n) & (rows >= 0) & (rows < n))
+
+
+def _score_t(wc_blk, wr_blk, inv_tau):
+    # (Bc, 1) x (1, Br) -> (Bc, Br) transposed L1 scores, scaled.
+    return -jnp.abs(wc_blk - wr_blk) * inv_tau
+
+
+def _fwd_band_kernel(wr_ref, wc_ref, xt_ref, tau_ref, y_ref, m_ref, l_ref,
+                     *, n: int, k: int, blk: int, off: int, nbj: int):
+    i = pl.program_id(1)
+    jj = pl.program_id(2)
+    u = i - off + jj                              # unclipped column block
+    inv_tau = 1.0 / tau_ref[0, 0]
+    mask = _band_mask(i, u, blk, k, n)
+    s = jnp.where(mask, _score_t(wc_ref[...], wr_ref[...], inv_tau),
+                  NEG_INF)
+
+    @pl.when(jj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    m_prev = m_ref[...]                                        # (1, Br)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=0, keepdims=True))
+    correction = jnp.exp(m_prev - m_new)
+    # The explicit mask (not just exp(s - m)) keeps a fully-masked block
+    # exact: there m_new stays NEG_INF and exp(s - m_new) would be
+    # exp(0) = 1 per masked slot.
+    p_un = jnp.where(mask, jnp.exp(s - m_new), 0.0)            # (Bc, Br)
+    l_ref[...] = l_ref[...] * correction + jnp.sum(
+        p_un, axis=0, keepdims=True)
+    m_ref[...] = m_new
+    y_ref[...] = y_ref[...] * correction + jax.lax.dot_general(
+        xt_ref[...], p_un,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (dsub, Br)
+
+    @pl.when(jj == nbj - 1)
+    def _normalize():
+        y_ref[...] = y_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask):
+    """Exact normalized transposed P~ block from the saved stats, fully
+    masked (band + padding + clipped edge blocks) so garbage stats on
+    masked rows can never leak."""
+    s = jnp.where(mask, _score_t(wc_ref[...], wr_ref[...], inv_tau),
+                  NEG_INF)
+    p = jnp.where(mask, jnp.exp(s - m_ref[...])
+                  / jnp.maximum(l_ref[...], 1e-30), 0.0)
+    return s, p
+
+
+def _colsum_band_kernel(wr_ref, wc_ref, tau_ref, m_ref, l_ref, c_ref,
+                        *, n: int, k: int, blk: int, off: int):
+    # Grid (B, Nj, nbi): column block j outer, band row step ii inner so
+    # the (Bc, 1) colsum block accumulates in VMEM.
+    j = pl.program_id(1)
+    ii = pl.program_id(2)
+    iu = j - off + ii                             # unclipped row block
+    inv_tau = 1.0 / tau_ref[0, 0]
+    mask = _band_mask(iu, j, blk, k, n)
+    _, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+
+    @pl.when(ii == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.sum(p, axis=1, keepdims=True)
+
+
+def softsort_apply_fwd_banded_pallas(
+    wr: jnp.ndarray,      # (B, 1, Np) sorted keys (matrix rows), padded
+    wc: jnp.ndarray,      # (B, Np, 1) sorted keys (matrix cols), padded
+    xt: jnp.ndarray,      # (B, dsub, Np) payload, sorted + transposed
+    tau: jnp.ndarray,     # (1, 1) — shared across the batch
+    *,
+    n: int,               # true length
+    k: int,               # band half-width in rank space
+    blk: int,             # square block edge (multiple of 128)
+    interpret: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Banded forward: (y_t (B, dsub, Np), colsum (B, Np, 1) in rank
+    order, m, l (B, 1, Np)).  Two ``pallas_call``s over (N/blk) * nbj
+    grids instead of (N/blk)^2."""
+    bsz, dsub, np_ = xt.shape
+    ni = np_ // blk
+    off = -(-k // blk)
+    nbj = 2 * off + 1
+    f32 = jnp.float32
+
+    def _col(b, i, jj):
+        return jnp.clip(i - off + jj, 0, ni - 1)
+
+    y_t, m, l = pl.pallas_call(
+        functools.partial(_fwd_band_kernel, n=n, k=k, blk=blk, off=off,
+                          nbj=nbj),
+        grid=(bsz, ni, nbj),
+        in_specs=[
+            pl.BlockSpec((None, 1, blk), lambda b, i, jj: (b, 0, i)),  # wr
+            pl.BlockSpec((None, blk, 1),
+                         lambda b, i, jj: (b, _col(b, i, jj), 0)),     # wc
+            pl.BlockSpec((None, dsub, blk),
+                         lambda b, i, jj: (b, 0, _col(b, i, jj))),     # xt
+            pl.BlockSpec((1, 1), lambda b, i, jj: (0, 0)),             # tau
+        ],
+        out_specs=[
+            pl.BlockSpec((None, dsub, blk), lambda b, i, jj: (b, 0, i)),
+            pl.BlockSpec((None, 1, blk), lambda b, i, jj: (b, 0, i)),  # m
+            pl.BlockSpec((None, 1, blk), lambda b, i, jj: (b, 0, i)),  # l
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, dsub, np_), f32),
+            jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+            jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        ],
+        interpret=interpret,
+    )(wr, wc, xt, tau)
+
+    colsum = pl.pallas_call(
+        functools.partial(_colsum_band_kernel, n=n, k=k, blk=blk, off=off),
+        grid=(bsz, ni, nbj),
+        in_specs=[
+            pl.BlockSpec((None, 1, blk),
+                         lambda b, j, ii: (b, 0, _col(b, j, ii))),     # wr
+            pl.BlockSpec((None, blk, 1), lambda b, j, ii: (b, j, 0)),  # wc
+            pl.BlockSpec((1, 1), lambda b, j, ii: (0, 0)),             # tau
+            pl.BlockSpec((None, 1, blk),
+                         lambda b, j, ii: (b, 0, _col(b, j, ii))),     # m
+            pl.BlockSpec((None, 1, blk),
+                         lambda b, j, ii: (b, 0, _col(b, j, ii))),     # l
+        ],
+        out_specs=pl.BlockSpec((None, blk, 1), lambda b, j, ii: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        interpret=interpret,
+    )(wr, wc, tau, m, l)
+
+    return y_t, colsum, m, l
+
+
+def _bwd_band_delta_kernel(wr_ref, wc_ref, tau_ref, m_ref, l_ref, dyt_ref,
+                           yt_ref, dc_ref, d_ref,
+                           *, n: int, k: int, blk: int, off: int):
+    """D_i = dy_i . y_i + sum_{r in band} P~_ir dc~_r, band blocks only."""
+    i = pl.program_id(1)
+    jj = pl.program_id(2)
+    u = i - off + jj
+    inv_tau = 1.0 / tau_ref[0, 0]
+    mask = _band_mask(i, u, blk, k, n)
+    _, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+
+    @pl.when(jj == 0)
+    def _init():
+        d_ref[...] = jnp.sum(dyt_ref[...] * yt_ref[...], axis=0,
+                             keepdims=True)                    # (1, Br)
+
+    d_ref[...] += jax.lax.dot_general(
+        dc_ref[...], p,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (1, Br)
+
+
+def _bwd_band_dcol_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref, l_ref,
+                          dyt_ref, dc_ref, d_ref, dxt_ref, dwc_ref, dtc_ref,
+                          *, n: int, k: int, blk: int, off: int):
+    """Column grid (B, Nj, nbi): per column block accumulate
+    dxs_t_r = sum_i P~_ir dy_i, dws_col_r = sum_i ds_ir sgn_ir / tau,
+    and the per-column dtau partial."""
+    j = pl.program_id(1)
+    ii = pl.program_id(2)
+    iu = j - off + ii
+    inv_tau = 1.0 / tau_ref[0, 0]
+    mask = _band_mask(iu, j, blk, k, n)
+    s, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+    # dP~_ir = dy_i . xs_r + dc~_r, in (Bc, Br) transposed layout.
+    dp = jax.lax.dot_general(
+        xt_ref[...], dyt_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + dc_ref[...]
+    ds = p * (dp - d_ref[...])                                 # (Bc, Br)
+    sgn = jnp.sign(wr_ref[...] - wc_ref[...])                  # ws_i - ws_r
+
+    @pl.when(ii == 0)
+    def _init():
+        dxt_ref[...] = jnp.zeros_like(dxt_ref)
+        dwc_ref[...] = jnp.zeros_like(dwc_ref)
+        dtc_ref[...] = jnp.zeros_like(dtc_ref)
+
+    dxt_ref[...] += jax.lax.dot_general(
+        dyt_ref[...], p,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                    # (dsub, Bc)
+    dwc_ref[...] += jnp.sum(ds * sgn, axis=1, keepdims=True) * inv_tau
+    # ds == 0 exactly on masked slots and NEG_INF is finite, so the
+    # 0 * (-NEG_INF) products below are exact zeros.
+    dtc_ref[...] += jnp.sum(ds * (-s), axis=1, keepdims=True) * inv_tau
+
+
+def _bwd_band_dws_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref, l_ref,
+                         dyt_ref, dc_ref, d_ref, dws_ref,
+                         *, n: int, k: int, blk: int, off: int):
+    """Row grid (B, Ni, nbj): dws_row_i = -sum_r ds_ir sgn_ir / tau."""
+    i = pl.program_id(1)
+    jj = pl.program_id(2)
+    u = i - off + jj
+    inv_tau = 1.0 / tau_ref[0, 0]
+    mask = _band_mask(i, u, blk, k, n)
+    s, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+    dp = jax.lax.dot_general(
+        xt_ref[...], dyt_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + dc_ref[...]
+    ds = p * (dp - d_ref[...])
+    sgn = jnp.sign(wr_ref[...] - wc_ref[...])
+
+    @pl.when(jj == 0)
+    def _init():
+        dws_ref[...] = jnp.zeros_like(dws_ref)
+
+    dws_ref[...] += jnp.sum(ds * (-sgn), axis=0, keepdims=True) * inv_tau
+
+
+def softsort_apply_bwd_banded_pallas(
+    wr: jnp.ndarray,      # (B, 1, Np) sorted keys (rows), padded
+    wc: jnp.ndarray,      # (B, Np, 1) sorted keys (cols), padded
+    xt: jnp.ndarray,      # (B, dsub, Np) payload, sorted + transposed
+    tau: jnp.ndarray,     # (1, 1)
+    m: jnp.ndarray,       # (B, 1, Np) saved row maxes
+    l: jnp.ndarray,       # (B, 1, Np) saved row denominators
+    yt: jnp.ndarray,      # (B, dsub, Np) saved forward output, transposed
+    dyt: jnp.ndarray,     # (B, dsub, Np) cotangent of y, transposed
+    dc: jnp.ndarray,      # (B, Np, 1) cotangent of colsum, rank order
+    *,
+    n: int,
+    k: int,
+    blk: int,
+    interpret: bool,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Banded backward from saved residuals, three band-grid passes.
+
+    Returns (dws_row (B, 1, Np), dws_col (B, Np, 1) — the key gradient's
+    row and column components, both in RANK order, summed and scattered
+    through ``perm`` by the caller; dxs_t (B, dsub, Np) — payload
+    gradient in rank order, transposed; dtau_cols (B, Np, 1))."""
+    bsz, dsub, np_ = xt.shape
+    ni = np_ // blk
+    off = -(-k // blk)
+    nbj = 2 * off + 1
+    f32 = jnp.float32
+
+    def _col(b, i, jj):
+        return jnp.clip(i - off + jj, 0, ni - 1)
+
+    # Row-aligned operand specs (row grid: i outer, jj band step inner).
+    row_keys = pl.BlockSpec((None, 1, blk), lambda b, i, jj: (b, 0, i))
+    row_pay = pl.BlockSpec((None, dsub, blk), lambda b, i, jj: (b, 0, i))
+    band_cols = pl.BlockSpec((None, blk, 1),
+                             lambda b, i, jj: (b, _col(b, i, jj), 0))
+    band_pay = pl.BlockSpec((None, dsub, blk),
+                            lambda b, i, jj: (b, 0, _col(b, i, jj)))
+    band_keys = pl.BlockSpec((None, 1, blk),
+                             lambda b, i, jj: (b, 0, _col(b, i, jj)))
+    tau_spec = pl.BlockSpec((1, 1), lambda b, i, jj: (0, 0))
+
+    delta = pl.pallas_call(
+        functools.partial(_bwd_band_delta_kernel, n=n, k=k, blk=blk,
+                          off=off),
+        grid=(bsz, ni, nbj),
+        in_specs=[row_keys, band_cols, tau_spec, row_keys, row_keys,
+                  row_pay, row_pay, band_cols],
+        out_specs=row_keys,                                    # D
+        out_shape=jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        interpret=interpret,
+    )(wr, wc, tau, m, l, dyt, yt, dc)
+
+    # Column grid (j outer, band row step inner): the column-indexed
+    # outputs (dxs_t, dws_col, dtau_cols) accumulate in VMEM.
+    col_keys = pl.BlockSpec((None, blk, 1), lambda b, j, ii: (b, j, 0))
+    col_pay = pl.BlockSpec((None, dsub, blk), lambda b, j, ii: (b, 0, j))
+    dxt, dwc, dtc = pl.pallas_call(
+        functools.partial(_bwd_band_dcol_kernel, n=n, k=k, blk=blk,
+                          off=off),
+        grid=(bsz, ni, nbj),
+        in_specs=[band_keys, col_keys, col_pay, tau_spec, band_keys,
+                  band_keys, band_pay, col_keys, band_keys],
+        out_specs=[col_pay, col_keys, col_keys],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, dsub, np_), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        ],
+        interpret=interpret,
+    )(wr, wc, xt, tau, m, l, dyt, dc, delta)
+
+    dws_row = pl.pallas_call(
+        functools.partial(_bwd_band_dws_kernel, n=n, k=k, blk=blk,
+                          off=off),
+        grid=(bsz, ni, nbj),
+        in_specs=[row_keys, band_cols, band_pay, tau_spec, row_keys,
+                  row_keys, row_pay, band_cols, row_keys],
+        out_specs=row_keys,
+        out_shape=jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        interpret=interpret,
+    )(wr, wc, xt, tau, m, l, dyt, dc, delta)
+
+    return dws_row, dwc, dxt, dtc
 
 
 # --------------------------------------------------------------------------

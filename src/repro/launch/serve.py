@@ -26,7 +26,11 @@ Two workloads share this entrypoint:
   the S seeds per request as a successive-halving tournament
   (EXPERIMENTS.md §Scaling).  ``--use-kernel`` routes every instance's
   SoftSort apply — forward AND backward — through the fused Pallas
-  kernel tier (EXPERIMENTS.md §Perf) instead of the chunked-jnp stream.
+  kernel tier (EXPERIMENTS.md §Perf) instead of the chunked-jnp stream,
+  and ``--band K`` / ``--band auto`` additionally switches the apply to
+  the O(N*K) banded tier once the anneal is cold enough for its tail
+  bound (EXPERIMENTS.md §Perf) — both compose with the mesh and the
+  tournament.
 """
 from __future__ import annotations
 
@@ -210,6 +214,17 @@ class SortServer:
                 req.future.set_exception(RuntimeError("SortServer closed"))
 
 
+def _parse_band(value):
+    """CLI ``--band`` -> ShuffleSoftSortConfig.band: "none" (or unset) =
+    always dense, "auto" = tau-adaptive auto-sized band, an integer =
+    explicit band half-width K."""
+    if value is None or value == "none":
+        return None
+    if value == "auto":
+        return "auto"
+    return int(value)
+
+
 def serve_sorts(args):
     """CLI driver: fire concurrent sort requests at a SortServer."""
     from repro.core.metrics import mean_neighbor_distance
@@ -220,7 +235,8 @@ def serve_sorts(args):
     assert hw[0] * hw[1] == args.sort_n, (args.sort_n, args.sort_hw)
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
                                 chunk=min(256, args.sort_n),
-                                use_kernel=args.use_kernel)
+                                use_kernel=args.use_kernel,
+                                band=_parse_band(args.band))
     mesh = make_sort_mesh(args.mesh_devices) if args.mesh_devices else None
     server = SortServer(hw, d=args.sort_d, cfg=cfg,
                         max_batch=args.max_batch, max_wait_ms=args.wait_ms,
@@ -281,6 +297,12 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="run the SoftSort apply (fwd+bwd) through the "
                          "fused Pallas kernel tier instead of chunked jnp")
+    ap.add_argument("--band", default=None,
+                    help="banded O(N*K) apply: an integer half-width K, "
+                         "'auto' to size it from N and the tau schedule, "
+                         "or 'none' (default) for the dense apply; hot "
+                         "early rounds stay dense until the tail bound "
+                         "clears (EXPERIMENTS.md §Perf)")
     args = ap.parse_args(argv)
 
     if args.workload == "sort":

@@ -13,7 +13,12 @@ Bench-specific checks:
     columns, and every ``parity`` entry must be within ``--tol`` of the
     dense oracle (relative error; the columns are backend-independent,
     so a committed file that fails this was generated from broken
-    kernels, whatever machine produced it).
+    kernels, whatever machine produced it).  Banded cells additionally
+    carry a ``band`` record (width K, analytic ``tail_bound``, parity
+    vs the windowed jnp oracle and vs the dense oracle); the
+    vs-oracle columns must be exact to ``--tol`` and the vs-dense
+    columns within ``tail_bound + --tol`` — the bound is precisely the
+    error the truncation is licensed to introduce.
   * ``batched_bench --devices`` (BENCH_scaling.json) — cells need the
     sweep axes and timing columns.
 
@@ -34,9 +39,17 @@ import sys
 
 ENVELOPE_KEYS = ("bench", "backend", "cells")
 
-KERNEL_CELL_KEYS = ("N", "d", "B", "fwd_s", "fwdgrad_s", "parity",
-                    "model_hbm_mb", "model_fused_over_v1", "passes")
-KERNEL_IMPLS = ("dense", "chunked", "kernel_v1", "fused")
+KERNEL_CELL_KEYS = ("N", "d", "B", "fwd_s", "fwdgrad_s", "parity", "band",
+                    "model_hbm_mb", "model_fused_over_v1",
+                    "model_banded_over_fused", "passes")
+KERNEL_IMPLS = ("dense", "chunked", "kernel_v1", "fused", "banded")
+# Banded records: band width + its analytic dropped-mass bound + parity
+# against both the windowed jnp oracle (must be exact to --tol) and the
+# dense oracle (must be within tail_bound + --tol — the bound is what
+# licenses the truncation).
+BAND_KEYS = ("K", "tail_bound", "vs_oracle_y_relerr", "vs_oracle_c_relerr",
+             "vs_oracle_dw_relerr", "vs_dense_y_relerr",
+             "vs_dense_c_relerr", "vs_dense_dw_relerr")
 
 SCALING_CELL_KEYS = ("devices", "B", "S", "N", "vmap_s", "shard_s",
                      "tournament_s", "tournament_loss_gap")
@@ -100,6 +113,33 @@ def check_file(path: str, tol: float) -> list[str]:
                     errors.append(
                         f"{path}: cells[{i}].parity.{name} = {val} "
                         f"exceeds tol {tol}")
+            band = cell.get("band", {})
+            if not isinstance(band, dict):
+                errors.append(f"{path}: cells[{i}].band is not an object")
+                band = {}
+            for key in BAND_KEYS:
+                if key not in band:
+                    errors.append(f"{path}: cells[{i}].band missing '{key}'")
+            k_val = band.get("K")
+            if not isinstance(k_val, int) or k_val < 1:
+                errors.append(
+                    f"{path}: cells[{i}].band.K = {k_val!r} must be a "
+                    "positive int")
+            bound = band.get("tail_bound")
+            if not isinstance(bound, (int, float)) or bound < 0:
+                errors.append(
+                    f"{path}: cells[{i}].band.tail_bound = {bound!r} "
+                    "must be a non-negative number")
+                bound = 0.0
+            for name, val in band.items():
+                if name in ("K", "tail_bound"):
+                    continue
+                lim = tol + (bound if name.startswith("vs_dense") else 0.0)
+                if not isinstance(val, (int, float)) or val > lim:
+                    errors.append(
+                        f"{path}: cells[{i}].band.{name} = {val} exceeds "
+                        f"{'tail bound + ' if name.startswith('vs_dense') else ''}"
+                        f"tol {lim}")
     elif bench.startswith("batched_bench"):
         for i, cell in enumerate(cells):
             if not isinstance(cell, dict):
