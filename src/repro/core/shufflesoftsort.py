@@ -91,6 +91,12 @@ class ShuffleSoftSortConfig:
     # early hot-tau rounds still run dense (see _band_switch_round).
     band: int | str | None = None
     band_eps: float = 1e-6      # tail-mass threshold for the tau switch
+    # Kernel-tier compute precision ("float32" or "bfloat16"), honoured
+    # only with use_kernel=True: bf16 halves the kernels' payload HBM
+    # traffic and runs the score/payload math in bf16 while the keys
+    # (the N parameters), softmax stats, accumulators, and this file's
+    # Adam math all stay f32 (EXPERIMENTS.md §Perf precision table).
+    compute_dtype: str = "float32"
 
 
 def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
@@ -387,13 +393,23 @@ def _select_apply_fn(cfg: ShuffleSoftSortConfig, band: int | None = None):
     compute (P_soft @ x, colsum(P_soft)) without an (N, N) array and all
     are vmap- and grad-compatible, so every engine (sequential, vmap,
     mesh, tournament) accepts any of them transparently.
+
+    ``cfg.compute_dtype`` reaches only the kernel paths (the jnp oracle
+    tiers are the full-precision reference and stay f32), and the
+    kernels' block sizes come from the committed autotune table
+    (``repro.kernels.autotune``) since no explicit blocks are passed
+    here — both are per-shape STATIC choices resolved at trace time, so
+    every engine traces the identical apply for identical (N, d, K,
+    dtype) and the bit-identity contracts hold per fixed choice.
     """
     if cfg.use_kernel:
         from repro.kernels.ops import softsort_apply
         from repro.kernels.ops import softsort_apply_banded as kernel_banded
         if band is not None:
-            return functools.partial(kernel_banded, band=band)
-        return softsort_apply
+            return functools.partial(kernel_banded, band=band,
+                                     compute_dtype=cfg.compute_dtype)
+        return functools.partial(softsort_apply,
+                                 compute_dtype=cfg.compute_dtype)
     if band is not None:
         return functools.partial(softsort_apply_banded, band=band)
     return functools.partial(softsort_apply_chunked, chunk=cfg.chunk)

@@ -5,11 +5,33 @@ in O(N * block) memory with a custom VJP that runs BOTH directions in
 Pallas.  The forward is one fused online-softmax sweep plus a colsum
 reduction (two ``pallas_call``s); it hands ``(perm, m, l, y)`` to
 the backward as residuals, so the backward neither re-sorts nor
-re-derives the softmax normalizers — it streams three Pallas passes
-(delta, transposed-grid ``dx = P^T @ dy`` + ``dw``/``dtau`` column
-reductions, row-grid ``dws``) that never materialize a ``(B, chunk, N)``
-temporary in HBM.  Exact, but still O(N^2) compute: every key pair is
-scored.
+re-derives the softmax normalizers — it streams TWO Pallas passes
+(a fused delta+dws row sweep, then the transposed-grid ``dx = P^T @
+dy`` + ``dw``/``dtau`` column reductions) that never materialize a
+``(B, chunk, N)`` temporary in HBM.  Exact, but still O(N^2) compute:
+every key pair is scored.
+
+Mixed precision (``compute_dtype``): every kernel wrapper accepts
+``compute_dtype`` ("float32" default, or "bfloat16").  At bf16 the
+payload-sided arrays (x, the dy/dc cotangents, the saved y residual,
+and the dx gradient) are cast ONCE here before entering the kernels, so
+every payload block fetched from HBM is half the bytes, scores are
+rounded to bf16 in-kernel, and every MXU matmul takes bf16 inputs —
+while the KEYS stay float32 (they are the paper's N parameters;
+quantizing them collapses unit rank gaps into ties above N = 256), as
+do the softmax stats, every accumulator (f32 VMEM scratch where the
+HBM form is bf16), the (m, l) residuals and the key/tau gradients
+(``preferred_element_type=jnp.float32`` everywhere).  The public
+forward output and every gradient are returned upcast to the primals'
+dtypes, so the trainer's loss and Adam math are untouched f32 whatever
+the kernel precision.  Measured parity envelope: EXPERIMENTS.md §Perf.
+
+Block sizes: ``block_rows``/``block_cols``/``block`` default to None,
+which consults the committed autotune table
+(``repro.kernels.autotune.lookup_blocks`` — per (tier, N, d, K, dtype,
+backend) winners from the kernel-bench timing harness) and falls back
+to the safe hardcoded 256-square tiling on a miss.  An explicit integer
+always wins over the table.
 
 ``softsort_apply_banded(w, x, tau, band)`` is the O(N * K) tier on top:
 both matrix axes are gathered into sorted-rank order, only the
@@ -17,7 +39,7 @@ width-(2K+1) diagonal band is scored (out-of-band mass exactly zero,
 analytically bounded by ``core.softsort.band_tail_bound``), and the
 payload rides d-on-sublanes so small paper-scale d stops paying the
 128-lane pad.  Same custom-VJP structure — band-grid forward sweep +
-colsum, three band-grid backward passes over the saved ``(perm, m, l,
+colsum, two band-grid backward passes over the saved ``(perm, m, l,
 y)`` residuals — with the key gradient's row and column components
 summed and scattered through the saved permutation.  The engine
 dispatcher (``core.shufflesoftsort``) runs dense while tau is hot and
@@ -89,12 +111,23 @@ def _block_geometry(n: int, d: int, block_rows: int, block_cols: int):
     return br, bc, np_, dp
 
 
-def _pad_operands(wb, xb, n, np_, dp, perm=None):
+def _cd(compute_dtype) -> jnp.dtype:
+    """Resolve the compute-dtype knob (a hashable string on the configs
+    and custom_vjp statics) to a jnp dtype, validating the choice."""
+    dt = jnp.dtype(compute_dtype)
+    assert dt in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)), (
+        f"compute_dtype must be float32 or bfloat16, got {compute_dtype}")
+    return dt
+
+
+def _pad_operands(wb, xb, n, np_, dp, perm=None, cd=jnp.float32):
     """Pad (B, N)/(B, N, d) operands to kernel tiles.  Pad rows of ws are
     masked out of every reduction in-kernel, pad cols of w are masked via
     the score mask, x pads with zeros.  Pass the forward's saved ``perm``
     to gather the sorted keys without re-running argsort (the backward
-    path)."""
+    path).  ``cd`` is the kernel compute dtype: the PAYLOAD is cast
+    HERE, once, so at bf16 its HBM blocks are half-width; the keys stay
+    f32 (see the kernels' precision contract)."""
     bsz = wb.shape[0]
     d = xb.shape[-1]
     pad_n = np_ - n
@@ -104,35 +137,50 @@ def _pad_operands(wb, xb, n, np_, dp, perm=None):
     ws_p = jnp.pad(ws, ((0, 0), (0, pad_n))).reshape(bsz, np_, 1)
     w_p = jnp.pad(wb, ((0, 0), (0, pad_n))).reshape(bsz, 1, np_)
     x_p = jnp.pad(xb.astype(jnp.float32), ((0, 0), (0, pad_n), (0, dp - d)))
-    return perm, ws_p.astype(jnp.float32), w_p.astype(jnp.float32), x_p
+    return (perm, ws_p.astype(jnp.float32), w_p.astype(jnp.float32),
+            x_p.astype(cd))
 
 
-def softsort_apply(w, x, tau, block_rows: int = 256, block_cols: int = 256,
-                   bwd_chunk: int = 256, descending: bool = False):
+def softsort_apply(w, x, tau, block_rows: int | None = None,
+                   block_cols: int | None = None,
+                   bwd_chunk: int = 256, descending: bool = False,
+                   compute_dtype: str = "float32"):
     """Fused (P_soft @ x, colsum(P_soft)); w: (N,) or (B, N), tau scalar.
 
-    ``bwd_chunk`` is accepted for API stability but unused: the backward
-    is a Pallas kernel tiled by (block_rows, block_cols), not a chunked
-    jnp scan.  ``descending`` matches ``softsort_matrix(...,
+    ``block_rows``/``block_cols`` default to None = consult the
+    committed autotune table for this (N, d, dtype, backend), falling
+    back to the safe 256-square tiling on a miss; an explicit int always
+    wins.  ``bwd_chunk`` is accepted for API stability but unused: the
+    backward is a Pallas kernel tiled by (block_rows, block_cols), not a
+    chunked jnp scan.  ``descending`` matches ``softsort_matrix(...,
     descending=True)``: reversing the sorted keys only reverses the row
     order of P, so it is a flip of y (colsum is row-order invariant) —
     applied outside the custom VJP, where autodiff handles it.
+    ``compute_dtype`` ("float32"/"bfloat16") selects the kernel score/
+    payload precision — see the module docstring's precision contract.
     """
+    if block_rows is None or block_cols is None:
+        from repro.kernels.autotune import lookup_blocks
+        br_t, bc_t = lookup_blocks(
+            "fused", n=w.shape[-1], d=x.shape[-1], dtype=compute_dtype)
+        block_rows = block_rows or br_t
+        block_cols = block_cols or bc_t
     y, c = _softsort_apply_dense(w, x, tau, block_rows, block_cols,
-                                 bwd_chunk)
+                                 bwd_chunk, compute_dtype)
     if descending:
         y = jnp.flip(y, axis=-2)
     return y, c
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _softsort_apply_dense(w, x, tau, block_rows: int = 256,
-                          block_cols: int = 256, bwd_chunk: int = 256):
-    (y, c), _ = _fwd_impl(w, x, tau, block_rows, block_cols)
+                          block_cols: int = 256, bwd_chunk: int = 256,
+                          compute_dtype: str = "float32"):
+    (y, c), _ = _fwd_impl(w, x, tau, block_rows, block_cols, compute_dtype)
     return y, c
 
 
-def _fwd_impl(w, x, tau, block_rows, block_cols):
+def _fwd_impl(w, x, tau, block_rows, block_cols, compute_dtype):
     batched = w.ndim == 2
     wb = w if batched else w[None]
     xb = x if batched else x[None]
@@ -140,14 +188,19 @@ def _fwd_impl(w, x, tau, block_rows, block_cols):
     d = xb.shape[-1]
     assert xb.shape == (bsz, n, d), (w.shape, x.shape)
     br, bc, np_, dp = _block_geometry(n, d, block_rows, block_cols)
-    perm, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp)
+    perm, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp,
+                                         cd=_cd(compute_dtype))
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
 
     y_p, c_p, m, l = softsort_apply_fwd_pallas(
         ws_p, w_p, x_p, tau_arr,
         n=n, br=br, bc=bc, interpret=not _on_tpu())
+    # The kernel emits y in the compute dtype; the public output is
+    # upcast so downstream loss math stays f32, while the residual
+    # keeps the compute-dtype copy (half the residual HBM at bf16).
     y, c = y_p[:, :n, :d], c_p[:, 0, :n]
-    out = (y, c) if batched else (y[0], c[0])
+    y_out = y.astype(jnp.float32)
+    out = (y_out, c) if batched else (y_out[0], c[0])
     # The y residual is the SLICED (B, N, d) output, not the lane-padded
     # kernel buffer: dp = round_up(d, 128) would inflate residual HBM by
     # dp/d (16x at the paper's d=8); the backward re-pads it with zeros
@@ -155,14 +208,15 @@ def _fwd_impl(w, x, tau, block_rows, block_cols):
     return out, (perm, m, l, y)
 
 
-def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk):
-    out, (perm, m, l, y) = _fwd_impl(w, x, tau, block_rows, block_cols)
+def _fwd_rule(w, x, tau, block_rows, block_cols, bwd_chunk, compute_dtype):
+    out, (perm, m, l, y) = _fwd_impl(w, x, tau, block_rows, block_cols,
+                                     compute_dtype)
     # Residuals: primals plus (perm, m, l, y) — everything the backward
     # needs to skip the argsort and the softmax-stats recomputation.
     return out, (w, x, jnp.asarray(tau, jnp.float32), perm, m, l, y)
 
 
-def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
+def _bwd_rule(block_rows, block_cols, bwd_chunk, compute_dtype, res, cot):
     del bwd_chunk                      # legacy knob of the jnp-scan backward
     w, x, tau, perm, m, l, y = res
     dy, dc = cot
@@ -180,13 +234,16 @@ def _bwd_rule(block_rows, block_cols, bwd_chunk, res, cot):
     # Same padded operand layout as the forward (the sorted keys are
     # re-gathered through the SAVED perm — a cheap O(B N) gather, no
     # argsort here); cotangent pads are zero so pad slots contribute
-    # nothing to any reduction.
-    _, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp, perm=perm)
+    # nothing to any reduction.  Cotangents ride the compute dtype like
+    # the payload; the y residual already does (saved straight from the
+    # kernel), while m/l and the gradient accumulators stay f32.
+    cd = _cd(compute_dtype)
+    _, ws_p, w_p, x_p = _pad_operands(wb, xb, n, np_, dp, perm=perm, cd=cd)
     y_p = jnp.pad(yb, ((0, 0), (0, pad_n), (0, dp - d)))
     dy_p = jnp.pad(dyb.astype(jnp.float32),
-                   ((0, 0), (0, pad_n), (0, dp - d)))
+                   ((0, 0), (0, pad_n), (0, dp - d))).astype(cd)
     dc_p = jnp.pad(dcb.astype(jnp.float32),
-                   ((0, 0), (0, pad_n))).reshape(bsz, 1, np_)
+                   ((0, 0), (0, pad_n))).reshape(bsz, 1, np_).astype(cd)
     tau_arr = tau.reshape(1, 1)
 
     dws, dw_cols, dx_p, dtau_cols = softsort_apply_bwd_pallas(
@@ -225,11 +282,12 @@ def _band_geometry(n: int, d: int, block: int):
     return blk, np_, dsub
 
 
-def _band_operands(wb, xb, n, np_, dsub, perm=None):
+def _band_operands(wb, xb, n, np_, dsub, perm=None, cd=jnp.float32):
     """Gather both matrix axes into sorted-rank order and pad to kernel
     tiles: (perm, wr (B, 1, Np), wc (B, Np, 1), xt (B, dsub, Np)).
     Pad slots are masked in-kernel via the rank bounds, so the pad value
-    is irrelevant."""
+    is irrelevant.  ``cd`` casts the PAYLOAD to the kernel compute
+    dtype; the keys stay f32 (see ``_pad_operands``)."""
     bsz, _ = wb.shape
     d = xb.shape[-1]
     pad_n = np_ - n
@@ -239,12 +297,14 @@ def _band_operands(wb, xb, n, np_, dsub, perm=None):
     xs = jnp.take_along_axis(xb.astype(jnp.float32), perm[..., None],
                              axis=1)
     ws_p = jnp.pad(ws, ((0, 0), (0, pad_n)))
-    xt = jnp.pad(xs, ((0, 0), (0, pad_n), (0, dsub - d))).transpose(0, 2, 1)
+    xt = jnp.pad(xs, ((0, 0), (0, pad_n), (0, dsub - d))).transpose(
+        0, 2, 1).astype(cd)
     return (perm, ws_p.reshape(bsz, 1, np_), ws_p.reshape(bsz, np_, 1), xt)
 
 
-def softsort_apply_banded(w, x, tau, band: int, block: int = 256,
-                          descending: bool = False):
+def softsort_apply_banded(w, x, tau, band: int, block: int | None = None,
+                          descending: bool = False,
+                          compute_dtype: str = "float32"):
     """Banded (P_soft @ x, colsum(P_soft)) in O(N * K) compute and HBM
     traffic; w: (N,) or (B, N), tau scalar, ``band`` = K the static band
     half-width in rank space.
@@ -254,26 +314,36 @@ def softsort_apply_banded(w, x, tau, band: int, block: int = 256,
     ``core.softsort.band_tail_bound``), with forward AND backward as
     band-grid Pallas passes reusing the fused tier's online-softmax +
     residual-saving custom_vjp design.  ``band >= N - 1`` covers every
-    pair, so it delegates to the exact fused dense path.
+    pair, so it delegates to the exact fused dense path.  ``block``
+    defaults to None = the autotuned square block edge for this
+    (N, d, K, dtype, backend), hardcoded-256 fallback; ``compute_dtype``
+    as in ``softsort_apply``.
     """
     n = w.shape[-1]
     band = int(band)
     assert band >= 1, band
     if band >= n - 1:
-        return softsort_apply(w, x, tau, descending=descending)
-    y, c = _softsort_apply_banded(w, x, tau, band, int(block))
+        return softsort_apply(w, x, tau, descending=descending,
+                              compute_dtype=compute_dtype)
+    if block is None:
+        from repro.kernels.autotune import lookup_blocks
+        block, _ = lookup_blocks("banded", n=n, d=x.shape[-1], k=band,
+                                 dtype=compute_dtype)
+    y, c = _softsort_apply_banded(w, x, tau, band, int(block),
+                                  compute_dtype)
     if descending:
         y = jnp.flip(y, axis=-2)
     return y, c
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _softsort_apply_banded(w, x, tau, band: int, block: int):
-    (y, c), _ = _fwd_impl_banded(w, x, tau, band, block)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _softsort_apply_banded(w, x, tau, band: int, block: int,
+                           compute_dtype: str = "float32"):
+    (y, c), _ = _fwd_impl_banded(w, x, tau, band, block, compute_dtype)
     return y, c
 
 
-def _fwd_impl_banded(w, x, tau, band, block):
+def _fwd_impl_banded(w, x, tau, band, block, compute_dtype):
     batched = w.ndim == 2
     wb = w if batched else w[None]
     xb = x if batched else x[None]
@@ -281,28 +351,32 @@ def _fwd_impl_banded(w, x, tau, band, block):
     d = xb.shape[-1]
     assert xb.shape == (bsz, n, d), (w.shape, x.shape)
     blk, np_, dsub = _band_geometry(n, d, block)
-    perm, wr, wc, xt = _band_operands(wb, xb, n, np_, dsub)
+    perm, wr, wc, xt = _band_operands(wb, xb, n, np_, dsub,
+                                      cd=_cd(compute_dtype))
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1, 1)
 
     y_t, c_s, m, l = softsort_apply_fwd_banded_pallas(
         wr, wc, xt, tau_arr,
         n=n, k=band, blk=blk, interpret=not _on_tpu())
-    y = y_t[:, :d, :n].transpose(0, 2, 1)                # (B, N, d)
+    y = y_t[:, :d, :n].transpose(0, 2, 1)                # (B, N, d), cd
+    y_out = y.astype(jnp.float32)
     # Column sums come back in rank order; scatter to original columns.
     bidx = jnp.arange(bsz)[:, None]
     c = jnp.zeros((bsz, n), jnp.float32).at[bidx, perm].set(c_s[:, :n, 0])
-    out = (y, c) if batched else (y[0], c[0])
+    out = (y_out, c) if batched else (y_out[0], c[0])
     # Same residual economy as the dense tier: y is saved SLICED and
-    # untransposed; the backward re-pads/re-transposes it for O(N d).
+    # untransposed (and in the compute dtype); the backward re-pads/
+    # re-transposes it for O(N d).
     return out, (perm, m, l, y)
 
 
-def _fwd_rule_banded(w, x, tau, band, block):
-    out, (perm, m, l, y) = _fwd_impl_banded(w, x, tau, band, block)
+def _fwd_rule_banded(w, x, tau, band, block, compute_dtype):
+    out, (perm, m, l, y) = _fwd_impl_banded(w, x, tau, band, block,
+                                            compute_dtype)
     return out, (w, x, jnp.asarray(tau, jnp.float32), perm, m, l, y)
 
 
-def _bwd_rule_banded(band, block, res, cot):
+def _bwd_rule_banded(band, block, compute_dtype, res, cot):
     w, x, tau, perm, m, l, y = res
     dy, dc = cot
     batched = w.ndim == 2
@@ -317,18 +391,21 @@ def _bwd_rule_banded(band, block, res, cot):
 
     # Re-gather through the SAVED perm (no argsort here) and mirror the
     # forward's padded transposed layout; cotangent pads are zero so pad
-    # slots contribute nothing to any reduction.
-    _, wr, wc, xt = _band_operands(wb, xb, n, np_, dsub, perm=perm)
+    # slots contribute nothing to any reduction.  Cotangents ride in the
+    # compute dtype; the y residual stays f32.
+    cd = _cd(compute_dtype)
+    _, wr, wc, xt = _band_operands(wb, xb, n, np_, dsub, perm=perm, cd=cd)
 
-    def to_t(a):                                         # (B, N, d) pads
+    def to_t(a, dt=jnp.float32):                         # (B, N, d) pads
         return jnp.pad(a.astype(jnp.float32),
                        ((0, 0), (0, pad_n), (0, dsub - d))).transpose(
-                           0, 2, 1)
+                           0, 2, 1).astype(dt)
 
-    yt, dyt = to_t(y), to_t(dyb)
+    yt, dyt = to_t(y, cd), to_t(dyb, cd)
     # colsum cotangent into rank order (c[perm[r]] = c_sorted[r]).
     dc_s = jnp.take_along_axis(dcb.astype(jnp.float32), perm, axis=-1)
-    dc_p = jnp.pad(dc_s, ((0, 0), (0, pad_n))).reshape(bsz, np_, 1)
+    dc_p = jnp.pad(dc_s, ((0, 0), (0, pad_n))).reshape(
+        bsz, np_, 1).astype(cd)
 
     dws_row, dws_col, dxt, dtau_cols = softsort_apply_bwd_banded_pallas(
         wr, wc, xt, tau.reshape(1, 1), m, l, yt, dyt, dc_p,

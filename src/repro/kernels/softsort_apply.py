@@ -17,35 +17,74 @@ mid-forward:
 
   * ``_fwd_fused_kernel`` — streaming row max ``m``, denominator ``l``
     AND the un-normalized y accumulator in one pass (grid = (B, Ni, Nj),
-    j innermost; the m/l/y output blocks are revisited consecutively so
-    they live in VMEM as accumulators — the TPU sequential-grid idiom).
-    Each column block rescales the running y by ``exp(m_prev - m_new)``;
-    the final ``1/l`` is applied once at the last column block.  ``m``
-    and ``l`` are kernel *outputs*: the backward reuses them as
-    residuals instead of re-deriving the softmax.
+    j innermost; m/l are revisited output blocks and y accumulates in a
+    float32 VMEM *scratch* buffer — both live on-chip across the column
+    sweep, the TPU sequential-grid idiom).  Each column block rescales
+    the running y by ``exp(m_prev - m_new)``; the final ``1/l`` is
+    applied once at the last column block, where y is written out ONCE
+    in the compute dtype.  ``m`` and ``l`` are kernel *outputs*: the
+    backward reuses them as residuals instead of re-deriving the
+    softmax.
   * ``_colsum_kernel``    — exact P block = exp(s - m)/l with the i/j
     grid axes transposed (j outer, i inner) so the colsum block
     accumulates over row blocks.
 
-Backward — three Pallas passes driven by the ``custom_vjp`` in
+Backward — TWO Pallas passes driven by the ``custom_vjp`` in
 ``repro.kernels.ops``, which saves ``(perm, m, l, y)`` from the
 forward so no pass re-sorts or re-normalizes.  With
 ``dP_ij = dy_i . x_j + dc_j`` and ``ds = P * (dP - D)`` where
 ``D_i = sum_j P_ij dP_ij``:
 
-  * ``_bwd_delta_kernel`` — row grid: ``D_i = dy_i . y_i + (P @ dc)_i``
-    (the first term is flash attention's delta trick — ``sum_j P_ij
-    (dy_i . x_j) = dy_i . y_i`` because y was saved; only the colsum
-    cotangent needs a streamed ``P @ dc``).
+  * ``_bwd_dws_delta_kernel`` — row grid: ONE sweep fuses the old
+    delta pass into the dws pass.  It accumulates three row vectors —
+    ``D_i = dy_i . y_i + (P @ dc)_i`` (the first term is flash
+    attention's delta trick: ``sum_j P_ij (dy_i . x_j) = dy_i . y_i``
+    because y was saved; only the colsum cotangent needs a streamed
+    ``P @ dc``), ``A_i = sum_j P_ij dP_ij sgn_ij`` and ``S_i = sum_j
+    P_ij sgn_ij`` (A and S in VMEM scratch) — and combines them at the
+    last column block:
+    ``dws_i = -sum_j ds_ij sgn_ij / tau = -(A_i - D_i S_i) / tau``
+    (the D-dependent part of ds factors out of the row reduction, so
+    dws never needs a completed D mid-sweep).  One fewer full re-score
+    of the tile space than the previous 3-pass design, and D is still
+    emitted for the pass below.
   * ``_bwd_dx_kernel``    — transposed grid (j outer, i inner):
-    ``dx_j = sum_i P_ij dy_i`` (a (Bc, Br) x (Br, d) MXU contraction),
+    ``dx_j = sum_i P_ij dy_i`` (a (Bc, Br) x (Br, d) MXU contraction,
+    accumulated in f32 scratch, written once in the compute dtype),
     plus the column-indexed reductions ``dw_cols_j = sum_i ds_ij
-    sgn_ij / tau`` and a per-column ``dtau`` partial.
-  * ``_bwd_dws_kernel``   — row grid: ``dws_i = -sum_j ds_ij sgn_ij
-    / tau`` (scattered back through ``perm`` by the wrapper).
+    sgn_ij / tau`` and a per-column ``dtau`` partial (here ds needs
+    D_i per summand, so this pass genuinely consumes the finished D).
 
 No (B, chunk, N) ``delta``/``p``/``dp``/``ds`` temporaries ever touch
 HBM — every score/probability block is consumed inside its VMEM tile.
+
+Mixed precision (``cd``, the compute dtype — f32 or bf16, threaded from
+``ops``' ``compute_dtype``):
+
+  * KEYS STAY FLOAT32.  The keys are the paper's N learnable
+    parameters; quantizing them to bf16 collapses unit rank gaps into
+    ties above N = 256 (bf16 integers are exact only to 256) and was
+    measured to blow the key-gradient parity up to ~0.5 relative.  Key
+    vectors are O(N) bytes — negligible against the payload — so f32
+    keys cost nothing and keep rank resolution exact.
+  * SCORES are computed from the f32 keys and then ROUNDED to ``cd``
+    (``.astype(cd)``), so the bf16 tier sees genuinely bf16 scores —
+    but with error proportional to the score's own magnitude, not the
+    key magnitude.  In the trainer's shuffled-arange regime the scores
+    are small integer multiples of 1/tau and round exactly.
+  * PAYLOAD-SIDED ARRAYS (x, dy, dc, the saved y residual, and the dx
+    gradient output) live in ``cd`` in HBM — at bf16 every payload
+    block moved is half the bytes, which is where the measured traffic
+    reduction comes from — and every matmul takes cd inputs with
+    ``preferred_element_type=jnp.float32``: f32 MXU accumulation.
+  * EVERYTHING LOAD-BEARING STAYS F32: the online-softmax max/exp/sum,
+    the m/l stats and residuals, D, every VMEM accumulator (the y and
+    dx accumulators are explicit f32 scratch when their HBM form is
+    cd), and the key/tau gradients (dws, dw_cols, dtau).
+
+``cd == float32`` reproduces the previous all-f32 kernels bit-for-bit.
+The bf16 parity envelope is measured in EXPERIMENTS.md §Perf and gated
+by ``tests/test_precision.py`` / ``tools/check_bench.py``.
 
 The batch axis is the OUTERMOST grid dimension: each instance is an
 independent sweep over its own (Ni, Nj) tile space, so the accumulator
@@ -55,9 +94,11 @@ single schedule across the whole batch).  The batch block size is
 ``None`` (squeezed), so the kernels themselves see 2-D blocks.
 
 VMEM working set per step ~ Br*Bc (scores) + Bc*d (x block) + Br*d
-(y/dy blocks) floats; with the default Br = Bc = 256, d <= 512 this is
-well under the ~16 MB/core budget and independent of B.  Block shapes
-are (8k, 128m)-aligned so the MXU sees aligned contractions.
+(y/dy blocks + the f32 y scratch) floats; with the default Br = Bc =
+256, d <= 512 this is well under the ~16 MB/core budget and independent
+of B.  Block shapes are (8k, 128m)-aligned so the MXU sees aligned
+contractions; the autotune table (``repro.kernels.autotune``) picks
+per-shape block sizes within that constraint.
 
 All kernels mask columns >= n (true length) with -inf scores and rows
 >= n out of every column-indexed reduction, so the wrapper may pad N up
@@ -67,8 +108,8 @@ retriggering compilation.
 
 The v1 split forward (separate stats + apply passes, three
 ``pallas_call``s) is kept at the bottom as the benchmark baseline for
-``benchmarks/kernel_bench.py`` — it is what PR 1/2 shipped, and the
-fused-vs-v1 rows in BENCH_kernels.json quantify the win.
+``benchmarks/kernel_bench.py`` — it is what PR 1/2 shipped (f32 only),
+and the fused-vs-v1 rows in BENCH_kernels.json quantify the win.
 """
 from __future__ import annotations
 
@@ -77,13 +118,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
-def _score(ws_blk, w_blk, inv_tau):
-    # (Br, 1) x (1, Bc) -> (Br, Bc) L1 scores, scaled.
-    return -jnp.abs(ws_blk - w_blk) * inv_tau
+def _score(ws_blk, w_blk, inv_tau, cd):
+    # (Br, 1) x (1, Bc) -> (Br, Bc) L1 scores, scaled.  Keys are always
+    # f32 (see module docstring); the finished score is rounded to the
+    # compute dtype and upcast, so the bf16 tier's scores carry bf16
+    # precision relative to the SCORE scale while the softmax math
+    # downstream stays f32.  cd == f32 is the exact identity.
+    s = -jnp.abs(ws_blk - w_blk) * inv_tau
+    return s.astype(cd).astype(jnp.float32)
 
 
 def _col_mask(j, bc, n):
@@ -101,17 +148,17 @@ def _row_mask(i, br, n):
 # --------------------------------------------------------------------------
 
 def _fwd_fused_kernel(ws_ref, w_ref, x_ref, tau_ref, y_ref, m_ref, l_ref,
-                      *, n: int, bc: int, nj: int):
+                      acc_ref, *, n: int, bc: int, nj: int, cd):
     j = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
-    s = _score(ws_ref[...], w_ref[...], inv_tau)               # (Br, Bc)
+    s = _score(ws_ref[...], w_ref[...], inv_tau, cd)           # (Br, Bc)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
 
     @pl.when(j == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
-        y_ref[...] = jnp.zeros_like(y_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     m_prev = m_ref[...]                                        # (Br, 1)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
@@ -120,21 +167,25 @@ def _fwd_fused_kernel(ws_ref, w_ref, x_ref, tau_ref, y_ref, m_ref, l_ref,
     l_ref[...] = l_ref[...] * correction + jnp.sum(
         p_un, axis=-1, keepdims=True)
     m_ref[...] = m_new
-    y_ref[...] = y_ref[...] * correction + jnp.dot(
-        p_un, x_ref[...], preferred_element_type=jnp.float32)
+    # Payload matmul inputs in the compute dtype, accumulation pinned to
+    # the f32 VMEM scratch by preferred_element_type — the MXU contract.
+    acc_ref[...] = acc_ref[...] * correction + jnp.dot(
+        p_un.astype(cd), x_ref[...],
+        preferred_element_type=jnp.float32)
 
     @pl.when(j == nj - 1)
     def _normalize():
-        y_ref[...] = y_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        y_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(y_ref.dtype)
 
 
 def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
-                   *, n: int, br: int, bc: int):
+                   *, n: int, br: int, bc: int, cd):
     # Grid is (B, Nj, Ni): i innermost so the c block accumulates in VMEM.
     j = pl.program_id(1)
     i = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
-    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    s = _score(ws_ref[...], w_ref[...], inv_tau, cd)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
     p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
     p = jnp.where(_row_mask(i, br, n), p, 0.0)                 # mask pad rows
@@ -147,9 +198,9 @@ def _colsum_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, c_ref,
 
 
 def softsort_apply_fwd_pallas(
-    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded
-    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded
-    x: jnp.ndarray,       # (B, Np, dp) payload, padded
+    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded, f32
+    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded, f32
+    x: jnp.ndarray,       # (B, Np, dp) payload, padded, compute dtype
     tau: jnp.ndarray,     # (1, 1) — shared across the batch
     *,
     n: int,               # true length
@@ -157,18 +208,21 @@ def softsort_apply_fwd_pallas(
     bc: int,
     interpret: bool,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused forward: (y (B, Np, dp), colsum (B, 1, Np), m, l (B, Np, 1)).
+    """Fused forward: (y (B, Np, dp) in the compute dtype, colsum
+    (B, 1, Np), m, l (B, Np, 1) f32).
 
     Two ``pallas_call``s: the fused online-softmax sweep and the
     transposed-grid colsum reduction.  ``m``/``l`` are returned so the
-    backward can reuse them as residuals.
+    backward can reuse them as residuals; the compute dtype is inferred
+    from ``x.dtype`` (the wrapper casts operands once).
     """
     bsz, np_, dp = x.shape
     ni, nj = np_ // br, np_ // bc
     f32 = jnp.float32
+    cd = x.dtype
 
     y, m, l = pl.pallas_call(
-        functools.partial(_fwd_fused_kernel, n=n, bc=bc, nj=nj),
+        functools.partial(_fwd_fused_kernel, n=n, bc=bc, nj=nj, cd=cd),
         grid=(bsz, ni, nj),
         in_specs=[
             pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # ws rows
@@ -182,15 +236,16 @@ def softsort_apply_fwd_pallas(
             pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0)),   # l
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bsz, np_, dp), f32),
+            jax.ShapeDtypeStruct((bsz, np_, dp), cd),
             jax.ShapeDtypeStruct((bsz, np_, 1), f32),
             jax.ShapeDtypeStruct((bsz, np_, 1), f32),
         ],
+        scratch_shapes=[pltpu.VMEM((br, dp), f32)],       # y accumulator
         interpret=interpret,
     )(ws, w, x, tau)
 
     colsum = pl.pallas_call(
-        functools.partial(_colsum_kernel, n=n, br=br, bc=bc),
+        functools.partial(_colsum_kernel, n=n, br=br, bc=bc, cd=cd),
         grid=(bsz, nj, ni),
         in_specs=[
             pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # ws
@@ -208,46 +263,75 @@ def softsort_apply_fwd_pallas(
 
 
 # --------------------------------------------------------------------------
-# Backward: three Pallas passes over the saved residuals.
+# Backward: two Pallas passes over the saved residuals.
 # --------------------------------------------------------------------------
 
-def _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n):
+def _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n, cd):
     """Exact normalized P block from the saved softmax stats (no re-max,
-    no re-sum) — the residual-reuse core of the backward."""
-    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    no re-sum) — the residual-reuse core of the backward.  Scores are
+    quantized exactly as the forward quantized them, so exp(s - m)/l
+    reconstructs the forward's P bit-for-bit per compute dtype."""
+    s = _score(ws_ref[...], w_ref[...], inv_tau, cd)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
     p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
     return s, p
 
 
-def _bwd_delta_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, dy_ref, y_ref,
-                      dc_ref, d_ref, *, n: int, bc: int):
-    """D_i = dy_i . y_i + sum_j P_ij dc_j, streamed over column blocks."""
+def _bwd_dws_delta_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref,
+                          dy_ref, y_ref, dc_ref, d_ref, dws_ref,
+                          a_ref, srow_ref, *, n: int, bc: int, nj: int, cd):
+    """Fused delta + dws row-grid sweep (the 3->2 backward-pass merge).
+
+    Accumulates, per row block over the column blocks:
+      D_i = dy_i . y_i + sum_j P_ij dc_j       (delta, emitted for the
+                                                transposed pass)
+      A_i = sum_j P_ij dP_ij sgn_ij            (f32 scratch)
+      S_i = sum_j P_ij sgn_ij                  (f32 scratch)
+    and combines at the last column block:
+      dws_i = -sum_j ds_ij sgn_ij / tau = -(A_i - D_i * S_i) / tau
+    — the D-dependent half of ds = P (dP - D) factors out of the row
+    reduction, so dws never needs a finished D mid-sweep."""
     j = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
-    _, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n)
+    _, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n, cd)
+    dp = jax.lax.dot_general(
+        dy_ref[...], x_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + dc_ref[...]
+    sgn = jnp.sign(ws_ref[...] - w_ref[...])
 
     @pl.when(j == 0)
     def _init():
-        d_ref[...] = jnp.sum(dy_ref[...] * y_ref[...], axis=-1,
-                             keepdims=True)
+        d_ref[...] = jnp.sum(dy_ref[...].astype(jnp.float32)
+                             * y_ref[...].astype(jnp.float32),
+                             axis=-1, keepdims=True)
+        a_ref[...] = jnp.zeros_like(a_ref)
+        srow_ref[...] = jnp.zeros_like(srow_ref)
 
     d_ref[...] += jax.lax.dot_general(
-        p, dc_ref[...],
+        p.astype(cd), dc_ref[...],
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
+    a_ref[...] += jnp.sum(p * dp * sgn, axis=-1, keepdims=True)
+    srow_ref[...] += jnp.sum(p * sgn, axis=-1, keepdims=True)
+
+    @pl.when(j == nj - 1)
+    def _combine():
+        dws_ref[...] = -(a_ref[...] - d_ref[...] * srow_ref[...]) \
+            * inv_tau
 
 
 def _bwd_dx_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, dy_ref,
-                   dc_ref, d_ref, dx_ref, dwc_ref, dtc_ref,
-                   *, n: int, br: int, bc: int):
+                   dc_ref, d_ref, dx_ref, dwc_ref, dtc_ref, acc_ref,
+                   *, n: int, br: int, bc: int, ni: int, cd):
     """Transposed grid (B, Nj, Ni): per column block accumulate
-    dx_j = P^T @ dy, dw_cols_j = sum_i ds * sgn / tau, and the
-    per-column dtau partial sum_i ds * (-s) / tau."""
+    dx_j = P^T @ dy (f32 scratch, written once in the compute dtype),
+    dw_cols_j = sum_i ds * sgn / tau, and the per-column dtau partial
+    sum_i ds * (-s) / tau."""
     j = pl.program_id(1)
     i = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
-    s, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n)
+    s, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n, cd)
     p = jnp.where(_row_mask(i, br, n), p, 0.0)      # pad rows are not rows of P
     # dP_ij = dy_i . x_j + dc_j
     dp = jax.lax.dot_general(
@@ -259,12 +343,12 @@ def _bwd_dx_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, dy_ref,
 
     @pl.when(i == 0)
     def _init():
-        dx_ref[...] = jnp.zeros_like(dx_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
         dwc_ref[...] = jnp.zeros_like(dwc_ref)
         dtc_ref[...] = jnp.zeros_like(dtc_ref)
 
-    dx_ref[...] += jax.lax.dot_general(
-        p, dy_ref[...],
+    acc_ref[...] += jax.lax.dot_general(
+        p.astype(cd), dy_ref[...],
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                     # (Bc, dp)
     dwc_ref[...] += jnp.sum(ds * sgn, axis=0, keepdims=True) * inv_tau
@@ -272,64 +356,56 @@ def _bwd_dx_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, dy_ref,
     # ds == 0 exactly, and NEG_INF is finite, so 0 * (-NEG_INF) == 0.
     dtc_ref[...] += jnp.sum(ds * (-s), axis=0, keepdims=True) * inv_tau
 
-
-def _bwd_dws_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, dy_ref,
-                    dc_ref, d_ref, dws_ref, *, n: int, bc: int):
-    """Row grid (B, Ni, Nj): dws_i = -sum_j ds_ij * sgn_ij / tau."""
-    j = pl.program_id(2)
-    inv_tau = 1.0 / tau_ref[0, 0]
-    _, p = _p_block(ws_ref, w_ref, m_ref, l_ref, inv_tau, j, bc, n)
-    dp = jax.lax.dot_general(
-        dy_ref[...], x_ref[...],
-        dimension_numbers=(((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32) + dc_ref[...]
-    ds = p * (dp - d_ref[...])
-    sgn = jnp.sign(ws_ref[...] - w_ref[...])
-
-    @pl.when(j == 0)
-    def _init():
-        dws_ref[...] = jnp.zeros_like(dws_ref)
-
-    dws_ref[...] += jnp.sum(ds * (-sgn), axis=-1, keepdims=True) * inv_tau
+    @pl.when(i == ni - 1)
+    def _flush():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
 
 
 def softsort_apply_bwd_pallas(
-    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded
-    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded
-    x: jnp.ndarray,       # (B, Np, dp) payload, padded
+    ws: jnp.ndarray,      # (B, Np, 1) sorted keys (rows), padded, f32
+    w: jnp.ndarray,       # (B, 1, Np) unsorted keys (cols), padded, f32
+    x: jnp.ndarray,       # (B, Np, dp) payload, padded, compute dtype
     tau: jnp.ndarray,     # (1, 1)
-    m: jnp.ndarray,       # (B, Np, 1) saved row maxes
-    l: jnp.ndarray,       # (B, Np, 1) saved row denominators
-    y: jnp.ndarray,       # (B, Np, dp) saved forward output
-    dy: jnp.ndarray,      # (B, Np, dp) cotangent of y (pad rows zero)
-    dc: jnp.ndarray,      # (B, 1, Np) cotangent of colsum (pad cols zero)
+    m: jnp.ndarray,       # (B, Np, 1) saved row maxes, f32
+    l: jnp.ndarray,       # (B, Np, 1) saved row denominators, f32
+    y: jnp.ndarray,       # (B, Np, dp) saved forward output, compute dtype
+    dy: jnp.ndarray,      # (B, Np, dp) cotangent of y, compute dtype
+    dc: jnp.ndarray,      # (B, 1, Np) cotangent of colsum, compute dtype
     *,
     n: int,
     br: int,
     bc: int,
     interpret: bool,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused backward from saved residuals.
+    """Fused backward from saved residuals — TWO Pallas passes.
 
-    Returns (dws (B, Np, 1) — gradient w.r.t. the SORTED keys, to be
-    scattered through ``perm`` by the caller; dw_cols (B, 1, Np);
-    dx (B, Np, dp); dtau_cols (B, 1, Np) — per-column dtau partials,
-    summed to a scalar by the caller).
+    Pass 1 (row grid) fuses the old delta pass into the dws pass: one
+    sweep emits D (consumed by pass 2) AND dws.  Pass 2 (transposed
+    grid) produces the column-indexed dx / dw_cols / dtau_cols.
+
+    Returns (dws (B, Np, 1) f32 — gradient w.r.t. the SORTED keys, to
+    be scattered through ``perm`` by the caller; dw_cols (B, 1, Np)
+    f32; dx (B, Np, dp) in the compute dtype; dtau_cols (B, 1, Np) f32
+    — per-column dtau partials, summed to a scalar by the caller).
     """
     bsz, np_, dp = x.shape
     ni, nj = np_ // br, np_ // bc
     f32 = jnp.float32
+    cd = x.dtype
 
     row_spec = pl.BlockSpec((None, br, 1), lambda b, i, j: (b, i, 0))
     col_spec = pl.BlockSpec((None, 1, bc), lambda b, i, j: (b, 0, j))
     tau_spec = pl.BlockSpec((1, 1), lambda b, i, j: (0, 0))
 
-    delta = pl.pallas_call(
-        functools.partial(_bwd_delta_kernel, n=n, bc=bc),
+    # Fused delta+dws row-grid sweep; the A/S partial sums live in f32
+    # VMEM scratch and never touch HBM.
+    delta, dws = pl.pallas_call(
+        functools.partial(_bwd_dws_delta_kernel, n=n, bc=bc, nj=nj, cd=cd),
         grid=(bsz, ni, nj),
         in_specs=[
             row_spec,                                                 # ws
             col_spec,                                                 # w
+            pl.BlockSpec((None, bc, dp), lambda b, i, j: (b, j, 0)),  # x
             tau_spec,                                                 # tau
             row_spec,                                                 # m
             row_spec,                                                 # l
@@ -337,15 +413,20 @@ def softsort_apply_bwd_pallas(
             pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),  # y
             col_spec,                                                 # dc
         ],
-        out_specs=row_spec,                                           # D
-        out_shape=jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        out_specs=[row_spec, row_spec],                    # D, dws
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+            jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((br, 1), f32),          # A
+                        pltpu.VMEM((br, 1), f32)],         # S
         interpret=interpret,
-    )(ws, w, tau, m, l, dy, y, dc)
+    )(ws, w, x, tau, m, l, dy, y, dc)
 
     # Transposed grid: j outer, i inner, so the column-indexed outputs
-    # (dx, dw_cols, dtau_cols) accumulate in VMEM.
+    # (dx via scratch, dw_cols, dtau_cols) accumulate in VMEM.
     dx, dw_cols, dtau_cols = pl.pallas_call(
-        functools.partial(_bwd_dx_kernel, n=n, br=br, bc=bc),
+        functools.partial(_bwd_dx_kernel, n=n, br=br, bc=bc, ni=ni, cd=cd),
         grid=(bsz, nj, ni),
         in_specs=[
             pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # ws
@@ -364,29 +445,11 @@ def softsort_apply_bwd_pallas(
             pl.BlockSpec((None, 1, bc), lambda b, j, i: (b, 0, j)),   # dtau
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bsz, np_, dp), f32),
+            jax.ShapeDtypeStruct((bsz, np_, dp), cd),
             jax.ShapeDtypeStruct((bsz, 1, np_), f32),
             jax.ShapeDtypeStruct((bsz, 1, np_), f32),
         ],
-        interpret=interpret,
-    )(ws, w, x, tau, m, l, dy, dc, delta)
-
-    dws = pl.pallas_call(
-        functools.partial(_bwd_dws_kernel, n=n, bc=bc),
-        grid=(bsz, ni, nj),
-        in_specs=[
-            row_spec,                                                 # ws
-            col_spec,                                                 # w
-            pl.BlockSpec((None, bc, dp), lambda b, i, j: (b, j, 0)),  # x
-            tau_spec,                                                 # tau
-            row_spec,                                                 # m
-            row_spec,                                                 # l
-            pl.BlockSpec((None, br, dp), lambda b, i, j: (b, i, 0)),  # dy
-            col_spec,                                                 # dc
-            row_spec,                                                 # D
-        ],
-        out_specs=row_spec,
-        out_shape=jax.ShapeDtypeStruct((bsz, np_, 1), f32),
+        scratch_shapes=[pltpu.VMEM((bc, dp), f32)],        # dx accumulator
         interpret=interpret,
     )(ws, w, x, tau, m, l, dy, dc, delta)
 
@@ -403,7 +466,7 @@ def softsort_apply_bwd_pallas(
 # (neglected mass bounded by core.softsort.band_tail_bound).  Each row
 # block i therefore touches only the nbj = 2*ceil(K/blk) + 1 column
 # blocks u = i - off .. i + off, shrinking the grid from (N/blk)^2 to
-# (N/blk) * nbj cells per pass; edge blocks clip their index map into
+# (N/blk) * nbj cells per pass; edge blocks clip their index maps into
 # range and mask themselves out entirely.
 #
 # Two layout changes vs the dense kernels above, both HBM-traffic wins
@@ -419,10 +482,15 @@ def softsort_apply_bwd_pallas(
 #
 # Same online-softmax + residual-saving custom_vjp structure as the
 # fused dense tier: one forward sweep emitting (y_t, m, l), a
-# transposed-grid colsum, and three backward passes (delta, column-
-# indexed dx/dw/dtau, row-indexed dws).  Because both axes are sorted,
-# the key gradient has a row AND a column component here — the wrapper
-# sums them before scattering through the saved perm.
+# transposed-grid colsum, and TWO backward passes (fused delta+dws row
+# sweep, then the column-indexed dx/dw/dtau pass — the same 3->2 merge
+# as the dense tier, one fewer full re-score of the band).  Because
+# both axes are sorted, the key gradient has a row AND a column
+# component here — the wrapper sums them before scattering through the
+# saved perm.  Mixed precision follows the dense tier's contract: keys
+# f32, scores rounded to the compute dtype, payload-sided arrays
+# (xt, dyt, dc, the yt residual, the dxt output) in the compute dtype,
+# stats/accumulators f32.
 # --------------------------------------------------------------------------
 
 
@@ -438,26 +506,30 @@ def _band_mask(i, u, blk: int, k: int, n: int):
             & (cols >= 0) & (cols < n) & (rows >= 0) & (rows < n))
 
 
-def _score_t(wc_blk, wr_blk, inv_tau):
+def _score_t(wc_blk, wr_blk, inv_tau, cd):
     # (Bc, 1) x (1, Br) -> (Bc, Br) transposed L1 scores, scaled.
-    return -jnp.abs(wc_blk - wr_blk) * inv_tau
+    # Same precision contract as ``_score``: f32 keys, score rounded to
+    # the compute dtype, f32 out for the softmax stats.
+    s = -jnp.abs(wc_blk - wr_blk) * inv_tau
+    return s.astype(cd).astype(jnp.float32)
 
 
 def _fwd_band_kernel(wr_ref, wc_ref, xt_ref, tau_ref, y_ref, m_ref, l_ref,
-                     *, n: int, k: int, blk: int, off: int, nbj: int):
+                     acc_ref, *, n: int, k: int, blk: int, off: int,
+                     nbj: int, cd):
     i = pl.program_id(1)
     jj = pl.program_id(2)
     u = i - off + jj                              # unclipped column block
     inv_tau = 1.0 / tau_ref[0, 0]
     mask = _band_mask(i, u, blk, k, n)
-    s = jnp.where(mask, _score_t(wc_ref[...], wr_ref[...], inv_tau),
+    s = jnp.where(mask, _score_t(wc_ref[...], wr_ref[...], inv_tau, cd),
                   NEG_INF)
 
     @pl.when(jj == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
-        y_ref[...] = jnp.zeros_like(y_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     m_prev = m_ref[...]                                        # (1, Br)
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=0, keepdims=True))
@@ -469,21 +541,23 @@ def _fwd_band_kernel(wr_ref, wc_ref, xt_ref, tau_ref, y_ref, m_ref, l_ref,
     l_ref[...] = l_ref[...] * correction + jnp.sum(
         p_un, axis=0, keepdims=True)
     m_ref[...] = m_new
-    y_ref[...] = y_ref[...] * correction + jax.lax.dot_general(
-        xt_ref[...], p_un,
+    acc_ref[...] = acc_ref[...] * correction + jax.lax.dot_general(
+        xt_ref[...], p_un.astype(cd),
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                    # (dsub, Br)
 
     @pl.when(jj == nbj - 1)
     def _normalize():
-        y_ref[...] = y_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        y_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)).astype(y_ref.dtype)
 
 
-def _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask):
+def _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask, cd):
     """Exact normalized transposed P~ block from the saved stats, fully
     masked (band + padding + clipped edge blocks) so garbage stats on
-    masked rows can never leak."""
-    s = jnp.where(mask, _score_t(wc_ref[...], wr_ref[...], inv_tau),
+    masked rows can never leak.  Scores quantized exactly as the
+    forward's."""
+    s = jnp.where(mask, _score_t(wc_ref[...], wr_ref[...], inv_tau, cd),
                   NEG_INF)
     p = jnp.where(mask, jnp.exp(s - m_ref[...])
                   / jnp.maximum(l_ref[...], 1e-30), 0.0)
@@ -491,7 +565,7 @@ def _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask):
 
 
 def _colsum_band_kernel(wr_ref, wc_ref, tau_ref, m_ref, l_ref, c_ref,
-                        *, n: int, k: int, blk: int, off: int):
+                        *, n: int, k: int, blk: int, off: int, cd):
     # Grid (B, Nj, nbi): column block j outer, band row step ii inner so
     # the (Bc, 1) colsum block accumulates in VMEM.
     j = pl.program_id(1)
@@ -499,7 +573,7 @@ def _colsum_band_kernel(wr_ref, wc_ref, tau_ref, m_ref, l_ref, c_ref,
     iu = j - off + ii                             # unclipped row block
     inv_tau = 1.0 / tau_ref[0, 0]
     mask = _band_mask(iu, j, blk, k, n)
-    _, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+    _, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask, cd)
 
     @pl.when(ii == 0)
     def _init():
@@ -509,9 +583,9 @@ def _colsum_band_kernel(wr_ref, wc_ref, tau_ref, m_ref, l_ref, c_ref,
 
 
 def softsort_apply_fwd_banded_pallas(
-    wr: jnp.ndarray,      # (B, 1, Np) sorted keys (matrix rows), padded
-    wc: jnp.ndarray,      # (B, Np, 1) sorted keys (matrix cols), padded
-    xt: jnp.ndarray,      # (B, dsub, Np) payload, sorted + transposed
+    wr: jnp.ndarray,      # (B, 1, Np) sorted keys (matrix rows), f32
+    wc: jnp.ndarray,      # (B, Np, 1) sorted keys (matrix cols), f32
+    xt: jnp.ndarray,      # (B, dsub, Np) payload, sorted + transposed, cd
     tau: jnp.ndarray,     # (1, 1) — shared across the batch
     *,
     n: int,               # true length
@@ -519,21 +593,22 @@ def softsort_apply_fwd_banded_pallas(
     blk: int,             # square block edge (multiple of 128)
     interpret: bool,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Banded forward: (y_t (B, dsub, Np), colsum (B, Np, 1) in rank
-    order, m, l (B, 1, Np)).  Two ``pallas_call``s over (N/blk) * nbj
-    grids instead of (N/blk)^2."""
+    """Banded forward: (y_t (B, dsub, Np) in the compute dtype, colsum
+    (B, Np, 1) in rank order, m, l (B, 1, Np) f32).  Two
+    ``pallas_call``s over (N/blk) * nbj grids instead of (N/blk)^2."""
     bsz, dsub, np_ = xt.shape
     ni = np_ // blk
     off = -(-k // blk)
     nbj = 2 * off + 1
     f32 = jnp.float32
+    cd = xt.dtype
 
     def _col(b, i, jj):
         return jnp.clip(i - off + jj, 0, ni - 1)
 
     y_t, m, l = pl.pallas_call(
         functools.partial(_fwd_band_kernel, n=n, k=k, blk=blk, off=off,
-                          nbj=nbj),
+                          nbj=nbj, cd=cd),
         grid=(bsz, ni, nbj),
         in_specs=[
             pl.BlockSpec((None, 1, blk), lambda b, i, jj: (b, 0, i)),  # wr
@@ -549,15 +624,17 @@ def softsort_apply_fwd_banded_pallas(
             pl.BlockSpec((None, 1, blk), lambda b, i, jj: (b, 0, i)),  # l
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bsz, dsub, np_), f32),
+            jax.ShapeDtypeStruct((bsz, dsub, np_), cd),
             jax.ShapeDtypeStruct((bsz, 1, np_), f32),
             jax.ShapeDtypeStruct((bsz, 1, np_), f32),
         ],
+        scratch_shapes=[pltpu.VMEM((dsub, blk), f32)],     # y accumulator
         interpret=interpret,
     )(wr, wc, xt, tau)
 
     colsum = pl.pallas_call(
-        functools.partial(_colsum_band_kernel, n=n, k=k, blk=blk, off=off),
+        functools.partial(_colsum_band_kernel, n=n, k=k, blk=blk, off=off,
+                          cd=cd),
         grid=(bsz, ni, nbj),
         in_specs=[
             pl.BlockSpec((None, 1, blk),
@@ -577,40 +654,69 @@ def softsort_apply_fwd_banded_pallas(
     return y_t, colsum, m, l
 
 
-def _bwd_band_delta_kernel(wr_ref, wc_ref, tau_ref, m_ref, l_ref, dyt_ref,
-                           yt_ref, dc_ref, d_ref,
-                           *, n: int, k: int, blk: int, off: int):
-    """D_i = dy_i . y_i + sum_{r in band} P~_ir dc~_r, band blocks only."""
+def _bwd_band_dws_delta_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref,
+                               l_ref, dyt_ref, yt_ref, dc_ref, d_ref,
+                               dws_ref, a_ref, srow_ref,
+                               *, n: int, k: int, blk: int, off: int,
+                               nbj: int, cd):
+    """Fused delta + dws_row band sweep (the banded 3->2 merge), row
+    grid (B, Ni, nbj), everything in the (Bc, Br) transposed layout:
+
+      D_i = dy_i . y_i + sum_{r in band} P~_ir dc~_r   (delta, emitted)
+      A_i = sum_r P~_ir dP~_ir sgn_ir                  (f32 scratch)
+      S_i = sum_r P~_ir sgn_ir                         (f32 scratch)
+
+    combined at the last band block into
+      dws_row_i = -(A_i - D_i * S_i) / tau
+    — one band re-score instead of the previous delta + dws pair."""
     i = pl.program_id(1)
     jj = pl.program_id(2)
     u = i - off + jj
     inv_tau = 1.0 / tau_ref[0, 0]
     mask = _band_mask(i, u, blk, k, n)
-    _, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+    _, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask, cd)
+    # dP~_ir = dy_i . xs_r + dc~_r, in (Bc, Br) transposed layout.
+    dp = jax.lax.dot_general(
+        xt_ref[...], dyt_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + dc_ref[...]
+    sgn = jnp.sign(wr_ref[...] - wc_ref[...])
 
     @pl.when(jj == 0)
     def _init():
-        d_ref[...] = jnp.sum(dyt_ref[...] * yt_ref[...], axis=0,
-                             keepdims=True)                    # (1, Br)
+        d_ref[...] = jnp.sum(dyt_ref[...].astype(jnp.float32)
+                             * yt_ref[...].astype(jnp.float32),
+                             axis=0, keepdims=True)
+        a_ref[...] = jnp.zeros_like(a_ref)
+        srow_ref[...] = jnp.zeros_like(srow_ref)
 
     d_ref[...] += jax.lax.dot_general(
-        dc_ref[...], p,
+        dc_ref[...], p.astype(cd),
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)                    # (1, Br)
+    a_ref[...] += jnp.sum(p * dp * sgn, axis=0, keepdims=True)
+    srow_ref[...] += jnp.sum(p * sgn, axis=0, keepdims=True)
+
+    @pl.when(jj == nbj - 1)
+    def _combine():
+        dws_ref[...] = -(a_ref[...] - d_ref[...] * srow_ref[...]) \
+            * inv_tau
 
 
 def _bwd_band_dcol_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref, l_ref,
                           dyt_ref, dc_ref, d_ref, dxt_ref, dwc_ref, dtc_ref,
-                          *, n: int, k: int, blk: int, off: int):
+                          acc_ref, *, n: int, k: int, blk: int, off: int,
+                          nbj: int, cd):
     """Column grid (B, Nj, nbi): per column block accumulate
-    dxs_t_r = sum_i P~_ir dy_i, dws_col_r = sum_i ds_ir sgn_ir / tau,
-    and the per-column dtau partial."""
+    dxs_t_r = sum_i P~_ir dy_i (f32 scratch, written once in the
+    compute dtype), dws_col_r = sum_i ds_ir sgn_ir / tau, and the
+    per-column dtau partial."""
     j = pl.program_id(1)
     ii = pl.program_id(2)
     iu = j - off + ii
     inv_tau = 1.0 / tau_ref[0, 0]
     mask = _band_mask(iu, j, blk, k, n)
-    s, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
+    s, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask, cd)
     # dP~_ir = dy_i . xs_r + dc~_r, in (Bc, Br) transposed layout.
     dp = jax.lax.dot_general(
         xt_ref[...], dyt_ref[...],
@@ -621,12 +727,12 @@ def _bwd_band_dcol_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref, l_ref,
 
     @pl.when(ii == 0)
     def _init():
-        dxt_ref[...] = jnp.zeros_like(dxt_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
         dwc_ref[...] = jnp.zeros_like(dwc_ref)
         dtc_ref[...] = jnp.zeros_like(dtc_ref)
 
-    dxt_ref[...] += jax.lax.dot_general(
-        dyt_ref[...], p,
+    acc_ref[...] += jax.lax.dot_general(
+        dyt_ref[...], p.astype(cd),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                    # (dsub, Bc)
     dwc_ref[...] += jnp.sum(ds * sgn, axis=1, keepdims=True) * inv_tau
@@ -634,58 +740,45 @@ def _bwd_band_dcol_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref, l_ref,
     # 0 * (-NEG_INF) products below are exact zeros.
     dtc_ref[...] += jnp.sum(ds * (-s), axis=1, keepdims=True) * inv_tau
 
-
-def _bwd_band_dws_kernel(wr_ref, wc_ref, xt_ref, tau_ref, m_ref, l_ref,
-                         dyt_ref, dc_ref, d_ref, dws_ref,
-                         *, n: int, k: int, blk: int, off: int):
-    """Row grid (B, Ni, nbj): dws_row_i = -sum_r ds_ir sgn_ir / tau."""
-    i = pl.program_id(1)
-    jj = pl.program_id(2)
-    u = i - off + jj
-    inv_tau = 1.0 / tau_ref[0, 0]
-    mask = _band_mask(i, u, blk, k, n)
-    s, p = _p_band_block(wr_ref, wc_ref, m_ref, l_ref, inv_tau, mask)
-    dp = jax.lax.dot_general(
-        xt_ref[...], dyt_ref[...],
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32) + dc_ref[...]
-    ds = p * (dp - d_ref[...])
-    sgn = jnp.sign(wr_ref[...] - wc_ref[...])
-
-    @pl.when(jj == 0)
-    def _init():
-        dws_ref[...] = jnp.zeros_like(dws_ref)
-
-    dws_ref[...] += jnp.sum(ds * (-sgn), axis=0, keepdims=True) * inv_tau
+    @pl.when(ii == nbj - 1)
+    def _flush():
+        dxt_ref[...] = acc_ref[...].astype(dxt_ref.dtype)
 
 
 def softsort_apply_bwd_banded_pallas(
-    wr: jnp.ndarray,      # (B, 1, Np) sorted keys (rows), padded
-    wc: jnp.ndarray,      # (B, Np, 1) sorted keys (cols), padded
-    xt: jnp.ndarray,      # (B, dsub, Np) payload, sorted + transposed
+    wr: jnp.ndarray,      # (B, 1, Np) sorted keys (rows), padded, f32
+    wc: jnp.ndarray,      # (B, Np, 1) sorted keys (cols), padded, f32
+    xt: jnp.ndarray,      # (B, dsub, Np) payload, sorted + transposed, cd
     tau: jnp.ndarray,     # (1, 1)
-    m: jnp.ndarray,       # (B, 1, Np) saved row maxes
-    l: jnp.ndarray,       # (B, 1, Np) saved row denominators
-    yt: jnp.ndarray,      # (B, dsub, Np) saved forward output, transposed
-    dyt: jnp.ndarray,     # (B, dsub, Np) cotangent of y, transposed
-    dc: jnp.ndarray,      # (B, Np, 1) cotangent of colsum, rank order
+    m: jnp.ndarray,       # (B, 1, Np) saved row maxes, f32
+    l: jnp.ndarray,       # (B, 1, Np) saved row denominators, f32
+    yt: jnp.ndarray,      # (B, dsub, Np) saved forward output, transposed, cd
+    dyt: jnp.ndarray,     # (B, dsub, Np) cotangent of y, transposed, cd
+    dc: jnp.ndarray,      # (B, Np, 1) cotangent of colsum, rank order, cd
     *,
     n: int,
     k: int,
     blk: int,
     interpret: bool,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Banded backward from saved residuals, three band-grid passes.
+    """Banded backward from saved residuals — TWO band-grid passes.
+
+    Pass 1 (row band grid) fuses the old delta pass into the dws_row
+    pass: one band sweep emits D (consumed by pass 2) AND dws_row.
+    Pass 2 (column band grid) produces the column-indexed dxs_t /
+    dws_col / dtau_cols.
 
     Returns (dws_row (B, 1, Np), dws_col (B, Np, 1) — the key gradient's
-    row and column components, both in RANK order, summed and scattered
-    through ``perm`` by the caller; dxs_t (B, dsub, Np) — payload
-    gradient in rank order, transposed; dtau_cols (B, Np, 1))."""
+    row and column components, both f32 and in RANK order, summed and
+    scattered through ``perm`` by the caller; dxs_t (B, dsub, Np) —
+    payload gradient in rank order, transposed, in the compute dtype;
+    dtau_cols (B, Np, 1) f32)."""
     bsz, dsub, np_ = xt.shape
     ni = np_ // blk
     off = -(-k // blk)
     nbj = 2 * off + 1
     f32 = jnp.float32
+    cd = xt.dtype
 
     def _col(b, i, jj):
         return jnp.clip(i - off + jj, 0, ni - 1)
@@ -701,44 +794,40 @@ def softsort_apply_bwd_banded_pallas(
                              lambda b, i, jj: (b, 0, _col(b, i, jj)))
     tau_spec = pl.BlockSpec((1, 1), lambda b, i, jj: (0, 0))
 
-    delta = pl.pallas_call(
-        functools.partial(_bwd_band_delta_kernel, n=n, k=k, blk=blk,
-                          off=off),
+    # Fused delta+dws_row band sweep; A/S partial sums in f32 scratch.
+    delta, dws_row = pl.pallas_call(
+        functools.partial(_bwd_band_dws_delta_kernel, n=n, k=k, blk=blk,
+                          off=off, nbj=nbj, cd=cd),
         grid=(bsz, ni, nbj),
-        in_specs=[row_keys, band_cols, tau_spec, row_keys, row_keys,
-                  row_pay, row_pay, band_cols],
-        out_specs=row_keys,                                    # D
-        out_shape=jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        in_specs=[row_keys, band_cols, band_pay, tau_spec, row_keys,
+                  row_keys, row_pay, row_pay, band_cols],
+        out_specs=[row_keys, row_keys],                    # D, dws_row
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+            jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, blk), f32),         # A
+                        pltpu.VMEM((1, blk), f32)],        # S
         interpret=interpret,
-    )(wr, wc, tau, m, l, dyt, yt, dc)
+    )(wr, wc, xt, tau, m, l, dyt, yt, dc)
 
     # Column grid (j outer, band row step inner): the column-indexed
-    # outputs (dxs_t, dws_col, dtau_cols) accumulate in VMEM.
+    # outputs (dxs_t via scratch, dws_col, dtau_cols) accumulate in VMEM.
     col_keys = pl.BlockSpec((None, blk, 1), lambda b, j, ii: (b, j, 0))
     col_pay = pl.BlockSpec((None, dsub, blk), lambda b, j, ii: (b, 0, j))
     dxt, dwc, dtc = pl.pallas_call(
         functools.partial(_bwd_band_dcol_kernel, n=n, k=k, blk=blk,
-                          off=off),
+                          off=off, nbj=nbj, cd=cd),
         grid=(bsz, ni, nbj),
         in_specs=[band_keys, col_keys, col_pay, tau_spec, band_keys,
                   band_keys, band_pay, col_keys, band_keys],
         out_specs=[col_pay, col_keys, col_keys],
         out_shape=[
-            jax.ShapeDtypeStruct((bsz, dsub, np_), f32),
+            jax.ShapeDtypeStruct((bsz, dsub, np_), cd),
             jax.ShapeDtypeStruct((bsz, np_, 1), f32),
             jax.ShapeDtypeStruct((bsz, np_, 1), f32),
         ],
-        interpret=interpret,
-    )(wr, wc, xt, tau, m, l, dyt, dc, delta)
-
-    dws_row = pl.pallas_call(
-        functools.partial(_bwd_band_dws_kernel, n=n, k=k, blk=blk,
-                          off=off),
-        grid=(bsz, ni, nbj),
-        in_specs=[row_keys, band_cols, band_pay, tau_spec, row_keys,
-                  row_keys, row_pay, band_cols, row_keys],
-        out_specs=row_keys,
-        out_shape=jax.ShapeDtypeStruct((bsz, 1, np_), f32),
+        scratch_shapes=[pltpu.VMEM((dsub, blk), f32)],     # dxt accumulator
         interpret=interpret,
     )(wr, wc, xt, tau, m, l, dyt, dc, delta)
 
@@ -748,13 +837,13 @@ def softsort_apply_bwd_banded_pallas(
 # --------------------------------------------------------------------------
 # v1 split forward (stats + apply + colsum, three pallas_calls) — kept as
 # the measured baseline for benchmarks/kernel_bench.py.  Not used by the
-# production path.
+# production path; f32 only.
 # --------------------------------------------------------------------------
 
 def _stats_kernel(ws_ref, w_ref, tau_ref, m_ref, l_ref, *, n: int, bc: int):
     j = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
-    s = _score(ws_ref[...], w_ref[...], inv_tau)               # (Br, Bc)
+    s = _score(ws_ref[...], w_ref[...], inv_tau, jnp.float32)  # (Br, Bc)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
 
     @pl.when(j == 0)
@@ -774,7 +863,7 @@ def _apply_kernel(ws_ref, w_ref, x_ref, tau_ref, m_ref, l_ref, y_ref,
                   *, n: int, bc: int):
     j = pl.program_id(2)
     inv_tau = 1.0 / tau_ref[0, 0]
-    s = _score(ws_ref[...], w_ref[...], inv_tau)
+    s = _score(ws_ref[...], w_ref[...], inv_tau, jnp.float32)
     s = jnp.where(_col_mask(j, bc, n), s, NEG_INF)
     p = jnp.exp(s - m_ref[...]) / jnp.maximum(l_ref[...], 1e-30)
 
@@ -839,7 +928,8 @@ def softsort_apply_fwd_pallas_v1(
     )(ws, w, x, tau, m, l)
 
     colsum = pl.pallas_call(
-        functools.partial(_colsum_kernel, n=n, br=br, bc=bc),
+        functools.partial(_colsum_kernel, n=n, br=br, bc=bc,
+                          cd=jnp.float32),
         grid=(bsz, nj, ni),
         in_specs=[
             pl.BlockSpec((None, br, 1), lambda b, j, i: (b, i, 0)),   # ws

@@ -30,7 +30,9 @@ Two workloads share this entrypoint:
   and ``--band K`` / ``--band auto`` additionally switches the apply to
   the O(N*K) banded tier once the anneal is cold enough for its tail
   bound (EXPERIMENTS.md §Perf) — both compose with the mesh and the
-  tournament.
+  tournament.  ``--dtype bfloat16`` (with ``--use-kernel``) selects the
+  mixed-precision kernel tier: bf16 score/payload compute and half the
+  payload HBM traffic, f32 keys/stats/Adam (EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
@@ -233,10 +235,17 @@ def serve_sorts(args):
 
     hw = (args.sort_hw, args.sort_n // args.sort_hw)
     assert hw[0] * hw[1] == args.sort_n, (args.sort_n, args.sort_hw)
+    # compute_dtype is a kernel-tier knob; without --use-kernel the
+    # chunked-jnp apply runs f32 regardless, so a bare --dtype bfloat16
+    # would silently do nothing — refuse instead.
+    assert args.dtype == "float32" or args.use_kernel, (
+        "--dtype bfloat16 requires --use-kernel (the jnp apply tier "
+        "has no bf16 mode)")
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
                                 chunk=min(256, args.sort_n),
                                 use_kernel=args.use_kernel,
-                                band=_parse_band(args.band))
+                                band=_parse_band(args.band),
+                                compute_dtype=args.dtype)
     mesh = make_sort_mesh(args.mesh_devices) if args.mesh_devices else None
     server = SortServer(hw, d=args.sort_d, cfg=cfg,
                         max_batch=args.max_batch, max_wait_ms=args.wait_ms,
@@ -297,6 +306,12 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="run the SoftSort apply (fwd+bwd) through the "
                          "fused Pallas kernel tier instead of chunked jnp")
+    ap.add_argument("--dtype", choices=("float32", "bfloat16"),
+                    default="float32",
+                    help="kernel-tier compute precision (with "
+                         "--use-kernel): bfloat16 halves the kernels' "
+                         "payload HBM traffic; keys, stats, and Adam "
+                         "math stay f32 (EXPERIMENTS.md §Perf)")
     ap.add_argument("--band", default=None,
                     help="banded O(N*K) apply: an integer half-width K, "
                          "'auto' to size it from N and the tau schedule, "

@@ -1,0 +1,261 @@
+"""Mixed-precision (bf16) kernel parity suite — hypothesis-free.
+
+The kernel tier's ``compute_dtype="bfloat16"`` contract
+(``repro/kernels/softsort_apply.py`` docstring): keys, softmax stats,
+accumulators and key/tau gradients stay f32; scores are rounded to
+bf16; payload-sided arrays ride bf16 in HBM and through the MXU.  The
+principled tolerance that follows: bf16 rounding is 2^-8 ~ 0.4%
+relative per quantization, the forward applies it to the scores (error
+amplified by exp only where p is already large, so ~proportional) and
+once to the payload product, and the backward stacks a handful of such
+factors — the documented envelope is 2e-2 relative (observed <= ~6e-3
+across this suite and the bench sweep), against f32 references.
+
+Also asserts the f32 path is UNCHANGED by the mixed-precision plumbing
+(compute_dtype="float32" must match the default exactly), the
+tie-heavy-keys behaviour (bf16 score rounding manufactures ties; the
+committed permutation comes from argsort of the f32 keys and must stay
+valid, and the kernel outputs must stay finite), and hosts the
+row-chunked ``mean_pairwise_distance`` regression (satellite of the
+same PR: the exact path no longer materializes the (N, N, d)
+broadcast).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import mean_pairwise_distance
+from repro.core.softsort import (
+    hard_permutation,
+    is_valid_permutation,
+    softsort_apply_banded as banded_oracle,
+)
+from repro.kernels.ops import softsort_apply, softsort_apply_banded
+from repro.kernels.ref import softsort_apply_ref
+
+BF16_TOL = 2e-2          # the documented bf16 envelope (EXPERIMENTS §Perf)
+
+
+def _loss_of(apply_fn, a, b):
+    def f(w, x, tau):
+        y, c = apply_fn(w, x, tau)
+        return jnp.sum(y * a) + jnp.sum(c * b)
+    return f
+
+
+def _relerr(got, want):
+    scale = float(jnp.max(jnp.abs(want))) + 1e-9
+    return float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32)
+                                 - want))) / scale
+
+
+def _problem(n, d, key=0, scale=3.0):
+    keys = jax.random.split(jax.random.PRNGKey(key), 4)
+    w = jax.random.normal(keys[0], (n,)) * scale
+    x = jax.random.normal(keys[1], (n, d))
+    a = jax.random.normal(keys[2], (n, d))
+    b = jax.random.normal(keys[3], (n,))
+    return w, x, a, b
+
+
+# ------------------------------------------------ bf16 vs f32 parity
+
+@pytest.mark.parametrize("n,d", [(100, 7), (300, 3), (129, 17)])
+def test_bf16_fused_forward_parity(n, d):
+    w, x, _, _ = _problem(n, d, key=n + d)
+    y, c = softsort_apply(w, x, 0.6, compute_dtype="bfloat16")
+    yr, cr = softsort_apply_ref(w, x, 0.6)
+    assert y.dtype == jnp.float32          # public output is upcast
+    assert _relerr(y, yr) < BF16_TOL
+    assert _relerr(c, cr) < BF16_TOL
+
+
+@pytest.mark.parametrize("n,d", [(100, 7), (300, 3)])
+def test_bf16_fused_gradient_parity(n, d):
+    """dw, dx AND dtau against the f32 dense oracle."""
+    w, x, a, b = _problem(n, d, key=3 * n + d)
+    gk = jax.grad(_loss_of(
+        lambda w, x, t: softsort_apply(w, x, t, compute_dtype="bfloat16"),
+        a, b), argnums=(0, 1, 2))(w, x, jnp.float32(0.6))
+    gr = jax.grad(_loss_of(softsort_apply_ref, a, b),
+                  argnums=(0, 1, 2))(w, x, jnp.float32(0.6))
+    for got, want in zip(gk, gr):
+        assert _relerr(got, np.asarray(want, np.float32)) < BF16_TOL
+
+
+@pytest.mark.parametrize("n,d,band", [(200, 5, 32), (300, 8, 64)])
+def test_bf16_banded_parity(n, d, band):
+    """Banded bf16 vs the windowed f32 jnp oracle — the same truncation,
+    so the comparison isolates pure precision error: fwd, colsum, and
+    all three gradients."""
+    w, x, a, b = _problem(n, d, key=7 * n + d)
+    tau = jnp.float32(0.3)
+    y, c = softsort_apply_banded(w, x, tau, band, compute_dtype="bfloat16")
+    yo, co = banded_oracle(w, x, tau, band)
+    assert _relerr(y, yo) < BF16_TOL
+    assert _relerr(c, co) < BF16_TOL
+    gk = jax.grad(_loss_of(
+        lambda w, x, t: softsort_apply_banded(
+            w, x, t, band, compute_dtype="bfloat16"), a, b),
+        argnums=(0, 1, 2))(w, x, tau)
+    go = jax.grad(_loss_of(
+        lambda w, x, t: banded_oracle(w, x, t, band), a, b),
+        argnums=(0, 1, 2))(w, x, tau)
+    for got, want in zip(gk, go):
+        assert _relerr(got, np.asarray(want, np.float32)) < BF16_TOL
+
+
+def test_bf16_batched_matches_per_instance():
+    """The bf16 tier under a leading batch axis is B independent
+    problems, exactly like the f32 tier."""
+    bsz, n, d = 3, 100, 5
+    keys = jax.random.split(jax.random.PRNGKey(11), 2)
+    w = jax.random.normal(keys[0], (bsz, n)) * 2
+    x = jax.random.normal(keys[1], (bsz, n, d))
+    y, c = softsort_apply(w, x, 0.5, compute_dtype="bfloat16")
+    for bi in range(bsz):
+        yi, ci = softsort_apply(w[bi], x[bi], 0.5,
+                                compute_dtype="bfloat16")
+        np.testing.assert_array_equal(np.asarray(y[bi]), np.asarray(yi))
+        np.testing.assert_array_equal(np.asarray(c[bi]), np.asarray(ci))
+
+
+# ----------------------------------- f32 path unchanged by the plumbing
+
+@pytest.mark.parametrize("banded", [False, True])
+def test_f32_compute_dtype_is_identity(banded):
+    """compute_dtype='float32' must be bit-identical to the default
+    call — the mixed-precision casts are exact no-ops at f32."""
+    w, x, a, b = _problem(150, 6, key=42)
+    if banded:
+        fn = lambda w, x, t, **kw: softsort_apply_banded(w, x, t, 32, **kw)
+    else:
+        fn = softsort_apply
+    y0, c0 = fn(w, x, 0.5)
+    y1, c1 = fn(w, x, 0.5, compute_dtype="float32")
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    g0 = jax.grad(_loss_of(lambda w, x, t: fn(w, x, t), a, b),
+                  argnums=(0, 1, 2))(w, x, jnp.float32(0.5))
+    g1 = jax.grad(_loss_of(
+        lambda w, x, t: fn(w, x, t, compute_dtype="float32"), a, b),
+        argnums=(0, 1, 2))(w, x, jnp.float32(0.5))
+    for p0, p1 in zip(g0, g1):
+        np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+
+
+# -------------------------------------------------- tie-heavy keys
+
+def test_bf16_tie_heavy_keys_valid_hard_permutation():
+    """bf16 score rounding manufactures exact ties (beyond the ones the
+    key vector already has); the committed permutation is argsort of
+    the F32 keys, so it must remain a valid permutation, and the bf16
+    kernel outputs must stay finite with row-stochastic mass."""
+    n, d = 256, 4
+    # Keys with heavy duplication: only 16 distinct values across 256
+    # slots, plus a tiny spread that bf16 rounding collapses back into
+    # ties at score scale.
+    base = jnp.repeat(jnp.arange(16, dtype=jnp.float32), n // 16)
+    jitter = jax.random.uniform(jax.random.PRNGKey(0), (n,)) * 1e-3
+    w = jax.random.permutation(jax.random.PRNGKey(1), base + jitter)
+    x = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+
+    perm = np.asarray(hard_permutation(w))
+    assert is_valid_permutation(perm)
+
+    for fn in (
+        lambda: softsort_apply(w, x, 0.05, compute_dtype="bfloat16"),
+        lambda: softsort_apply_banded(w, x, 0.05, 32,
+                                      compute_dtype="bfloat16"),
+    ):
+        y, c = fn()
+        assert bool(jnp.all(jnp.isfinite(y)))
+        assert bool(jnp.all(jnp.isfinite(c)))
+        # Total colsum mass is N (each row of P sums to 1) whatever the
+        # tie structure — ties redistribute mass between columns only.
+        np.testing.assert_allclose(float(c.sum()), n, rtol=1e-2)
+
+    # End-to-end: a short bf16-kernel training run on tie-heavy data
+    # still commits valid permutations.
+    from repro.core.shufflesoftsort import (
+        ShuffleSoftSortConfig,
+        shuffle_soft_sort,
+    )
+    xs_grid = jnp.repeat(jax.random.normal(jax.random.PRNGKey(3),
+                                           (16, 3)), 4, axis=0)   # dup rows
+    cfg = ShuffleSoftSortConfig(rounds=2, inner_steps=2, use_kernel=True,
+                                compute_dtype="bfloat16",
+                                chunk=64)
+    order, _, losses = shuffle_soft_sort(xs_grid, (8, 8), cfg,
+                                         key=jax.random.PRNGKey(4))
+    assert is_valid_permutation(order)
+    assert np.isfinite(losses).all()
+
+
+# ------------------------------------- engine bit-identity under bf16
+
+@pytest.mark.parametrize("compute_dtype", ["float32", "bfloat16"])
+def test_engines_bit_identical_per_seed_fixed_dtype(compute_dtype):
+    """Sequential vs batched engines stay bit-identical per seed within
+    one fixed (dtype, block) choice — precision and tiling are static
+    trace-time choices, identical across engines."""
+    from repro.core.shufflesoftsort import (
+        ShuffleSoftSortConfig,
+        shuffle_soft_sort,
+        shuffle_soft_sort_batched,
+    )
+    n, d = 64, 3
+    xs = jax.random.normal(jax.random.PRNGKey(9), (2, n, d))
+    cfg = ShuffleSoftSortConfig(rounds=3, inner_steps=2, use_kernel=True,
+                                compute_dtype=compute_dtype, chunk=64)
+    keys = jax.random.split(jax.random.PRNGKey(17), 2).reshape(2, 1, 2)
+    res = shuffle_soft_sort_batched(xs, (8, 8), cfg, n_restarts=1,
+                                    keys=keys)
+    for bi in range(2):
+        order, _, losses = shuffle_soft_sort(
+            xs[bi], (8, 8), cfg, key=jnp.asarray(keys[bi, 0]))
+        np.testing.assert_array_equal(res.order[bi], order)
+        np.testing.assert_allclose(res.losses[bi], np.asarray(losses),
+                                   rtol=0, atol=0)
+
+
+# ------------------------- satellite: chunked mean_pairwise_distance
+
+def test_mean_pairwise_distance_chunked_regression():
+    """The exact path now streams row chunks instead of materializing
+    the (N, N, d) broadcast.  The summed distances are mathematically
+    identical; chunking only reassociates the f32 reduction, so the
+    result agrees with the old all-at-once formula to a few ULP (XLA's
+    own (N, N)->scalar reduction order is already tiling-dependent, so
+    exact bit-matching is not achievable by ANY reassociated rewrite —
+    what matters downstream, eager vmap == plain, is asserted below
+    bitwise)."""
+    def old_exact(x):
+        n = x.shape[0]
+        d = jnp.sqrt(jnp.sum(jnp.square(x[:, None] - x[None, :]),
+                             axis=-1) + 1e-12)
+        return d.sum() / (n * (n - 1))
+
+    x_small = jax.random.normal(jax.random.PRNGKey(0), (200, 5))
+
+    # Reassociation only — a few ULP against the old formula.
+    for n, d in [(200, 5), (300, 5), (1000, 3), (2048, 8)]:
+        x = jax.random.normal(jax.random.PRNGKey(n), (n, d))
+        got = float(mean_pairwise_distance(x))
+        want = float(old_exact(x))
+        np.testing.assert_allclose(got, want, rtol=5e-7)
+
+    # The eager vmap the batched engines use must bit-match the plain
+    # call (this is what carries the sequential-vs-batched bit-identity
+    # contract through the norm).
+    xs = jax.random.normal(jax.random.PRNGKey(7), (3, 300, 4))
+    plain = np.asarray([float(mean_pairwise_distance(xs[i]))
+                        for i in range(3)], np.float32)
+    vmapped = np.asarray(jax.vmap(mean_pairwise_distance)(xs), np.float32)
+    np.testing.assert_array_equal(plain, vmapped)
+
+    # Gradients flow through the chunked stream.
+    g = jax.grad(lambda x: mean_pairwise_distance(x))(x_small)
+    assert bool(jnp.all(jnp.isfinite(g)))

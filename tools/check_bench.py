@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Schema validator for the committed ``BENCH_*.json`` benchmark records.
+"""Schema validator for the committed benchmark / autotune JSON records.
 
 Benchmarks are committed artifacts that docs tables are built from, so
 CI gates their shape: every record must carry the common envelope
@@ -10,21 +10,36 @@ or Infinity in a committed benchmark means a sweep silently diverged.
 Bench-specific checks:
 
   * ``kernel_bench``  — every cell needs the measured/parity/model
-    columns, and every ``parity`` entry must be within ``--tol`` of the
-    dense oracle (relative error; the columns are backend-independent,
-    so a committed file that fails this was generated from broken
-    kernels, whatever machine produced it).  Banded cells additionally
-    carry a ``band`` record (width K, analytic ``tail_bound``, parity
-    vs the windowed jnp oracle and vs the dense oracle); the
-    vs-oracle columns must be exact to ``--tol`` and the vs-dense
-    columns within ``tail_bound + --tol`` — the bound is precisely the
-    error the truncation is licensed to introduce.
+    columns, a ``dtype`` axis value, and a ``wall_clock`` label
+    ("measured" only on a TPU backend, "emulated" anywhere else — the
+    off-TPU interpret-mode numbers invert real orderings, see
+    EXPERIMENTS.md §Perf, so a committed file may never pass them off
+    as measured).  Parity entries must be within the dtype's tolerance
+    of the dense f32 oracle — ``--tol`` for float32 cells, the looser
+    DOCUMENTED ``--tol-bf16`` for bfloat16 cells (the columns are
+    backend-independent, so a committed file that fails this was
+    generated from broken kernels, whatever machine produced it).
+    float32 cells must carry all five impls; bfloat16 cells carry the
+    kernel impls only (the jnp tiers are the f32 reference).  Banded
+    cells additionally carry a ``band`` record (width K, analytic
+    ``tail_bound``, parity vs the windowed jnp oracle and vs the dense
+    oracle); the vs-oracle columns must be within the dtype tolerance
+    and the vs-dense columns within ``tail_bound + tol`` — the bound
+    is precisely the error the truncation is licensed to introduce.
+    Every dtype cell must emit the modeled-HBM column (uniform gate),
+    and the recorded backward pass counts must say 2 (the PR-5 merged
+    backward).
+  * ``autotune``      — the committed block-size table
+    (``src/repro/kernels/autotune_table.json``): every cell needs the
+    (tier, N, d, K, dtype, backend) key fields plus ``winner`` and the
+    per-candidate timings, the winner must be IN the recorded candidate
+    grid for its tier, and the winner's own timing must be present.
   * ``batched_bench --devices`` (BENCH_scaling.json) — cells need the
     sweep axes and timing columns.
 
 Usage (CI runs exactly this, see .github/workflows/ci.yml):
 
-    python tools/check_bench.py                 # validates all BENCH_*.json
+    python tools/check_bench.py                 # BENCH_*.json + autotune
     python tools/check_bench.py BENCH_kernels.json --tol 2e-3
 
 Exit code 0 = every file valid.  No third-party deps — runs anywhere.
@@ -35,24 +50,42 @@ import argparse
 import glob
 import json
 import math
+import os
 import sys
 
 ENVELOPE_KEYS = ("bench", "backend", "cells")
 
-KERNEL_CELL_KEYS = ("N", "d", "B", "fwd_s", "fwdgrad_s", "parity", "band",
-                    "model_hbm_mb", "model_fused_over_v1",
-                    "model_banded_over_fused", "passes")
-KERNEL_IMPLS = ("dense", "chunked", "kernel_v1", "fused", "banded")
+KERNEL_CELL_KEYS = ("N", "d", "B", "K", "dtype", "wall_clock", "fwd_s",
+                    "fwdgrad_s", "parity", "band", "model_hbm_mb",
+                    "model_blocks", "model_banded_over_fused", "passes")
+KERNEL_IMPLS_F32 = ("dense", "chunked", "kernel_v1", "fused", "banded")
+KERNEL_IMPLS_BF16 = ("fused", "banded")
 # Banded records: band width + its analytic dropped-mass bound + parity
-# against both the windowed jnp oracle (must be exact to --tol) and the
-# dense oracle (must be within tail_bound + --tol — the bound is what
+# against both the windowed jnp oracle (within the dtype tolerance) and
+# the dense oracle (within tail_bound + tolerance — the bound is what
 # licenses the truncation).
 BAND_KEYS = ("K", "tail_bound", "vs_oracle_y_relerr", "vs_oracle_c_relerr",
              "vs_oracle_dw_relerr", "vs_dense_y_relerr",
              "vs_dense_c_relerr", "vs_dense_dw_relerr")
+# The PR-5 merged backward: any committed record claiming more passes
+# was generated from stale kernels.
+EXPECTED_PASSES = {"fused_fwd": 2, "fused_bwd": 2,
+                   "banded_fwd": 2, "banded_bwd": 2}
 
 SCALING_CELL_KEYS = ("devices", "B", "S", "N", "vmap_s", "shard_s",
                      "tournament_s", "tournament_loss_gap")
+
+AUTOTUNE_CELL_KEYS = ("tier", "N", "d", "K", "dtype", "backend", "winner",
+                      "winner_s", "candidate_s")
+
+# The committed autotune table lives with the package so dispatch can
+# find it from any cwd; validate it alongside the BENCH_*.json glob.
+# Anchored to this script's location so running check_bench from any
+# cwd still validates it (the BENCH_*.json glob stays cwd-based — those
+# are cwd artifacts by convention).
+AUTOTUNE_TABLE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "src", "repro", "kernels", "autotune_table.json")
 
 
 def _walk_numbers(obj, path=""):
@@ -69,7 +102,124 @@ def _walk_numbers(obj, path=""):
             yield from _walk_numbers(v, f"{path}[{i}]")
 
 
-def check_file(path: str, tol: float) -> list[str]:
+def _check_kernel_cells(path, cells, tol, tol_bf16, errors):
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            continue
+        for key in KERNEL_CELL_KEYS:
+            if key not in cell:
+                errors.append(f"{path}: cells[{i}] missing '{key}'")
+        dtype = cell.get("dtype", "float32")
+        cell_tol = tol_bf16 if dtype == "bfloat16" else tol
+        impls = (KERNEL_IMPLS_BF16 if dtype == "bfloat16"
+                 else KERNEL_IMPLS_F32)
+        if cell.get("wall_clock") not in ("measured", "emulated"):
+            errors.append(
+                f"{path}: cells[{i}].wall_clock = "
+                f"{cell.get('wall_clock')!r} must be measured|emulated")
+        for col in ("fwd_s", "fwdgrad_s"):
+            for impl in impls:
+                if impl not in cell.get(col, {}):
+                    errors.append(
+                        f"{path}: cells[{i}].{col} missing '{impl}'")
+        model = cell.get("model_hbm_mb", {})
+        # f32 cells must also model the v1 baseline (the docs' fused-
+        # over-v1 tables are built from exactly these columns).
+        model_impls = (("fused", "banded", "kernel_v1")
+                       if dtype == "float32" else ("fused", "banded"))
+        for impl in model_impls:
+            if impl not in model:
+                errors.append(
+                    f"{path}: cells[{i}].model_hbm_mb missing '{impl}' "
+                    f"(the modeled-HBM column must exist for every "
+                    f"dtype cell)")
+        ratio_key = ("model_fused_over_v1" if dtype == "float32"
+                     else "model_f32_over_this")
+        if ratio_key not in cell:
+            errors.append(f"{path}: cells[{i}] missing '{ratio_key}'")
+        for name, val in cell.get("parity", {}).items():
+            if not isinstance(val, (int, float)) or val > cell_tol:
+                errors.append(
+                    f"{path}: cells[{i}].parity.{name} = {val} "
+                    f"exceeds {dtype} tol {cell_tol}")
+        band = cell.get("band", {})
+        if not isinstance(band, dict):
+            errors.append(f"{path}: cells[{i}].band is not an object")
+            band = {}
+        for key in BAND_KEYS:
+            if key not in band:
+                errors.append(f"{path}: cells[{i}].band missing '{key}'")
+        k_val = band.get("K")
+        if not isinstance(k_val, int) or k_val < 1:
+            errors.append(
+                f"{path}: cells[{i}].band.K = {k_val!r} must be a "
+                "positive int")
+        bound = band.get("tail_bound")
+        if not isinstance(bound, (int, float)) or bound < 0:
+            errors.append(
+                f"{path}: cells[{i}].band.tail_bound = {bound!r} "
+                "must be a non-negative number")
+            bound = 0.0
+        for name, val in band.items():
+            if name in ("K", "tail_bound"):
+                continue
+            lim = cell_tol + (bound if name.startswith("vs_dense") else 0.0)
+            if not isinstance(val, (int, float)) or val > lim:
+                errors.append(
+                    f"{path}: cells[{i}].band.{name} = {val} exceeds "
+                    f"{'tail bound + ' if name.startswith('vs_dense') else ''}"
+                    f"{dtype} tol {lim}")
+        passes = cell.get("passes", {})
+        for name, want in EXPECTED_PASSES.items():
+            got = passes.get(name)
+            if got != want:
+                errors.append(
+                    f"{path}: cells[{i}].passes.{name} = {got!r}, "
+                    f"expected {want} (3->2 merged backward)")
+
+
+def _check_autotune_cells(path, doc, cells, errors):
+    candidates = doc.get("candidates")
+    if not isinstance(candidates, dict):
+        errors.append(f"{path}: autotune table missing 'candidates'")
+        candidates = {}
+    # Normalize candidate grids to tuples for membership checks.
+    grids = {tier: [tuple(c) if isinstance(c, list) else (c,)
+                    for c in cands]
+             for tier, cands in candidates.items()
+             if isinstance(cands, list)}
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            continue
+        for key in AUTOTUNE_CELL_KEYS:
+            if key not in cell:
+                errors.append(f"{path}: cells[{i}] missing '{key}'")
+        tier = cell.get("tier")
+        winner = cell.get("winner")
+        if not isinstance(winner, list) or not winner:
+            errors.append(
+                f"{path}: cells[{i}].winner = {winner!r} must be a "
+                "non-empty list")
+            continue
+        win = tuple(winner)
+        grid = grids.get(tier)
+        if grid is None:
+            errors.append(
+                f"{path}: cells[{i}].tier = {tier!r} has no candidate "
+                "grid")
+        elif win not in grid:
+            errors.append(
+                f"{path}: cells[{i}] winner {winner} absent from the "
+                f"'{tier}' candidate grid {sorted(grid)}")
+        cand_s = cell.get("candidate_s", {})
+        label = "x".join(str(v) for v in winner)
+        if label not in cand_s:
+            errors.append(
+                f"{path}: cells[{i}].candidate_s missing the winner's "
+                f"own timing '{label}'")
+
+
+def check_file(path: str, tol: float, tol_bf16: float) -> list[str]:
     errors: list[str] = []
     try:
         with open(path) as f:
@@ -96,50 +246,9 @@ def check_file(path: str, tol: float) -> list[str]:
 
     bench = doc.get("bench", "")
     if bench == "kernel_bench":
-        for i, cell in enumerate(cells):
-            if not isinstance(cell, dict):
-                continue
-            for key in KERNEL_CELL_KEYS:
-                if key not in cell:
-                    errors.append(
-                        f"{path}: cells[{i}] missing '{key}'")
-            for col in ("fwd_s", "fwdgrad_s"):
-                for impl in KERNEL_IMPLS:
-                    if impl not in cell.get(col, {}):
-                        errors.append(
-                            f"{path}: cells[{i}].{col} missing '{impl}'")
-            for name, val in cell.get("parity", {}).items():
-                if not isinstance(val, (int, float)) or val > tol:
-                    errors.append(
-                        f"{path}: cells[{i}].parity.{name} = {val} "
-                        f"exceeds tol {tol}")
-            band = cell.get("band", {})
-            if not isinstance(band, dict):
-                errors.append(f"{path}: cells[{i}].band is not an object")
-                band = {}
-            for key in BAND_KEYS:
-                if key not in band:
-                    errors.append(f"{path}: cells[{i}].band missing '{key}'")
-            k_val = band.get("K")
-            if not isinstance(k_val, int) or k_val < 1:
-                errors.append(
-                    f"{path}: cells[{i}].band.K = {k_val!r} must be a "
-                    "positive int")
-            bound = band.get("tail_bound")
-            if not isinstance(bound, (int, float)) or bound < 0:
-                errors.append(
-                    f"{path}: cells[{i}].band.tail_bound = {bound!r} "
-                    "must be a non-negative number")
-                bound = 0.0
-            for name, val in band.items():
-                if name in ("K", "tail_bound"):
-                    continue
-                lim = tol + (bound if name.startswith("vs_dense") else 0.0)
-                if not isinstance(val, (int, float)) or val > lim:
-                    errors.append(
-                        f"{path}: cells[{i}].band.{name} = {val} exceeds "
-                        f"{'tail bound + ' if name.startswith('vs_dense') else ''}"
-                        f"tol {lim}")
+        _check_kernel_cells(path, cells, tol, tol_bf16, errors)
+    elif bench == "autotune":
+        _check_autotune_cells(path, doc, cells, errors)
     elif bench.startswith("batched_bench"):
         for i, cell in enumerate(cells):
             if not isinstance(cell, dict):
@@ -153,19 +262,28 @@ def check_file(path: str, tol: float) -> list[str]:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("files", nargs="*",
-                    help="BENCH_*.json files (default: glob the cwd)")
+                    help="BENCH_*.json / autotune table files (default: "
+                         "glob the cwd + the committed autotune table)")
     ap.add_argument("--tol", type=float, default=2e-3,
-                    help="max allowed parity error for kernel_bench")
+                    help="max allowed f32 parity error for kernel_bench")
+    ap.add_argument("--tol-bf16", type=float, default=2e-2,
+                    help="max allowed bfloat16 parity error — the "
+                         "documented bf16 envelope (EXPERIMENTS.md "
+                         "§Perf)")
     args = ap.parse_args(argv)
 
-    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    # The committed autotune table is ALWAYS in the default list — if it
+    # has gone missing, check_file reports it unreadable and CI fails,
+    # rather than the gate silently self-disabling.
+    files = args.files or (sorted(glob.glob("BENCH_*.json"))
+                           + [AUTOTUNE_TABLE])
     if not files:
         print("check_bench: no BENCH_*.json files found", file=sys.stderr)
         return 1
 
     all_errors: list[str] = []
     for path in files:
-        errs = check_file(path, args.tol)
+        errs = check_file(path, args.tol, args.tol_bf16)
         status = "FAIL" if errs else "ok"
         print(f"check_bench: {path}: {status}")
         all_errors.extend(errs)
