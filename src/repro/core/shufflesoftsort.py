@@ -37,6 +37,15 @@ top: anneal in rungs, cull the worst restarts at each boundary, spend
 the freed compute finishing only plausible seeds.  Scaling and
 cull-tradeoff measurements: EXPERIMENTS.md §Scaling.
 
+``run_round_segment`` exposes the same engines to continuous-batching
+servers (``repro.launch.serve.SortServer``): one scanned device call
+advances BS instances by ``seg_len`` rounds where each instance
+consumes its OWN slice of the tau schedule, so requests join and leave
+the annealing loop at round boundaries — the tournament's rung
+structure as a preemption point — without cohort barriers, and chained
+``orders``/``keys`` keep every instance bit-identical to an
+uninterrupted run.
+
 Orthogonally, ``cfg.band`` swaps the O(N^2) SoftSort apply for the
 O(N * K) banded tier once the anneal is cold enough: the schedule
 splits at a single dense->banded switch round (``_band_switch_round``,
@@ -361,6 +370,166 @@ def _run_segments(xs_t, orders, keys, taus, norms_t, *, start: int,
     return orders, keys, losses
 
 
+def _run_rounds_ragged_impl(xs, orders, keys, tau_rows, norms, *, hw,
+                            cfg: ShuffleSoftSortConfig, apply_fn):
+    """Per-instance-temperature variant of ``_run_rounds_impl``.
+
+    ``tau_rows`` is (T, BS): row t holds each instance's OWN outer-round
+    temperature for the t-th round of this segment, so instances at
+    DIFFERENT global positions in the anneal can share one scanned
+    device program — the primitive continuous-batching servers need to
+    let requests join and leave at round boundaries without waiting for
+    a whole cohort to finish.  The scan body is the same vmapped
+    ``_outer_round_impl`` the homogeneous engines run, with tau promoted
+    from a broadcast scalar to a vmapped per-instance input; the tau
+    math is elementwise f32, so per instance the computed values — and
+    hence the committed orders and PRNG stream — are bit-identical to a
+    homogeneous run at the same temperatures (asserted in
+    tests/test_serving.py across the jnp, kernel, and banded tiers).
+
+    Returns (orders (BS, N), keys (BS, 2), losses (T, BS)).
+    """
+    def step(carry, tau_b):
+        orders, keys = carry
+        pair = jax.vmap(jax.random.split)(keys)
+        keys, subs = pair[:, 0], pair[:, 1]
+
+        def one(x, order, key, norm, tau_r):
+            return _outer_round_impl(x, order, key, tau_r, norm,
+                                     hw=hw, cfg=cfg, apply_fn=apply_fn)
+
+        orders, losses = jax.vmap(one)(xs, orders, subs, norms, tau_b)
+        return (orders, keys), losses
+
+    (orders, keys), losses = jax.lax.scan(step, (orders, keys), tau_rows)
+    return orders, keys, losses
+
+
+_run_rounds_ragged = functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)(_run_rounds_ragged_impl)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "hw", "cfg", "apply_fn"),
+)
+def _run_rounds_ragged_sharded(xs, orders, keys, tau_rows, norms, *, mesh,
+                               hw, cfg: ShuffleSoftSortConfig, apply_fn):
+    """``_run_rounds_ragged_impl`` shard_mapped over the mesh "data"
+    axis: the instance axis (and each instance's tau column) splits
+    across devices, each shard runs the identical ragged program on its
+    slice.  Same check_rep=False rationale as ``_run_rounds_sharded``."""
+    body = functools.partial(_run_rounds_ragged_impl, hw=hw, cfg=cfg,
+                             apply_fn=apply_fn)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data"), P(None, "data"),
+                  P("data")),
+        out_specs=(P("data"), P("data"), P(None, "data")),
+        check_rep=False,
+    )(xs, orders, keys, tau_rows, norms)
+
+
+def rung_aligned_switch(cfg: ShuffleSoftSortConfig, n: int,
+                        seg_len: int) -> int:
+    """The dense->banded switch round snapped UP to the next multiple of
+    ``seg_len`` (capped at ``cfg.rounds``).
+
+    A continuous-batching scheduler preempts only at rung boundaries
+    (multiples of its segment length), so it cannot split a segment at a
+    mid-rung switch the way ``_run_segments`` does — instead the switch
+    is deferred to the next boundary: a few extra rounds run dense
+    (exact, just costlier) and no segment ever straddles regimes.  With
+    this snapped switch every instance whose progress is a boundary
+    multiple is unambiguously in ONE regime, which is what
+    ``run_round_segment`` requires of its callers.
+    """
+    switch = _band_switch_round(cfg, n)
+    if switch >= cfg.rounds:
+        return cfg.rounds
+    return min(-(-switch // seg_len) * seg_len, cfg.rounds)
+
+
+def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
+                      hw, cfg: ShuffleSoftSortConfig, mesh=None):
+    """Round-boundary join/leave hook for continuous-batching servers.
+
+    Runs ``seg_len`` outer rounds on BS flattened instances where
+    instance i consumes ITS OWN slice ``[progress[i], progress[i] +
+    seg_len)`` of the tau schedule — so a device batch can mix requests
+    that joined the annealing loop at different times, and a request
+    leaves (or is preempted, culled, or re-queued after a fault) at any
+    boundary without perturbing the survivors.  Chaining the returned
+    ``orders``/``keys`` through successive calls reproduces an
+    uninterrupted run bit-exactly, the same contract the tournament's
+    rung segments rely on.
+
+    Banded dispatch: all instances in one call must be in the same
+    apply regime relative to the RUNG-ALIGNED switch round
+    (``rung_aligned_switch``) — callers group instances by regime; a
+    mixed or straddling segment raises ``ValueError`` rather than
+    silently running the wrong apply.
+
+    Args:
+      xs:      (BS, N, d) instances.
+      orders:  (BS, N) int32 current permutations.
+      keys:    (BS, 2) uint32 current per-instance PRNG keys.
+      norms:   (BS,) float32 per-instance loss normalizations.
+      progress: (BS,) int — each instance's current global round.
+      seg_len: rounds to run (the scheduler's preemption quantum).
+      mesh:    optional 1-D "data" mesh; instance axis is shard_mapped
+        (tail padded with discarded copies of instance 0).
+
+    Returns:
+      (orders (BS, N), keys (BS, 2), losses (seg_len, BS)).
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    orders = jnp.asarray(orders, jnp.int32)
+    keys = jnp.asarray(keys)
+    norms = jnp.asarray(norms, jnp.float32)
+    seg_len = int(seg_len)
+    n = xs.shape[1]
+    p = np.asarray(progress, np.int64)
+    assert seg_len >= 1, seg_len
+    assert p.shape == (xs.shape[0],), (p.shape, xs.shape)
+    if (p < 0).any() or (p + seg_len > cfg.rounds).any():
+        raise ValueError(
+            f"segment [{p.min()}, {p.max() + seg_len}) escapes the "
+            f"{cfg.rounds}-round schedule")
+    band = resolve_band(cfg, n)
+    switch = rung_aligned_switch(cfg, n, seg_len)
+    if band is None or (p + seg_len <= switch).all():
+        apply_fn = _select_apply_fn(cfg)
+    elif (p >= switch).all():
+        apply_fn = _select_apply_fn(cfg, band)
+    else:
+        raise ValueError(
+            f"instances at rounds {sorted(set(p.tolist()))} mix apply "
+            f"regimes across the rung-aligned dense->banded switch "
+            f"{switch}; group instances by regime (rung_aligned_switch)")
+
+    bs = xs.shape[0]
+    if mesh is not None:
+        d_mesh = mesh.shape["data"]
+        pad = (-bs) % d_mesh
+        if pad:
+            xs, orders, keys, norms = _pad_instances(
+                (xs, orders, keys, norms), bs + pad)
+            p = np.concatenate([p, np.repeat(p[:1], pad)])
+    taus = _tau_schedule(cfg)
+    tau_rows = jnp.asarray(taus[p[:, None] + np.arange(seg_len)].T)
+    if mesh is None:
+        return _run_rounds_ragged(xs, orders, keys, tau_rows, norms,
+                                  hw=hw, cfg=cfg, apply_fn=apply_fn)
+    orders, keys, losses = _run_rounds_ragged_sharded(
+        xs, orders, keys, tau_rows, norms,
+        mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
+    return orders[:bs], keys[:bs], losses[:, :bs]
+
+
 def _tau_schedule(cfg: ShuffleSoftSortConfig) -> np.ndarray:
     """Outer-round temperatures, (R,) float32: geometric anneal from
     tau_start to tau_end.
@@ -374,8 +543,16 @@ def _tau_schedule(cfg: ShuffleSoftSortConfig) -> np.ndarray:
                       ** (np.arange(1, cfg.rounds + 1) / cfg.rounds))
 
 
+@functools.lru_cache(maxsize=None)
 def _select_apply_fn(cfg: ShuffleSoftSortConfig, band: int | None = None):
     """Resolve (``use_kernel``, ``band``) to a per-instance apply callable.
+
+    Memoized on the (frozen, hashable) config: the returned partial is
+    the STATIC ``apply_fn`` argument of every jitted engine, and jax
+    caches static callables by identity — without the cache each
+    public-API call would mint a fresh partial and recompile, which a
+    continuous-batching server dispatching one rung at a time cannot
+    afford (one recompile per rung instead of one per shape).
 
     ``use_kernel=False`` — streamed pure-jnp ``softsort_apply_chunked``
     (runs everywhere; the everywhere-runnable oracle twin of the kernel

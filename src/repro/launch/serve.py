@@ -12,11 +12,23 @@ Two workloads share this entrypoint:
       PYTHONPATH=src python -m repro.launch.serve \
           --arch qwen1.5-0.5b --preset tiny --requests 8 --max-new 32
 
-* ``--workload sort`` — grid-sorting serving.  ``SortServer`` runs a
-  request-coalescing queue: concurrent ``submit()`` calls (e.g. one per
-  user upload) are drained into one ``shuffle_soft_sort_batched`` device
-  call, so R requests cost one batched program of B = R instances
-  instead of R sequential ShuffleSoftSort runs.
+* ``--workload sort`` — grid-sorting serving.  ``SortServer`` is a
+  continuous-batching scheduler: concurrent ``submit()`` calls (e.g.
+  one per user upload) join the annealing loop at the next ROUND
+  boundary and leave at the boundary where they finish — the
+  tournament's rung structure as the preemption point — so a slow
+  large request no longer stalls the traffic coalesced behind it the
+  way the old fixed-boundary drain loop did.  Requests carry optional
+  deadlines and priorities; admission control sheds load past a
+  bounded queue depth as a typed ``QueueFull`` raised by ``submit()``
+  (backpressure, never a hang); mixed (N, d) traffic is batched per
+  shape bucket with batch sizes padded to powers of two so the compile
+  cache stays bounded; and a failed (or straggling) device dispatch
+  re-queues its requests from their last committed round boundary
+  under a retry budget with exponential backoff
+  (``runtime.fault_tolerance.RetryPolicy``) instead of failing every
+  coalesced future — semantics and measurements: EXPERIMENTS.md
+  §Serving, fault-injection proofs: tests/test_serving.py.
 
       PYTHONPATH=src python -m repro.launch.serve \
           --workload sort --requests 8 --sort-n 256 --rounds 30
@@ -38,7 +50,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import queue
 import threading
 import time
 from concurrent.futures import Future
@@ -60,160 +71,563 @@ from repro.models import (
 
 
 # --------------------------------------------------------------------------
-# Sort serving: request-coalescing queue over shuffle_soft_sort_batched.
+# Sort serving: continuous-batching scheduler over run_round_segment.
 # --------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class _SortRequest:
-    x: np.ndarray            # (N, d)
-    key: jax.Array           # PRNG key for this request
+class RequestRejected(RuntimeError):
+    """Base of every typed SortServer rejection.  A request the server
+    cannot serve resolves with a subclass of this — never a hang."""
+
+
+class QueueFull(RequestRejected):
+    """Admission control: the bounded queue is at depth.  Raised
+    synchronously by ``submit()`` so callers see backpressure at the
+    moment they offer load, not as a future that never resolves."""
+
+
+class DeadlineExceeded(RequestRejected):
+    """The request's deadline passed before its anneal finished; it was
+    shed at a round boundary (or at admission)."""
+
+
+class ServerClosed(RequestRejected):
+    """The server was closed while this request was queued/in flight."""
+
+
+class RequestFailed(RequestRejected):
+    """Device dispatch failed more than the retry budget allows;
+    ``__cause__`` carries the last device error."""
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass(eq=False)      # identity semantics: requests are
+class _SortRequest:                   # tracked in lists via `is`, and the
+                                      # generated field-wise __eq__ would
+                                      # compare numpy arrays
+    """One in-flight request: its problem, bookkeeping, and — once
+    admitted — its per-restart engine state.  The state committed at
+    each round boundary (orders/keys/losses) doubles as the restart
+    checkpoint: a failed dispatch re-queues the request and it resumes
+    from here, TrainSupervisor-style."""
+    x: np.ndarray                      # (N, d)
+    hw: tuple[int, int]
+    d: int
+    key: np.ndarray                    # (2,) uint32 base PRNG key
     future: Future
+    priority: int
+    seq: int
+    deadline: float | None             # absolute monotonic, None = none
+    submitted: float
+    progress: int = 0                  # global rounds completed
+    attempts: int = 0                  # failed dispatches so far
+    eligible_at: float = 0.0           # backoff gate for re-admission
+    norm: float = 0.0
+    orders: np.ndarray | None = None   # (S_live, N) int32
+    keys: np.ndarray | None = None     # (S_live, 2) uint32 chained keys
+    alive: np.ndarray | None = None    # (S_live,) original restart idx
+    losses: np.ndarray | None = None   # (S, R) f32, NaN where culled
+
+    @property
+    def n_live(self) -> int:
+        return 1 if self.alive is None else len(self.alive)
 
 
 class SortServer:
-    """Coalesces concurrent grid-sort requests into batched device calls.
+    """Continuous-batching scheduler for grid-sort requests.
 
-    All requests must share one problem signature (N = hw[0] * hw[1] and
-    feature dim d) — the fixed-shape contract that keeps XLA from
-    recompiling, mirroring the LM driver's static decode batch.  A
-    background worker blocks on the queue, drains up to ``max_batch``
-    requests that arrive within ``max_wait_ms`` of the first, stacks
-    them, and runs ONE ``shuffle_soft_sort_batched`` call (optionally
-    with ``n_restarts`` seeds per request).  Each future resolves to the
-    per-request ``(order, sorted, losses)`` triple of the winning
-    restart — bit-identical to a sequential ``shuffle_soft_sort`` call
-    with the same key when ``n_restarts == 1``.
+    Requests join and leave the annealing loop at ROUND boundaries: the
+    R-round schedule is split into ``sched_rungs`` equal rungs (the
+    tournament's rung structure as the preemption quantum) and each
+    scheduler tick advances every active instance by one rung via
+    ``core.shufflesoftsort.run_round_segment`` — one scanned device
+    call per (shape bucket, apply regime) in which instances at
+    DIFFERENT anneal positions coexist, each consuming its own slice of
+    the tau schedule.  A finished request leaves at its boundary while
+    its batchmates keep annealing, and a newly admitted one joins at
+    the next tick — no cohort barriers, so one slow large request no
+    longer stalls everything coalesced behind it.
 
-    Scale-out knobs (EXPERIMENTS.md §Scaling):
+    Semantics (per seed, ``n_restarts == 1``, no culling): results are
+    bit-identical to a sequential ``shuffle_soft_sort`` call with the
+    same key, whatever traffic pattern interleaved the rounds — the
+    per-instance tau promotion and chained keys/orders are exact
+    (tests/test_serving.py).  With ``cfg.band`` the dense->banded
+    switch snaps UP to the next rung boundary
+    (``core.shufflesoftsort.rung_aligned_switch``) so no segment
+    straddles regimes; a few extra rounds run dense, exactly.
 
-    * ``mesh`` — a 1-D "data" mesh (``repro.launch.mesh.make_sort_mesh``);
-      the coalesced batch's flattened requests x restarts grid is
-      shard_mapped across its devices.  Per-seed results are unchanged.
-    * ``tournament_rungs > 1`` (with ``n_restarts > 1``) — restarts run
-      as a successive-halving tournament instead of all-to-the-end, so
-      the same latency budget affords more seeds per request.
+    Production behaviors (EXPERIMENTS.md §Serving):
+
+    * **Deadlines / priorities** — ``submit(..., deadline_s=,
+      priority=)``; expired requests are shed at boundaries with a
+      typed ``DeadlineExceeded``; admission is priority-then-FIFO.
+    * **Backpressure** — at most ``queue_depth`` requests may wait for
+      admission; past that ``submit()`` raises ``QueueFull``.
+    * **Shape buckets** — mixed (N, d) traffic batches per ``(hw, d)``
+      signature, with per-call batch sizes padded to the next power of
+      two (capped at ``max_batch``), so compiled programs are bounded
+      by |signatures| x |regimes| x log2(max_batch), not by the traffic.
+    * **Fault tolerance** — a dispatch that raises re-queues its
+      requests from their last committed boundary under
+      ``retry: RetryPolicy`` (budget + exponential backoff); budget
+      exhaustion resolves the future with ``RequestFailed``.  Every
+      future resolves exactly once, result or typed rejection.
+    * **Straggler rerouting** — per-dispatch wall time, normalized per
+      instance-round, feeds a ``StragglerMonitor``; a flagged dispatch
+      halves the batch bucket cap (restored after a healthy streak) so
+      traffic reroutes into smaller batches around the slow path.
+    * **Reproducibility** — requests submitted without a key draw from
+      a server-owned PRNG stream seeded by ``seed``: same seed + same
+      submission order = bit-identical results, end to end.
+
+    Scale-out knobs (EXPERIMENTS.md §Scaling): ``mesh`` shard_maps every
+    segment's instance axis across a 1-D "data" mesh;
+    ``tournament_rungs > 1`` (with ``n_restarts > 1``) culls the worst
+    ``cull_fraction`` of each request's restarts at its interior rung
+    boundaries — successive halving, bit-identical survivors.
     """
 
     def __init__(self, hw, d, cfg=None, max_batch: int = 8,
                  max_wait_ms: float = 2.0, n_restarts: int = 1,
                  mesh=None, tournament_rungs: int = 1,
-                 cull_fraction: float = 0.5):
-        from repro.core.shufflesoftsort import ShuffleSoftSortConfig
+                 cull_fraction: float = 0.5, *,
+                 queue_depth: int = 64, max_active: int | None = None,
+                 sched_rungs: int | None = None, seed: int = 0,
+                 default_deadline_s: float | None = None,
+                 retry=None, straggler=None,
+                 straggler_recovery: int = 8,
+                 engine_fn=None, autostart: bool = True):
+        from repro.core.shufflesoftsort import (
+            ShuffleSoftSortConfig,
+            _rung_boundaries,
+            run_round_segment,
+        )
+        from repro.runtime.fault_tolerance import RetryPolicy
+        from repro.runtime.straggler import StragglerMonitor
+
         self.hw = tuple(hw)
         self.n = self.hw[0] * self.hw[1]
         self.d = d
         self.cfg = cfg or ShuffleSoftSortConfig()
-        self.max_batch = max_batch
+        self.max_batch = int(max_batch)
         self.max_wait_s = max_wait_ms / 1e3
-        self.n_restarts = n_restarts
+        self.n_restarts = int(n_restarts)
         self.mesh = mesh
         self.tournament_rungs = int(tournament_rungs)
         self.cull_fraction = float(cull_fraction)
-        self.stats = {"requests": 0, "batches": 0, "batch_sizes": []}
-        self._q: queue.Queue = queue.Queue()
-        self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._run, daemon=True)
-        self._worker.start()
+        self.queue_depth = int(queue_depth)
+        self.max_active = (2 * self.max_batch if max_active is None
+                           else int(max_active))
+        self.default_deadline_s = default_deadline_s
+        self.retry = retry or RetryPolicy()
+        self.straggler = straggler or StragglerMonitor()
+        self.straggler_recovery = int(straggler_recovery)
+        self._engine = engine_fn or run_round_segment
 
-    def submit(self, x: np.ndarray, key=None) -> Future:
+        rounds = self.cfg.rounds
+        tournament = self.tournament_rungs > 1 and self.n_restarts > 1
+        if sched_rungs is None:
+            sched_rungs = (self.tournament_rungs if tournament else
+                           next(k for k in (4, 3, 2, 1) if rounds % k == 0))
+        self.sched_rungs = int(sched_rungs)
+        if not 1 <= self.sched_rungs <= rounds or rounds % self.sched_rungs:
+            raise ValueError(
+                f"sched_rungs={self.sched_rungs} must divide "
+                f"cfg.rounds={rounds} (uniform preemption quantum)")
+        if tournament and (rounds % self.tournament_rungs
+                           or self.sched_rungs % self.tournament_rungs):
+            raise ValueError(
+                f"tournament_rungs={self.tournament_rungs} must divide "
+                f"cfg.rounds={rounds} and sched_rungs={self.sched_rungs} "
+                "so cull boundaries land on scheduler boundaries")
+        self.seg_len = rounds // self.sched_rungs
+        self._cull_edges = (
+            set(_rung_boundaries(rounds, self.tournament_rungs)[:-1])
+            if tournament else set())
+
+        self._rng = np.random.Generator(np.random.PCG64(seed))
+        self.stats = {
+            "requests": 0, "batches": 0, "batch_sizes": [],
+            "completed": 0, "failed": 0, "deadline_missed": 0,
+            "queue_rejected": 0, "retries": 0, "recoveries": 0,
+            "stragglers": 0, "culled": 0, "latencies_ms": [],
+            "compile_keys": set(),
+        }
+        self.events: list[dict] = []
+        self._cv = threading.Condition()
+        self._pending: list[_SortRequest] = []
+        self._active: list[_SortRequest] = []
+        self._stop = False
+        self._seq = 0
+        self._dispatch_idx = 0
+        self._bucket_cap = self.max_batch
+        self._healthy_streak = 0
+        self._switch_cache: dict[int, int] = {}
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._started = False
+        if autostart:
+            self.start()
+
+    def start(self):
+        """Start the scheduler thread (no-op if already running).
+        ``autostart=False`` + ``start()`` lets tests enqueue a batch of
+        requests and observe one deterministic admission pass."""
+        if not self._started:
+            self._started = True
+            self._worker.start()
+
+    # ---- client API ------------------------------------------------------
+
+    def submit(self, x: np.ndarray, key=None, *, hw=None,
+               priority: int = 0, deadline_s: float | None = None) -> Future:
         """Enqueue one (N, d) problem; returns a Future of
-        ``(order (N,), sorted (N, d), losses (R,))``."""
-        if self._stop.is_set():
-            raise RuntimeError("SortServer is closed")
+        ``(order (N,), sorted (N, d), losses (R,))``.
+
+        ``hw`` defaults to the server's construction signature; passing
+        a different grid (with a matching x) routes the request to its
+        own shape bucket.  ``priority`` — higher admits first.
+        ``deadline_s`` — relative seconds; past it the request is shed
+        with ``DeadlineExceeded``.  Missing ``key`` draws from the
+        server-owned seeded stream (reproducible per server seed).
+        Raises ``QueueFull`` / ``ServerClosed`` synchronously.
+        """
         x = np.asarray(x, np.float32)
-        assert x.shape == (self.n, self.d), (x.shape, (self.n, self.d))
-        if key is None:
-            key = jax.random.PRNGKey(np.random.randint(0, 2**31 - 1))
-        fut: Future = Future()
-        self._q.put(_SortRequest(x, key, fut))
+        req_hw = self.hw if hw is None else tuple(hw)
+        if x.ndim != 2 or x.shape[0] != req_hw[0] * req_hw[1]:
+            raise ValueError(
+                f"x shape {x.shape} does not fit grid {req_hw}")
+        if hw is None and x.shape != (self.n, self.d):
+            raise ValueError(
+                f"x shape {x.shape} != server signature "
+                f"{(self.n, self.d)}; pass hw= to use another bucket")
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        now = time.monotonic()
+        with self._cv:
+            if self._stop:
+                raise ServerClosed("SortServer is closed")
+            if len(self._pending) >= self.queue_depth:
+                self.stats["queue_rejected"] += 1
+                raise QueueFull(
+                    f"queue depth {self.queue_depth} reached; retry later")
+            if key is None:
+                key = jax.random.PRNGKey(
+                    int(self._rng.integers(0, 2**31 - 1)))
+            if jnp.issubdtype(jnp.asarray(key).dtype, jax.dtypes.prng_key):
+                key = jax.random.key_data(key)
+            fut: Future = Future()
+            req = _SortRequest(
+                x=x, hw=req_hw, d=x.shape[1],
+                key=np.asarray(key, np.uint32).reshape(2),
+                future=fut, priority=int(priority), seq=self._seq,
+                deadline=None if deadline_s is None else now + deadline_s,
+                submitted=now)
+            self._seq += 1
+            self.stats["requests"] += 1
+            self._pending.append(req)
+            self._cv.notify()
         return fut
 
     def close(self):
-        self._stop.set()
-        self._q.put(None)                    # wake the worker
-        self._worker.join(timeout=30)
+        """Stop the scheduler; every queued or in-flight future resolves
+        with ``ServerClosed`` (no caller blocks forever)."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._started:
+            self._worker.join(timeout=120)
+        self._reject_all(ServerClosed("SortServer closed"))
 
-    # ---- worker ----------------------------------------------------------
+    # ---- resolution bookkeeping (every future resolves exactly once) ----
 
-    def _drain(self):
-        """Block for the first request, then coalesce a batch."""
-        first = self._q.get()
-        if first is None:
-            return []
-        batch = [first]
-        deadline = time.monotonic() + self.max_wait_s
-        while len(batch) < self.max_batch:
-            timeout = deadline - time.monotonic()
-            try:
-                req = self._q.get(timeout=max(timeout, 0.0))
-            except queue.Empty:
-                break
-            if req is None:
-                break
-            batch.append(req)
-        return batch
+    def _resolve_ok(self, req: _SortRequest, result):
+        if req.future.done():       # pragma: no cover - defensive
+            return
+        self.stats["completed"] += 1
+        if req.attempts > 0:
+            self.stats["recoveries"] += 1
+        latency_ms = (time.monotonic() - req.submitted) * 1e3
+        self.stats["latencies_ms"].append(latency_ms)
+        self.events.append({"event": "complete", "seq": req.seq,
+                            "latency_ms": latency_ms,
+                            "attempts": req.attempts})
+        req.future.set_result(result)
 
-    def _dispatch(self, xs, keys):
-        """One coalesced device call: plain batched engine, or the
-        successive-halving tournament when configured.  Both honour
-        ``self.mesh``.  Returns per-request (order, sorted, losses)."""
-        from repro.core.shufflesoftsort import (
-            restart_tournament,
-            shuffle_soft_sort_batched,
-        )
-        if self.tournament_rungs > 1 and self.n_restarts > 1:
-            res = restart_tournament(
-                xs, self.hw, self.cfg, n_restarts=self.n_restarts,
-                keys=keys, cull_fraction=self.cull_fraction,
-                n_rungs=self.tournament_rungs, mesh=self.mesh)
-            losses = res.all_losses[
-                np.arange(xs.shape[0]), res.best_restart]
-        else:
-            res = shuffle_soft_sort_batched(
-                xs, self.hw, self.cfg, n_restarts=self.n_restarts,
-                keys=keys, mesh=self.mesh)
-            losses = res.losses
-        return res.order, res.sorted, losses
+    def _resolve_exc(self, req: _SortRequest, exc: Exception, counter: str):
+        if req.future.done():       # pragma: no cover - defensive
+            return
+        self.stats[counter] += 1
+        self.events.append({"event": counter, "seq": req.seq})
+        req.future.set_exception(exc)
+
+    def _reject_all(self, exc: Exception):
+        with self._cv:
+            doomed = self._pending + self._active
+            self._pending, self._active = [], []
+        for req in doomed:
+            if not req.future.done():
+                self._resolve_exc(req, exc, "failed")
+
+    # ---- scheduler -------------------------------------------------------
 
     def _run(self):
-        while not self._stop.is_set():
-            batch = self._drain()
-            if not batch:
-                continue
-            try:
-                xs = jnp.asarray(np.stack([r.x for r in batch]))
-                if self.n_restarts == 1:
-                    keys = jnp.stack([r.key for r in batch])[:, None]
-                else:
-                    # Distinct per-restart streams derived from each
-                    # request key (restart 0 keeps the raw key so the
-                    # single-restart result stays reproducible).
-                    keys = jnp.stack([
-                        jnp.concatenate(
-                            [r.key[None], jax.random.split(
-                                jax.random.fold_in(r.key, 1),
-                                self.n_restarts - 1)])
-                        for r in batch])
-                orders, sorteds, losses = self._dispatch(xs, keys)
-                self.stats["requests"] += len(batch)
-                self.stats["batches"] += 1
-                self.stats["batch_sizes"].append(len(batch))
-                for i, r in enumerate(batch):
-                    r.future.set_result(
-                        (orders[i], sorteds[i], losses[i]))
-            except Exception as e:      # pragma: no cover - defensive
-                for r in batch:
-                    if not r.future.done():
-                        r.future.set_exception(e)
-        # Shutdown: fail any request still queued so no caller blocks
-        # forever on a future the worker will never fill.
         while True:
+            with self._cv:
+                while (not self._stop and not self._pending
+                       and not self._active):
+                    self._cv.wait(timeout=0.5)
+                if self._stop:
+                    break
+                fresh_wake = not self._active
+            if fresh_wake and self.max_wait_s > 0:
+                time.sleep(self.max_wait_s)   # let a submit burst coalesce
             try:
-                req = self._q.get_nowait()
-            except queue.Empty:
-                break
-            if req is not None and not req.future.done():
-                req.future.set_exception(RuntimeError("SortServer closed"))
+                did_work = self._tick()
+            except Exception as e:  # pragma: no cover - defensive
+                # A scheduler bug must never strand futures: fail
+                # everything in flight (typed) and keep serving.
+                err = RequestFailed(f"scheduler error: {e!r}")
+                err.__cause__ = e
+                self._reject_all(err)
+                continue
+            if not did_work:
+                time.sleep(0.02)              # pending all in backoff
+        self._reject_all(ServerClosed("SortServer closed"))
+
+    def _admit(self, req: _SortRequest):
+        """First admission: derive restart keys + engine state.  Restart
+        0 keeps the raw key so the single-restart result reproduces a
+        sequential run; re-admissions after a fault keep their state."""
+        if req.orders is not None:
+            return
+        from repro.core.losses import mean_pairwise_distance
+        s, n = self.n_restarts, req.x.shape[0]
+        base = jnp.asarray(req.key)
+        if s == 1:
+            keys = base[None]
+        else:
+            keys = jnp.concatenate(
+                [base[None],
+                 jax.random.split(jax.random.fold_in(base, 1), s - 1)])
+        req.keys = np.asarray(keys, np.uint32).reshape(s, 2)
+        req.norm = float(np.float32(
+            mean_pairwise_distance(jnp.asarray(req.x))))
+        req.orders = np.tile(np.arange(n, dtype=np.int32), (s, 1))
+        req.alive = np.arange(s)
+        req.losses = np.full((s, self.cfg.rounds), np.nan, np.float32)
+        self.events.append({"event": "admit", "seq": req.seq})
+
+    def _regime(self, req: _SortRequest) -> str:
+        from repro.core.shufflesoftsort import (
+            resolve_band,
+            rung_aligned_switch,
+        )
+        n = req.x.shape[0]
+        if resolve_band(self.cfg, n) is None:
+            return "dense"
+        if n not in self._switch_cache:
+            self._switch_cache[n] = rung_aligned_switch(
+                self.cfg, n, self.seg_len)
+        return "banded" if req.progress >= self._switch_cache[n] else "dense"
+
+    def _tick(self) -> bool:
+        """One scheduler pass: shed expired, admit, dispatch one rung
+        per (shape bucket, regime) group, cull, finalize."""
+        now = time.monotonic()
+        admitted: list[_SortRequest] = []
+        with self._cv:
+            keep = []
+            for req in self._pending:
+                if req.deadline is not None and now > req.deadline:
+                    self._resolve_exc(
+                        req, DeadlineExceeded(
+                            f"deadline passed while queued (seq {req.seq})"),
+                        "deadline_missed")
+                else:
+                    keep.append(req)
+            keep.sort(key=lambda r: (-r.priority, r.seq))
+            active_inst = sum(r.n_live for r in self._active)
+            rest = []
+            for req in keep:
+                need = req.n_live
+                fits = (active_inst + need <= self.max_active
+                        or (active_inst == 0 and not admitted))
+                if now >= req.eligible_at and fits:
+                    admitted.append(req)
+                    active_inst += need
+                else:
+                    rest.append(req)
+            self._pending = rest
+        for req in admitted:
+            self._admit(req)
+        self._active.extend(admitted)
+        if not self._active:
+            return False
+
+        # shed expired active requests at the round boundary
+        still = []
+        for req in self._active:
+            if req.deadline is not None and now > req.deadline:
+                self._resolve_exc(
+                    req, DeadlineExceeded(
+                        f"deadline passed at round {req.progress} "
+                        f"(seq {req.seq})"),
+                    "deadline_missed")
+            else:
+                still.append(req)
+        self._active = still
+
+        groups: dict[tuple, list[_SortRequest]] = {}
+        for req in self._active:
+            groups.setdefault(((req.hw, req.d), self._regime(req)),
+                              []).append(req)
+        for (sig, regime), reqs in groups.items():
+            chunk: list[_SortRequest] = []
+            size = 0
+            for req in reqs:
+                if chunk and size + req.n_live > self._bucket_cap:
+                    self._dispatch(chunk, regime)
+                    chunk, size = [], 0
+                chunk.append(req)
+                size += req.n_live
+            if chunk:
+                self._dispatch(chunk, regime)
+        return True
+
+    def _dispatch(self, reqs: list[_SortRequest], regime: str):
+        """One coalesced device call advancing ``reqs`` by one rung."""
+        hw = reqs[0].hw
+        xs = np.concatenate(
+            [np.repeat(r.x[None], r.n_live, axis=0) for r in reqs])
+        orders = np.concatenate([r.orders for r in reqs])
+        keys = np.concatenate([r.keys for r in reqs])
+        norms = np.concatenate(
+            [np.full(r.n_live, r.norm, np.float32) for r in reqs])
+        progress = np.concatenate(
+            [np.full(r.n_live, r.progress, np.int64) for r in reqs])
+        bs = len(progress)
+        # pad to the next power of two (capped at max_batch when the
+        # chunk fits under it) so compiled programs stay bounded by
+        # |signatures| x |regimes| x log2(max_batch), not traffic
+        bucket = (min(_next_pow2(bs), self.max_batch)
+                  if bs <= self.max_batch else _next_pow2(bs))
+        if bucket > bs:
+            pad = bucket - bs
+            xs = np.concatenate([xs, np.repeat(xs[:1], pad, axis=0)])
+            orders = np.concatenate(
+                [orders, np.repeat(orders[:1], pad, axis=0)])
+            keys = np.concatenate([keys, np.repeat(keys[:1], pad, axis=0)])
+            norms = np.concatenate([norms, np.repeat(norms[:1], pad)])
+            progress = np.concatenate(
+                [progress, np.repeat(progress[:1], pad)])
+        self.stats["compile_keys"].add(
+            (hw, reqs[0].d, regime, bucket, self.seg_len))
+
+        t0 = time.perf_counter()
+        try:
+            o, k, l = self._engine(xs, orders, keys, norms, progress,
+                                   self.seg_len, hw=hw, cfg=self.cfg,
+                                   mesh=self.mesh)
+            o, k, l = np.asarray(o), np.asarray(k), np.asarray(l)
+        except Exception as e:
+            self._on_failure(reqs, e)
+            return
+        dt = time.perf_counter() - t0
+        self._record_timing(dt, self.seg_len * bucket)
+        self.stats["batches"] += 1
+        self.stats["batch_sizes"].append(bs)
+
+        off = 0
+        for req in reqs:
+            nl = req.n_live
+            req.orders = o[off:off + nl]
+            req.keys = k[off:off + nl]
+            req.losses[req.alive,
+                       req.progress:req.progress + self.seg_len] = (
+                l[:, off:off + nl].T)
+            req.progress += self.seg_len
+            off += nl
+            self._post_rung(req)
+
+    def _post_rung(self, req: _SortRequest):
+        """Rung-boundary bookkeeping: tournament cull, then finalize."""
+        from repro.core.shufflesoftsort import _tournament_cull
+        if req.progress in self._cull_edges and req.n_live > 1:
+            s_k = req.n_live
+            keep = max(1, int(np.ceil(s_k * (1.0 - self.cull_fraction))))
+            if keep < s_k:
+                final = req.losses[req.alive, req.progress - 1][None, :]
+                sel = _tournament_cull(final, keep)[0]
+                req.alive = req.alive[sel]
+                req.orders = req.orders[sel]
+                req.keys = req.keys[sel]
+                self.stats["culled"] += s_k - keep
+                self.events.append({"event": "cull", "seq": req.seq,
+                                    "kept": keep, "of": s_k})
+        if req.progress >= self.cfg.rounds:
+            final = req.losses[req.alive, -1]
+            win = int(np.argmin(final))
+            order = req.orders[win]
+            self._active.remove(req)
+            self._resolve_ok(
+                req, (order, req.x[order], req.losses[req.alive[win]]))
+
+    def _on_failure(self, reqs: list[_SortRequest], exc: Exception):
+        """TrainSupervisor-style restart semantics for a failed
+        dispatch: each request re-queues from its last committed round
+        boundary with exponential backoff, until its budget runs out."""
+        now = time.monotonic()
+        for req in reqs:
+            req.attempts += 1
+            self._active.remove(req)
+            if req.attempts > self.retry.max_retries:
+                self._resolve_exc(
+                    req,
+                    RequestFailed(
+                        f"dispatch failed {req.attempts} times "
+                        f"(budget {self.retry.max_retries}): {exc}"),
+                    "failed")
+                continue
+            backoff = self.retry.backoff(req.attempts)
+            req.eligible_at = now + backoff
+            self.stats["retries"] += 1
+            self.events.append({"event": "retry", "seq": req.seq,
+                                "attempt": req.attempts,
+                                "backoff_s": backoff,
+                                "error": str(exc)})
+            with self._cv:
+                self._pending.append(req)
+        # exception chains into RequestFailed via ``from`` semantics:
+        for req in reqs:
+            if req.future.done():
+                exc_set = req.future.exception()
+                if isinstance(exc_set, RequestFailed):
+                    exc_set.__cause__ = exc
+
+    def _record_timing(self, dt: float, instance_rounds: int):
+        """Feed the straggler monitor (per instance-round, so batch and
+        rung sizes don't masquerade as stragglers) and adapt the bucket
+        cap: flag -> halve (reroute traffic into smaller batches),
+        healthy streak -> restore toward max_batch."""
+        flagged = self.straggler.record(
+            self._dispatch_idx, dt / max(instance_rounds, 1))
+        self._dispatch_idx += 1
+        if flagged:
+            self.stats["stragglers"] += 1
+            self._bucket_cap = max(1, self._bucket_cap // 2)
+            self._healthy_streak = 0
+            self.events.append({"event": "straggler", "dt_s": dt,
+                                "bucket_cap": self._bucket_cap})
+        else:
+            self._healthy_streak += 1
+            if (self._healthy_streak >= self.straggler_recovery
+                    and self._bucket_cap < self.max_batch):
+                self._bucket_cap = min(self.max_batch,
+                                       self._bucket_cap * 2)
+                self._healthy_streak = 0
 
 
 def _parse_band(value):
@@ -228,19 +642,15 @@ def _parse_band(value):
 
 
 def serve_sorts(args):
-    """CLI driver: fire concurrent sort requests at a SortServer."""
+    """CLI driver: fire concurrent sort requests at a SortServer.
+    CLI validation (grid divisibility, dtype/kernel coupling) lives in
+    ``main()`` as argparse errors — survives ``python -O``, unlike the
+    bare asserts it replaced."""
     from repro.core.metrics import mean_neighbor_distance
     from repro.core.shufflesoftsort import ShuffleSoftSortConfig
     from repro.launch.mesh import make_sort_mesh
 
     hw = (args.sort_hw, args.sort_n // args.sort_hw)
-    assert hw[0] * hw[1] == args.sort_n, (args.sort_n, args.sort_hw)
-    # compute_dtype is a kernel-tier knob; without --use-kernel the
-    # chunked-jnp apply runs f32 regardless, so a bare --dtype bfloat16
-    # would silently do nothing — refuse instead.
-    assert args.dtype == "float32" or args.use_kernel, (
-        "--dtype bfloat16 requires --use-kernel (the jnp apply tier "
-        "has no bf16 mode)")
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
                                 chunk=min(256, args.sort_n),
                                 use_kernel=args.use_kernel,
@@ -251,7 +661,10 @@ def serve_sorts(args):
                         max_batch=args.max_batch, max_wait_ms=args.wait_ms,
                         n_restarts=args.restarts, mesh=mesh,
                         tournament_rungs=args.tournament_rungs,
-                        cull_fraction=args.cull_fraction)
+                        cull_fraction=args.cull_fraction,
+                        queue_depth=args.queue_depth,
+                        sched_rungs=args.sched_rungs or None,
+                        seed=args.seed)
     rng = np.random.RandomState(0)
     xs = rng.rand(args.requests, args.sort_n, args.sort_d).astype(np.float32)
 
@@ -267,12 +680,15 @@ def serve_sorts(args):
         for r, x in zip(results, xs))
     sps = args.requests / max(wall, 1e-9)
     sizes = server.stats["batch_sizes"]
+    lat = np.asarray(server.stats["latencies_ms"], np.float64)
+    p50 = float(np.percentile(lat, 50)) if lat.size else 0.0
+    p99 = float(np.percentile(lat, 99)) if lat.size else 0.0
     print(f"served {args.requests} sort requests in {wall:.2f}s "
           f"({sps:.2f} sorts/s) across {server.stats['batches']} device "
-          f"batches (sizes {sizes}); {improved}/{args.requests} layouts "
-          f"improved")
+          f"batches (sizes {sizes}); p50 {p50:.1f}ms p99 {p99:.1f}ms; "
+          f"{improved}/{args.requests} layouts improved")
     return {"sorts_per_s": sps, "batches": server.stats["batches"],
-            "improved": int(improved)}
+            "improved": int(improved), "p50_ms": p50, "p99_ms": p99}
 
 
 # --------------------------------------------------------------------------
@@ -318,9 +734,29 @@ def main(argv=None):
                          "or 'none' (default) for the dense apply; hot "
                          "early rounds stay dense until the tail bound "
                          "clears (EXPERIMENTS.md §Perf)")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="admission-control bound: submits past this many "
+                         "waiting requests raise QueueFull")
+    ap.add_argument("--sched-rungs", type=int, default=0,
+                    help="scheduler preemption quantum: split the round "
+                         "schedule into this many rungs (0 = auto)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="server-owned PRNG seed for requests submitted "
+                         "without a key (reproducible serving runs)")
     args = ap.parse_args(argv)
 
     if args.workload == "sort":
+        # CLI validation as argparse errors (not asserts: those vanish
+        # under ``python -O`` and print bare tracebacks).
+        if args.sort_hw <= 0 or args.sort_n % args.sort_hw != 0:
+            ap.error(f"--sort-hw {args.sort_hw} must be a positive "
+                     f"divisor of --sort-n {args.sort_n} (grid height)")
+        # compute_dtype is a kernel-tier knob; without --use-kernel the
+        # chunked-jnp apply runs f32 regardless, so a bare --dtype
+        # bfloat16 would silently do nothing — refuse instead.
+        if args.dtype != "float32" and not args.use_kernel:
+            ap.error("--dtype bfloat16 requires --use-kernel (the jnp "
+                     "apply tier has no bf16 mode)")
         return serve_sorts(args)
 
     cfg = reduced_config(get_config(args.arch), **PRESETS[args.preset])

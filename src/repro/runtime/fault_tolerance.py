@@ -1,16 +1,25 @@
-"""Training supervisor: checkpoint/restart fault tolerance + elastic
-re-meshing.
+"""Fault tolerance: checkpoint/restart supervision, retry policies, and
+deterministic chaos injection.
 
 On a real fleet the failure signal is a missing heartbeat or an XLA
-collective timeout; here the supervisor catches exceptions raised by the
-step function (tests inject them deterministically) and restores from
-the newest checkpoint.  The restore path accepts a different mesh than
-the one the checkpoint was written under — `CheckpointManager.restore`
-re-device_puts logical arrays with the new shardings, which is the whole
-elastic-scaling story at this layer.
+collective timeout; here failures surface as exceptions raised by a
+step/dispatch function (tests inject them deterministically via
+``FaultInjector``).  Two consumers share this module:
+
+* ``TrainSupervisor`` — the LM trainer's driver: catches step failures
+  and restores from the newest checkpoint.  The restore path accepts a
+  different mesh than the one the checkpoint was written under —
+  `CheckpointManager.restore` re-device_puts logical arrays with the
+  new shardings, which is the whole elastic-scaling story at this layer.
+* The sort-serving scheduler (``repro.launch.serve.SortServer``) — a
+  failed segment dispatch re-queues its requests from their last
+  committed round boundary (the request state IS the checkpoint) under
+  a ``RetryPolicy`` budget with exponential backoff, instead of failing
+  every coalesced future (EXPERIMENTS.md §Serving).
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import time
 from typing import Any, Callable, Optional
@@ -23,6 +32,68 @@ log = logging.getLogger("repro.runtime")
 
 class WorkerFailure(RuntimeError):
     """Simulated node failure (tests / chaos injection)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry budget + exponential backoff for failed dispatches.
+
+    ``max_retries`` is per unit of work (a training run's restarts, a
+    sort request's re-queues), not per process; exhausting it converts
+    the transient-failure path into a typed terminal error at the
+    caller.  ``backoff(attempt)`` is the delay before re-queueing after
+    the ``attempt``-th consecutive failure (1-based): base * mult^(a-1),
+    capped — the standard exponential schedule, deterministic so tests
+    can assert exact eligibility times.
+    """
+    max_retries: int = 2
+    backoff_base_s: float = 0.05
+    backoff_mult: float = 2.0
+    backoff_max_s: float = 2.0
+
+    def backoff(self, attempt: int) -> float:
+        if attempt < 1:
+            raise ValueError(f"attempt is 1-based, got {attempt}")
+        return min(self.backoff_base_s * self.backoff_mult ** (attempt - 1),
+                   self.backoff_max_s)
+
+
+class FaultInjector:
+    """Deterministic chaos harness around a dispatch callable.
+
+    Wraps ``engine_fn``; the i-th call (0-based) first sleeps
+    ``delay_calls[i]`` seconds if present (straggler injection), then
+    raises ``exc_type`` if ``i`` is in ``fail_calls`` (worker-failure
+    injection), else forwards to the engine.  Everything is counted
+    (``calls`` / ``faults`` / ``delays``) so tests and the serving
+    benchmark can assert exactly which dispatches were perturbed — the
+    sort-path analogue of the flaky step functions
+    ``tests/test_runtime.py`` feeds the TrainSupervisor.
+    """
+
+    def __init__(self, engine_fn: Callable, fail_calls=(),
+                 delay_calls: Optional[dict[int, float]] = None,
+                 exc_type: type = WorkerFailure,
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        self.engine_fn = engine_fn
+        self.fail_calls = set(fail_calls)
+        self.delay_calls = dict(delay_calls or {})
+        self.exc_type = exc_type
+        self.sleep_fn = sleep_fn
+        self.calls = 0
+        self.faults = 0
+        self.delays = 0
+
+    def __call__(self, *args, **kwargs):
+        i = self.calls
+        self.calls += 1
+        if i in self.delay_calls:
+            self.delays += 1
+            self.sleep_fn(self.delay_calls[i])
+        if i in self.fail_calls:
+            self.faults += 1
+            raise self.exc_type(f"injected fault at dispatch {i}")
+        return self.engine_fn(*args, **kwargs)
 
 
 class TrainSupervisor:

@@ -1,11 +1,19 @@
 """Straggler detection/mitigation.
 
 Per-step wall time feeds an EWMA mean/variance; a step slower than
-``mean + z * std`` (and at least ``min_ratio`` x mean) is flagged.  On a
-real fleet the flag feeds the scheduler (demote host to backup group,
-re-shard its data); in-process the mitigation hook is a callback the
-trainer can use to e.g. skip the global batch or rebalance grad
-accumulation — both are exercised in tests with injected delays.
+``mean + z * std`` (and at least ``min_ratio`` x mean) is flagged.
+Flagged steps never update the baseline, so one straggler cannot poison
+the statistics it is judged against.  On a real fleet the flag feeds
+the scheduler (demote host to backup group, re-shard its data); the two
+in-process consumers are the LM TrainSupervisor (history event +
+optional ``on_straggler`` callback) and the sort-serving scheduler
+(``repro.launch.serve.SortServer``), which feeds per-dispatch
+wall-clock normalized per instance-round and halves its batch bucket
+cap on a flag so one slow coalesced batch stops stalling the traffic
+behind it.  Detection, the warmup-only stream, a straggler on the very
+first post-warmup step, and the healthy-steps-only baseline update are
+exercised with injected delays in tests/test_runtime.py; the serving
+reroute in tests/test_serving.py.
 """
 from __future__ import annotations
 

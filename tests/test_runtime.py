@@ -160,6 +160,49 @@ def test_straggler_callback_fires():
     assert events == [10]
 
 
+def test_straggler_warmup_only_stream_never_flags():
+    """A stream that ends inside the warmup window primes the EWMA but
+    can never flag — even a wildly slow step is just more priming."""
+    mon = StragglerMonitor(z=3.0, min_ratio=1.5, warmup=5)
+    dts = [0.1, 0.1, 50.0, 0.1, 0.1]       # outlier inside warmup
+    assert [mon.record(i, dt) for i, dt in enumerate(dts)] == [False] * 5
+    assert mon.flagged == []
+    assert mon.count == 5
+    # warmup priming is a plain running mean over everything seen
+    np.testing.assert_allclose(mon.mean, np.mean(dts), rtol=1e-12)
+
+
+def test_straggler_first_post_warmup_step_can_flag():
+    """The very first step after warmup is already judged against the
+    primed baseline — no grace period beyond ``warmup``."""
+    mon = StragglerMonitor(z=3.0, min_ratio=1.5, warmup=3)
+    for i in range(3):
+        mon.record(i, 0.1)
+    assert mon.record(3, 5.0)              # step warmup+1, flagged
+    assert mon.flagged == [(3, 5.0)]
+    # and a healthy first post-warmup step does NOT flag
+    mon2 = StragglerMonitor(z=3.0, min_ratio=1.5, warmup=3)
+    for i in range(3):
+        mon2.record(i, 0.1)
+    assert not mon2.record(3, 0.1)
+
+
+def test_straggler_baseline_updates_from_healthy_steps_only():
+    """Flagged steps never enter the EWMA: after a burst of stragglers
+    the mean is exactly what the healthy-only stream would produce."""
+    mon = StragglerMonitor(z=3.0, min_ratio=1.5, alpha=0.05, warmup=3)
+    twin = StragglerMonitor(z=3.0, min_ratio=1.5, alpha=0.05, warmup=3)
+    healthy = [0.1, 0.1, 0.1, 0.11, 0.09, 0.1, 0.12, 0.1]
+    mixed = healthy[:4] + [2.0, 3.0, 2.5] + healthy[4:]
+    for i, dt in enumerate(mixed):
+        mon.record(i, dt)
+    for i, dt in enumerate(healthy):
+        twin.record(i, dt)
+    assert len(mon.flagged) == 3
+    assert mon.mean == twin.mean           # bit-identical, not approx
+    assert mon.var == twin.var
+
+
 # ------------------------------------------------------------ compression
 
 def test_int8_error_feedback_reduces_bias():

@@ -36,6 +36,15 @@ Bench-specific checks:
     grid for its tier, and the winner's own timing must be present.
   * ``batched_bench --devices`` (BENCH_scaling.json) — cells need the
     sweep axes and timing columns.
+  * ``serving_bench`` (BENCH_serving.json) — cells need the per-scenario
+    load axes and the tail-latency/robustness columns, the same
+    ``wall_clock`` measured-only-on-TPU labeling rule as kernel cells,
+    rates in [0, 1] with p50 <= p99, and the exactly-once accounting
+    identity ``completed + failed + deadline_missed + queue_rejected ==
+    requests`` — a committed serving row that leaks or double-counts a
+    request is a scheduler bug, not a measurement.  Fault-scenario rows
+    (``injected_faults > 0``) must additionally show the recovery
+    machinery engaging: ``retries + failed >= 1``.
 
 Usage (CI runs exactly this, see .github/workflows/ci.yml):
 
@@ -74,6 +83,13 @@ EXPECTED_PASSES = {"fused_fwd": 2, "fused_bwd": 2,
 
 SCALING_CELL_KEYS = ("devices", "B", "S", "N", "vmap_s", "shard_s",
                      "tournament_s", "tournament_loss_gap")
+
+SERVING_CELL_KEYS = ("scenario", "requests", "arrival_rate_hz",
+                     "wall_clock", "wall_s", "completed", "failed",
+                     "deadline_missed", "queue_rejected", "goodput_rps",
+                     "p50_ms", "p99_ms", "deadline_miss_rate", "retries",
+                     "recoveries", "stragglers", "batches", "mean_batch",
+                     "injected_faults", "injected_delays")
 
 AUTOTUNE_CELL_KEYS = ("tier", "N", "d", "K", "dtype", "backend", "winner",
                       "winner_s", "candidate_s")
@@ -178,6 +194,56 @@ def _check_kernel_cells(path, cells, tol, tol_bf16, errors):
                     f"expected {want} (3->2 merged backward)")
 
 
+def _check_serving_cells(path, doc, cells, errors):
+    backend = doc.get("backend")
+    for i, cell in enumerate(cells):
+        if not isinstance(cell, dict):
+            continue
+        for key in SERVING_CELL_KEYS:
+            if key not in cell:
+                errors.append(f"{path}: cells[{i}] missing '{key}'")
+        wc = cell.get("wall_clock")
+        if wc not in ("measured", "emulated"):
+            errors.append(
+                f"{path}: cells[{i}].wall_clock = {wc!r} must be "
+                "measured|emulated")
+        elif wc == "measured" and backend != "tpu":
+            errors.append(
+                f"{path}: cells[{i}].wall_clock = 'measured' on a "
+                f"{backend!r} backend — off-TPU serving latencies must "
+                "be labeled 'emulated'")
+        counts = {k: cell.get(k) for k in
+                  ("requests", "completed", "failed", "deadline_missed",
+                   "queue_rejected")}
+        if all(isinstance(v, int) and v >= 0 for v in counts.values()):
+            total = sum(v for k, v in counts.items() if k != "requests")
+            if total != counts["requests"]:
+                errors.append(
+                    f"{path}: cells[{i}] breaks exactly-once accounting: "
+                    f"completed+failed+deadline_missed+queue_rejected = "
+                    f"{total} != requests = {counts['requests']}")
+        else:
+            errors.append(
+                f"{path}: cells[{i}] outcome counters must be "
+                f"non-negative ints, got {counts}")
+        rate = cell.get("deadline_miss_rate")
+        if not isinstance(rate, (int, float)) or not 0.0 <= rate <= 1.0:
+            errors.append(
+                f"{path}: cells[{i}].deadline_miss_rate = {rate!r} "
+                "must be in [0, 1]")
+        p50, p99 = cell.get("p50_ms"), cell.get("p99_ms")
+        if (isinstance(p50, (int, float)) and isinstance(p99, (int, float))
+                and (p50 < 0 or p99 < p50)):
+            errors.append(
+                f"{path}: cells[{i}] latency order violated: "
+                f"0 <= p50 ({p50}) <= p99 ({p99})")
+        if (cell.get("injected_faults", 0) > 0
+                and cell.get("retries", 0) + cell.get("failed", 0) < 1):
+            errors.append(
+                f"{path}: cells[{i}] injected faults but neither retried "
+                "nor failed — the recovery path never engaged")
+
+
 def _check_autotune_cells(path, doc, cells, errors):
     candidates = doc.get("candidates")
     if not isinstance(candidates, dict):
@@ -249,6 +315,8 @@ def check_file(path: str, tol: float, tol_bf16: float) -> list[str]:
         _check_kernel_cells(path, cells, tol, tol_bf16, errors)
     elif bench == "autotune":
         _check_autotune_cells(path, doc, cells, errors)
+    elif bench == "serving_bench":
+        _check_serving_cells(path, doc, cells, errors)
     elif bench.startswith("batched_bench"):
         for i, cell in enumerate(cells):
             if not isinstance(cell, dict):
