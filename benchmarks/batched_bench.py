@@ -30,6 +30,17 @@ tournament's executed-rounds fraction.  The aggregate is written to
 ``BENCH_scaling.json``.  On a forced-host CPU the "devices" are slices
 of one physical socket, so treat the timings as shape/overhead signals;
 the quality columns (tournament loss vs full loss) are exact.
+
+Adaptive mode (EXPERIMENTS.md §Adaptive):
+
+    PYTHONPATH=src python -m benchmarks.batched_bench --adaptive
+
+compares the fixed schedule against ``schedule="adaptive"`` on a
+deliberately over-provisioned anneal (cold ``tau_end``, long budget —
+the serving norm) and merges ``"mode": "adaptive"`` rows into
+``BENCH_scaling.json`` recording rounds-saved fraction vs final-loss
+gap; ``tools/check_bench.py`` gates those rows (>= 20% saved at <= 1%
+gap).  The loss columns are backend-exact, like the tournament's.
 """
 from __future__ import annotations
 
@@ -252,6 +263,93 @@ def run_cull_sweep(args) -> list[dict]:
     return rows
 
 
+def bench_adaptive_cell(b: int, n: int, d: int, rounds: int,
+                        args) -> dict:
+    """Fixed vs adaptive schedule on one over-provisioned cell.
+
+    The schedule is deliberately conservative (cold ``tau_end``, long
+    round budget — the serving norm, where one config covers many
+    problem instances), so its tail is flat; the adaptive controller
+    converts the measured plateau into skipped rounds.  The row records
+    the two gated quantities: the fraction of schedule rounds the
+    controller saved and the final-loss gap it cost (both vs the fixed
+    engine on identical problems/keys — tools/check_bench.py enforces
+    saved >= 20% at a gap <= 1%).
+    """
+    hw = _square_hw(n)
+    xs = jax.random.uniform(jax.random.PRNGKey(0), (b, n, d))
+    keys = jax.random.split(jax.random.PRNGKey(1), b)
+    base = dict(rounds=rounds, inner_steps=4, chunk=min(n, 256),
+                tau_end=args.adaptive_tau_end)
+    fixed = ShuffleSoftSortConfig(**base)
+    adapt = ShuffleSoftSortConfig(
+        **base, schedule="adaptive", adapt_every=args.adapt_every,
+        patience=args.patience, plateau_rtol=args.plateau_rtol,
+        decay_rungs=args.decay_rungs)
+
+    rf = shuffle_soft_sort_batched(xs, hw, fixed, keys=keys)  # warmup
+    ra = shuffle_soft_sort_batched(xs, hw, adapt, keys=keys)
+
+    t0 = time.perf_counter()
+    rf = shuffle_soft_sort_batched(xs, hw, fixed, keys=keys)
+    t_fixed = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ra = shuffle_soft_sort_batched(xs, hw, adapt, keys=keys)
+    t_adapt = time.perf_counter() - t0
+
+    executed = ra.rounds_executed[:, 0]
+    fixed_loss = float(rf.losses[:, -1].mean())
+    adapt_loss = float(ra.losses[np.arange(b), executed - 1].mean())
+    return {
+        "mode": "adaptive",
+        "devices": 1, "B": b, "N": n, "rounds": rounds,
+        "tau_end": args.adaptive_tau_end,
+        "adapt_every": args.adapt_every, "patience": args.patience,
+        "plateau_rtol": args.plateau_rtol,
+        "decay_rungs": args.decay_rungs,
+        "fixed_s": t_fixed, "adaptive_s": t_adapt,
+        "fixed_final_loss": fixed_loss,
+        "adaptive_final_loss": adapt_loss,
+        "mean_rounds_executed": float(executed.mean()),
+        "rounds_saved_frac": float(1.0 - executed.sum() / (b * rounds)),
+        "final_loss_gap_pct": (adapt_loss - fixed_loss) / fixed_loss * 100,
+    }
+
+
+def run_adaptive_sweep(args) -> dict:
+    """Fixed-vs-adaptive rows, merged into the BENCH_scaling.json
+    artifact alongside the devices x B x S cells (adaptive rows carry
+    ``"mode": "adaptive"`` and replace any previous adaptive rows;
+    EXPERIMENTS.md §Adaptive is built from exactly these columns)."""
+    rounds = args.rounds or 80
+    rows = [bench_adaptive_cell(b, n, args.d, rounds, args)
+            for n in (args.adaptive_ns or (64, 256))
+            for b in (args.bs or (4,))]
+
+    cells, envelope = [], {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            prior = json.load(f)
+        envelope = {k: v for k, v in prior.items() if k != "cells"}
+        cells = [c for c in prior.get("cells", [])
+                 if c.get("mode") != "adaptive"]
+    envelope.setdefault("bench", "batched_bench --devices")
+    envelope["backend"] = jax.default_backend()
+    cells.extend(rows)
+    record = dict(envelope, cells=cells)
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"wrote {len(rows)} adaptive cells -> {args.out} "
+          f"({len(cells)} total)")
+    for r in rows:
+        print(f"  B={r['B']} N={r['N']} R={r['rounds']}: saved "
+              f"{r['rounds_saved_frac']:.1%} of rounds at "
+              f"{r['final_loss_gap_pct']:+.2f}% final-loss gap "
+              f"({r['mean_rounds_executed']:.1f}/{r['rounds']} rounds, "
+              f"{r['fixed_s']:.2f}s -> {r['adaptive_s']:.2f}s)")
+    return record
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -273,6 +371,18 @@ def main(argv=None):
     ap.add_argument("--cull-sweep", action="store_true",
                     help="sweep tournament cull fractions at fixed B x S "
                          "and report the quality/compute tradeoff")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="fixed-vs-adaptive schedule rows (rounds saved "
+                         "vs final-loss gap), merged into --out")
+    ap.add_argument("--adaptive-ns", type=int, nargs="+", default=None,
+                    help="N values for the adaptive sweep")
+    ap.add_argument("--adaptive-tau-end", type=float, default=0.02,
+                    help="conservative (cold) schedule end for the "
+                         "adaptive sweep — the over-provisioned regime")
+    ap.add_argument("--adapt-every", type=int, default=5)
+    ap.add_argument("--patience", type=int, default=1)
+    ap.add_argument("--plateau-rtol", type=float, default=0.02)
+    ap.add_argument("--decay-rungs", type=int, default=2)
     ap.add_argument("--scaling-worker", action="store_true",
                     help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
@@ -283,6 +393,8 @@ def main(argv=None):
         return rows
     if args.cull_sweep:
         return run_cull_sweep(args)
+    if args.adaptive:
+        return run_adaptive_sweep(args)
     if args.devices:
         return run_scaling_sweep(args)
 

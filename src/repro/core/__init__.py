@@ -17,11 +17,18 @@ from repro.core.losses import (  # noqa: F401
     grid_sorting_loss,
 )
 from repro.core.metrics import dpq, mean_neighbor_distance  # noqa: F401
+from repro.core.annealing import (  # noqa: F401
+    AdaptiveController,
+    RungDecision,
+    adaptive_seg_len,
+)
 from repro.core.shufflesoftsort import (  # noqa: F401
     BatchedSortResult,
     ShuffleSoftSortConfig,
     TournamentResult,
+    make_adaptive_controller,
     restart_tournament,
+    run_round_segment,
     shuffle_soft_sort,
     shuffle_soft_sort_batched,
     soft_sort_baseline,

@@ -106,6 +106,25 @@ class ShuffleSoftSortConfig:
     # (the N parameters), softmax stats, accumulators, and this file's
     # Adam math all stay f32 (EXPERIMENTS.md §Perf precision table).
     compute_dtype: str = "float32"
+    # Adaptive annealing (EXPERIMENTS.md §Adaptive).  "fixed" runs the
+    # precomputed R-round schedule to the end — byte-for-byte the
+    # behavior before the adaptive tier existed.  "adaptive" runs the
+    # SAME nominal schedule under core.annealing.AdaptiveController:
+    # when an instance's per-round loss EWMA improves by less than
+    # plateau_rtol (relative) for patience consecutive rungs, it jumps
+    # decay_rungs rungs ahead in the schedule (colder tau early; a jump
+    # past the end stops the instance at that boundary), and the
+    # dense->banded switch comes from the MEASURED band_tail_bound on
+    # the instance's own keys instead of the linear-init model.  All
+    # decisions are per-instance and host-side, so adaptive runs stay
+    # bit-identical per seed across every engine path.
+    schedule: str = "fixed"     # "fixed" | "adaptive"
+    adapt_every: int = 0        # decision quantum in rounds (0 = auto:
+                                # largest divisor of rounds <= rounds/8)
+    patience: int = 2           # plateau rungs before a tau jump
+    plateau_rtol: float = 1e-3  # relative EWMA improvement threshold
+    ewma_alpha: float = 0.5     # per-round loss EWMA smoothing
+    decay_rungs: int = 1        # rungs skipped per plateau fire
 
 
 def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
@@ -117,15 +136,15 @@ def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
         lambda_s=cfg.lambda_s, lambda_sigma=cfg.lambda_sigma)
 
 
-def _outer_round_impl(x, order, key, tau_r, norm, *, hw,
+def _outer_round_full(x, order, key, tau_r, norm, *, hw,
                       cfg: ShuffleSoftSortConfig, apply_fn):
-    """One un-jitted outer round for a single problem instance.
+    """``_outer_round_impl`` plus the round's final trained keys ``w``.
 
-    This is the unit the batched engine vmaps: every array argument is
-    per-instance ((N, d) / (N,) / PRNG key), so ``jax.vmap`` over a
-    leading batch axis gives B independent rounds — each with its own
-    shuffle, PRNG stream, and (implicitly, via the inner fori_loop
-    carry) its own Adam state.
+    The adaptive controller's measured dense->banded switch needs the
+    end-of-round ``w`` to evaluate the true tail bound; the fixed
+    engines wrap this and drop ``w`` (same trace — the extra output was
+    always computed as the fori_loop carry), so exposing it does not
+    perturb the fixed path.
     """
     n = x.shape[0]
     shuf = jax.random.permutation(key, n)
@@ -165,7 +184,22 @@ def _outer_round_impl(x, order, key, tau_r, norm, *, hw,
     #   new_grid[shuf[i]] = x_shuf[sort_idx[i]] = x_cur[shuf[sort_idx[i]]]
     sort_idx = jnp.argsort(w)          # == argmax(P_soft, -1) with repaired ties
     g = jnp.zeros(n, dtype=jnp.int32).at[shuf].set(shuf[sort_idx])
-    return order[g], loss
+    return order[g], loss, w
+
+
+def _outer_round_impl(x, order, key, tau_r, norm, *, hw,
+                      cfg: ShuffleSoftSortConfig, apply_fn):
+    """One un-jitted outer round for a single problem instance.
+
+    This is the unit the batched engine vmaps: every array argument is
+    per-instance ((N, d) / (N,) / PRNG key), so ``jax.vmap`` over a
+    leading batch axis gives B independent rounds — each with its own
+    shuffle, PRNG stream, and (implicitly, via the inner fori_loop
+    carry) its own Adam state.
+    """
+    order, loss, _ = _outer_round_full(x, order, key, tau_r, norm,
+                                       hw=hw, cfg=cfg, apply_fn=apply_fn)
+    return order, loss
 
 
 _outer_round = functools.partial(
@@ -433,6 +467,181 @@ def _run_rounds_ragged_sharded(xs, orders, keys, tau_rows, norms, *, mesh,
     )(xs, orders, keys, tau_rows, norms)
 
 
+def _run_rounds_ragged_w_impl(xs, orders, keys, tau_rows, norms, *, hw,
+                              cfg: ShuffleSoftSortConfig, apply_fn):
+    """``_run_rounds_ragged_impl`` that additionally returns the LAST
+    round's trained keys ``w`` per instance.
+
+    The adaptive controller evaluates the measured ``band_tail_bound``
+    on these at every rung boundary (the ws ride in the scan carry, so
+    only the final round's (BS, N) slab leaves the device).  The
+    orders/losses/keys math is the identical vmapped
+    ``_outer_round_full`` body, so values are bit-identical to the
+    plain ragged engine at the same temperatures.
+
+    Returns (orders (BS, N), keys (BS, 2), losses (T, BS), ws (BS, N)).
+    """
+    def step(carry, tau_b):
+        orders, keys, _ = carry
+        pair = jax.vmap(jax.random.split)(keys)
+        keys, subs = pair[:, 0], pair[:, 1]
+
+        def one(x, order, key, norm, tau_r):
+            return _outer_round_full(x, order, key, tau_r, norm,
+                                     hw=hw, cfg=cfg, apply_fn=apply_fn)
+
+        orders, losses, ws = jax.vmap(one)(xs, orders, subs, norms, tau_b)
+        return (orders, keys, ws), losses
+
+    ws0 = jnp.zeros(xs.shape[:2], jnp.float32)
+    (orders, keys, ws), losses = jax.lax.scan(
+        step, (orders, keys, ws0), tau_rows)
+    return orders, keys, losses, ws
+
+
+_run_rounds_ragged_w = functools.partial(
+    jax.jit,
+    static_argnames=("hw", "cfg", "apply_fn"),
+    donate_argnums=(1,),
+)(_run_rounds_ragged_w_impl)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "hw", "cfg", "apply_fn"),
+)
+def _run_rounds_ragged_w_sharded(xs, orders, keys, tau_rows, norms, *,
+                                 mesh, hw, cfg: ShuffleSoftSortConfig,
+                                 apply_fn):
+    """``_run_rounds_ragged_w_impl`` shard_mapped over the mesh "data"
+    axis.  Same check_rep=False rationale as ``_run_rounds_sharded``."""
+    body = functools.partial(_run_rounds_ragged_w_impl, hw=hw, cfg=cfg,
+                             apply_fn=apply_fn)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data"), P("data"), P("data"), P(None, "data"),
+                  P("data")),
+        out_specs=(P("data"), P("data"), P(None, "data"), P("data")),
+        check_rep=False,
+    )(xs, orders, keys, tau_rows, norms)
+
+
+def _ragged_w_run(xs_t, orders, keys, tau_rows, norms_t, *, hw, cfg,
+                  apply_fn, mesh):
+    """Dispatch one ragged-with-w segment to the vmap or shard_map
+    engine, padding/unpadding the instance axis (and each padded
+    instance's tau column) to the mesh size.
+
+    Returns (orders (BS, N), keys (BS, 2), losses (T, BS), ws (BS, N)).
+    """
+    tau_rows = jnp.asarray(tau_rows)
+    if mesh is None:
+        return _run_rounds_ragged_w(xs_t, orders, keys, tau_rows, norms_t,
+                                    hw=hw, cfg=cfg, apply_fn=apply_fn)
+    d_mesh = mesh.shape["data"]
+    bs = xs_t.shape[0]
+    pad = (-bs) % d_mesh
+    if pad:
+        xs_t, orders, keys, norms_t = _pad_instances(
+            (xs_t, orders, keys, norms_t), bs + pad)
+        tau_rows = jnp.concatenate(
+            [tau_rows, jnp.repeat(tau_rows[:, :1], pad, axis=1)], axis=1)
+    o, k, l, w = _run_rounds_ragged_w_sharded(
+        xs_t, orders, keys, tau_rows, norms_t,
+        mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
+    if pad:
+        o, k, l, w = o[:bs], k[:bs], l[:, :bs], w[:bs]
+    return o, k, l, w
+
+
+def _check_schedule(cfg: ShuffleSoftSortConfig) -> None:
+    if cfg.schedule not in ("fixed", "adaptive"):
+        raise ValueError(
+            f"cfg.schedule={cfg.schedule!r} must be 'fixed' or 'adaptive'")
+
+
+def make_adaptive_controller(cfg: ShuffleSoftSortConfig, n_instances: int,
+                             n: int, seg_len: int | None = None):
+    """Build a ``core.annealing.AdaptiveController`` wired to this
+    config's tau schedule and resolved band half-width for problem size
+    ``n``.  ``seg_len`` overrides the decision quantum (it must divide
+    ``cfg.rounds``) — ``SortServer`` passes its own rung length so
+    controller boundaries land exactly on scheduler boundaries."""
+    from repro.core.annealing import AdaptiveController, adaptive_seg_len
+    return AdaptiveController(
+        cfg, n_instances, taus=_tau_schedule(cfg),
+        band=resolve_band(cfg, n),
+        seg_len=adaptive_seg_len(cfg) if seg_len is None else int(seg_len))
+
+
+def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
+                  cfg: ShuffleSoftSortConfig, mesh, controller,
+                  boundary_hook=None):
+    """Host-side adaptive decision loop around the ragged engines.
+
+    Each iteration advances every live instance by one ``seg_len`` rung
+    — live instances are grouped by apply regime (dense vs banded, per
+    the controller's MEASURED switch state) and each group runs as one
+    ragged dispatch consuming its instances' own schedule slices; the
+    controller then observes the rung's losses and end-of-rung keys and
+    decides jumps / stops / switches for the next rung.  Stopped (or
+    culled) instances simply leave the dispatch groups — their PRNG
+    streams are per-instance, so survivors are unperturbed.
+
+    ``boundary_hook(step, controller, losses)`` runs after each
+    boundary's observe — the tournament culls from it.
+
+    Returns (orders (BS, N) device, keys (BS, 2) device,
+    losses (BS, R) np.float32 — NaN at never-executed rounds,
+    device_rounds — instance-rounds spent, mesh padding included).
+    """
+    ctrl = controller
+    seg = ctrl.seg_len
+    bs, n = xs_t.shape[0], xs_t.shape[1]
+    dense_fn = _select_apply_fn(cfg)
+    band_fn = (dense_fn if ctrl.band is None
+               else _select_apply_fn(cfg, ctrl.band))
+    losses_mat = np.full((bs, cfg.rounds), np.nan, np.float32)
+    d_mesh = 1 if mesh is None else mesh.shape["data"]
+    device_rounds = 0
+    step = 0
+    while True:
+        live = ctrl.live_indices()
+        if live.size == 0:
+            break
+        # All live instances have executed exactly step * seg rounds —
+        # stopped instances never rejoin, so executed stays uniform.
+        exec0 = step * seg
+        seg_losses = np.empty((live.size, seg), np.float32)
+        ws_live = np.empty((live.size, n), np.float32)
+        banded_mask = ctrl.banded[live]
+        for is_banded in (False, True):
+            sel = np.flatnonzero(banded_mask == is_banded)
+            if sel.size == 0:
+                continue
+            gidx = live[sel]
+            rows = jnp.asarray(gidx)
+            o, k2, l, w = _ragged_w_run(
+                jnp.take(xs_t, rows, axis=0),
+                jnp.take(orders, rows, axis=0),
+                jnp.take(keys, rows, axis=0),
+                ctrl.tau_rows(gidx),
+                jnp.take(norms_t, rows, axis=0),
+                hw=hw, cfg=cfg,
+                apply_fn=band_fn if is_banded else dense_fn, mesh=mesh)
+            orders = orders.at[rows].set(o)
+            keys = keys.at[rows].set(k2)
+            seg_losses[sel] = np.asarray(l).T
+            ws_live[sel] = np.asarray(w)
+            device_rounds += seg * (-(-gidx.size // d_mesh) * d_mesh)
+        losses_mat[live, exec0:exec0 + seg] = seg_losses
+        ctrl.observe(live, seg_losses, ws_live)
+        if boundary_hook is not None:
+            boundary_hook(step + 1, ctrl, losses_mat)
+        step += 1
+    return orders, keys, losses_mat, device_rounds
+
+
 def rung_aligned_switch(cfg: ShuffleSoftSortConfig, n: int,
                         seg_len: int) -> int:
     """The dense->banded switch round snapped UP to the next multiple of
@@ -454,7 +663,8 @@ def rung_aligned_switch(cfg: ShuffleSoftSortConfig, n: int,
 
 
 def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
-                      hw, cfg: ShuffleSoftSortConfig, mesh=None):
+                      hw, cfg: ShuffleSoftSortConfig, mesh=None,
+                      regime: str | None = None, with_w: bool = False):
     """Round-boundary join/leave hook for continuous-batching servers.
 
     Runs ``seg_len`` outer rounds on BS flattened instances where
@@ -471,7 +681,12 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
     apply regime relative to the RUNG-ALIGNED switch round
     (``rung_aligned_switch``) — callers group instances by regime; a
     mixed or straddling segment raises ``ValueError`` rather than
-    silently running the wrong apply.
+    silently running the wrong apply.  An adaptive scheduler that
+    decides regimes from the MEASURED tail bound instead passes
+    ``regime="dense"`` / ``"banded"`` explicitly, which bypasses the
+    model-based check (the caller owns the grouping); ``with_w=True``
+    additionally returns each instance's end-of-segment trained keys —
+    the observation ``core.annealing.AdaptiveController`` consumes.
 
     Args:
       xs:      (BS, N, d) instances.
@@ -482,9 +697,15 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
       seg_len: rounds to run (the scheduler's preemption quantum).
       mesh:    optional 1-D "data" mesh; instance axis is shard_mapped
         (tail padded with discarded copies of instance 0).
+      regime:  None (default) infers the apply regime from the
+        model-based rung-aligned switch and validates the batch against
+        it; "dense" / "banded" selects the apply explicitly (adaptive
+        schedulers own the grouping).
+      with_w:  also return the end-of-segment trained keys.
 
     Returns:
-      (orders (BS, N), keys (BS, 2), losses (seg_len, BS)).
+      (orders (BS, N), keys (BS, 2), losses (seg_len, BS)) — plus
+      ``ws (BS, N)`` as a fourth element when ``with_w=True``.
     """
     xs = jnp.asarray(xs, jnp.float32)
     orders = jnp.asarray(orders, jnp.int32)
@@ -500,16 +721,27 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
             f"segment [{p.min()}, {p.max() + seg_len}) escapes the "
             f"{cfg.rounds}-round schedule")
     band = resolve_band(cfg, n)
-    switch = rung_aligned_switch(cfg, n, seg_len)
-    if band is None or (p + seg_len <= switch).all():
-        apply_fn = _select_apply_fn(cfg)
-    elif (p >= switch).all():
-        apply_fn = _select_apply_fn(cfg, band)
+    if regime is not None:
+        if regime not in ("dense", "banded"):
+            raise ValueError(f"regime={regime!r} must be 'dense' or "
+                             "'banded'")
+        if regime == "banded" and band is None:
+            raise ValueError("regime='banded' requires a resolvable "
+                             "cfg.band for this problem size")
+        apply_fn = (_select_apply_fn(cfg, band) if regime == "banded"
+                    else _select_apply_fn(cfg))
     else:
-        raise ValueError(
-            f"instances at rounds {sorted(set(p.tolist()))} mix apply "
-            f"regimes across the rung-aligned dense->banded switch "
-            f"{switch}; group instances by regime (rung_aligned_switch)")
+        switch = rung_aligned_switch(cfg, n, seg_len)
+        if band is None or (p + seg_len <= switch).all():
+            apply_fn = _select_apply_fn(cfg)
+        elif (p >= switch).all():
+            apply_fn = _select_apply_fn(cfg, band)
+        else:
+            raise ValueError(
+                f"instances at rounds {sorted(set(p.tolist()))} mix apply "
+                f"regimes across the rung-aligned dense->banded switch "
+                f"{switch}; group instances by regime "
+                f"(rung_aligned_switch)")
 
     bs = xs.shape[0]
     if mesh is not None:
@@ -521,6 +753,14 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
             p = np.concatenate([p, np.repeat(p[:1], pad)])
     taus = _tau_schedule(cfg)
     tau_rows = jnp.asarray(taus[p[:, None] + np.arange(seg_len)].T)
+    if with_w:
+        if mesh is None:
+            return _run_rounds_ragged_w(xs, orders, keys, tau_rows, norms,
+                                        hw=hw, cfg=cfg, apply_fn=apply_fn)
+        orders, keys, losses, ws = _run_rounds_ragged_w_sharded(
+            xs, orders, keys, tau_rows, norms,
+            mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
+        return orders[:bs], keys[:bs], losses[:, :bs], ws[:bs]
     if mesh is None:
         return _run_rounds_ragged(xs, orders, keys, tau_rows, norms,
                                   hw=hw, cfg=cfg, apply_fn=apply_fn)
@@ -671,9 +911,28 @@ def shuffle_soft_sort(
     For many problems or random restarts at once, use
     ``shuffle_soft_sort_batched`` — per-seed bit-identical to this
     function.
+
+    ``cfg.schedule="adaptive"`` (EXPERIMENTS.md §Adaptive) runs the
+    same schedule under the plateau controller — the run may stop at a
+    converged rung boundary, so ``losses`` holds only the executed
+    rounds.  The controller observes at rung boundaries, which is
+    incompatible with the per-round ``callback`` stream.
     """
+    _check_schedule(cfg)
     if key is None:
         key = jax.random.PRNGKey(0)
+    if cfg.schedule == "adaptive":
+        if callback is not None:
+            raise ValueError(
+                "callback streaming is not supported with "
+                "schedule='adaptive' (decisions happen at rung "
+                "boundaries, not per round)")
+        res = shuffle_soft_sort_batched(
+            jnp.asarray(x, jnp.float32)[None], hw, cfg,
+            n_restarts=1, keys=jnp.asarray(key)[None])
+        executed = int(res.rounds_executed[0, 0])
+        return (res.order[0], res.sorted[0],
+                [float(v) for v in res.losses[0][:executed]])
     n = x.shape[0]
     assert n == hw[0] * hw[1], (n, hw)
     x = jnp.asarray(x, jnp.float32)
@@ -756,6 +1015,11 @@ class BatchedSortResult:
     best_restart: np.ndarray   # (B,) int — argmin_s all_losses[:, s, -1]
     all_orders: np.ndarray     # (B, S, N) int32 — every restart's permutation
     all_losses: np.ndarray     # (B, S, R) — every restart's loss trace
+    # schedule="adaptive" only: rounds each restart actually executed
+    # (None on the fixed schedule; loss traces are NaN past the stop,
+    # and ``best_restart`` compares LAST-EXECUTED losses instead of
+    # round R-1 losses).
+    rounds_executed: np.ndarray | None = None   # (B, S) int64
 
 
 def shuffle_soft_sort_batched(
@@ -809,12 +1073,43 @@ def shuffle_soft_sort_batched(
     Returns:
       ``BatchedSortResult`` — see its field docs.
     """
+    _check_schedule(cfg)
     if mesh is not None and callback is not None:
         raise ValueError("callback streaming is not supported on the "
                          "sharded path; use mesh=None")
     xs, b, s, n, keys, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
     bs = b * s
+    if cfg.schedule == "adaptive":
+        if callback is not None:
+            raise ValueError(
+                "callback streaming is not supported with "
+                "schedule='adaptive' (decisions happen at rung "
+                "boundaries, not per round)")
+        ctrl = make_adaptive_controller(cfg, bs, n)
+        orders, _, losses_bs, _ = _run_adaptive(
+            xs_t, orders, keys, norms_t, hw=hw, cfg=cfg, mesh=mesh,
+            controller=ctrl)
+        all_losses = losses_bs.reshape(b, s, cfg.rounds)
+        all_orders = np.asarray(orders).reshape(b, s, n)
+        executed = ctrl.executed.reshape(b, s)
+        # Winner by LAST-EXECUTED loss (the adaptive analogue of the
+        # fixed path's round-(R-1) loss); host argmin on every path —
+        # the device argmin shortcut reads round R-1, which an early
+        # stop leaves NaN.
+        final = losses_bs[np.arange(bs), ctrl.executed - 1].reshape(b, s)
+        best = np.argmin(final, axis=1)
+        order = all_orders[np.arange(b), best]
+        xs_np = np.asarray(xs)
+        return BatchedSortResult(
+            order=order,
+            sorted=np.take_along_axis(xs_np, order[:, :, None], axis=1),
+            losses=all_losses[np.arange(b), best],
+            best_restart=best,
+            all_orders=all_orders,
+            all_losses=all_losses,
+            rounds_executed=executed,
+        )
     dense_fn = _select_apply_fn(cfg)
     band = resolve_band(cfg, n)
     switch = _band_switch_round(cfg, n)
@@ -929,6 +1224,74 @@ def _tournament_cull(final_losses: np.ndarray, keep: int) -> np.ndarray:
     return sel
 
 
+def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
+                                 orders, *, hw, cfg, cull_fraction,
+                                 n_rungs, mesh) -> TournamentResult:
+    """Adaptive-schedule tournament: the shared ``_run_adaptive`` loop
+    with a cull hook at the rung edges.
+
+    Edges are expressed in CONTROLLER steps (``_rung_boundaries`` over
+    the R / seg_len decision points), so culls land on the same
+    boundaries the plateau controller observes at.  Culling ranks every
+    not-yet-culled restart by its LAST-EXECUTED loss — an early-stopped
+    restart keeps competing with its final loss (it stopped because it
+    converged, not because it lost), and a culled restart just leaves
+    the winner set; either way the per-instance PRNG streams of the
+    survivors never see a perturbation.
+    """
+    ctrl = make_adaptive_controller(cfg, b * s, n)
+    n_steps = cfg.rounds // ctrl.seg_len
+    edges = _rung_boundaries(n_steps, min(n_rungs, n_steps))
+    interior = set(edges[:-1])
+    edge_set = set(edges)
+    alive_box = {"alive": np.tile(np.arange(s), (b, 1))}   # (B, S_k)
+    survivors_log: list[np.ndarray] = []
+
+    def hook(step, ctrl_, losses_mat):
+        if step not in edge_set:
+            return
+        alive = alive_box["alive"]
+        s_k = alive.shape[1]
+        keep = max(1, int(np.ceil(s_k * (1.0 - cull_fraction))))
+        if step in interior and keep < s_k:
+            rows = np.arange(b)[:, None] * s + alive     # flattened rows
+            last = losses_mat[rows, ctrl_.executed[rows] - 1]
+            sel = _tournament_cull(last, keep)           # (B, keep)
+            kept_mask = np.zeros((b, s_k), bool)
+            np.put_along_axis(kept_mask, sel, True, axis=1)
+            ctrl_.mark_culled(rows[~kept_mask])
+            alive = np.take_along_axis(alive, sel, axis=1)
+            alive_box["alive"] = alive
+        survivors_log.append(alive.copy())
+
+    orders_f, _, losses_mat, device_rounds = _run_adaptive(
+        xs_t, orders, keys_fl, norms_t, hw=hw, cfg=cfg, mesh=mesh,
+        controller=ctrl, boundary_hook=hook)
+    # If every restart stopped before a late edge, its hook never fired;
+    # the live set was already final, so log it for those rungs too.
+    alive = alive_box["alive"]
+    while len(survivors_log) < len(edges):
+        survivors_log.append(alive.copy())
+
+    xs_np = np.asarray(xs)
+    rows = np.arange(b)[:, None] * s + alive              # (B, S_fin)
+    final = losses_mat[rows, ctrl.executed[rows] - 1]
+    win = np.argmin(final, axis=1)
+    best_restart = alive[np.arange(b), win]
+    order = np.asarray(orders_f).reshape(b, s, n)[
+        np.arange(b), best_restart]
+    return TournamentResult(
+        order=order,
+        sorted=np.take_along_axis(xs_np, order[:, :, None], axis=1),
+        final_loss=final[np.arange(b), win],
+        best_restart=best_restart,
+        survivors=tuple(survivors_log),
+        all_losses=losses_mat.reshape(b, s, cfg.rounds),
+        rounds_run=device_rounds,
+        rounds_full=b * s * cfg.rounds,
+    )
+
+
 def restart_tournament(
     xs: jnp.ndarray,
     hw: tuple[int, int],
@@ -971,8 +1334,13 @@ def restart_tournament(
       ``TournamentResult`` — see its field docs.
     """
     assert 0.0 <= cull_fraction < 1.0, cull_fraction
+    _check_schedule(cfg)
     xs, b, s, n, keys_fl, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
+    if cfg.schedule == "adaptive":
+        return _restart_tournament_adaptive(
+            xs, b, s, n, keys_fl, xs_t, norms_t, orders, hw=hw, cfg=cfg,
+            cull_fraction=cull_fraction, n_rungs=n_rungs, mesh=mesh)
     dense_fn = _select_apply_fn(cfg)
     band = resolve_band(cfg, n)
     switch = _band_switch_round(cfg, n)

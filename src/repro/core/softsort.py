@@ -224,9 +224,18 @@ def band_tail_bound(w: jnp.ndarray, tau: float | jnp.ndarray,
     dropped (un-normalized, hence also normalized) mass.  Exact-arithmetic
     bound; a float32 evaluation adds rounding noise of a few ULP on top.
 
+    This is also the MEASURED switch criterion of the adaptive
+    annealing tier (``core.annealing.AdaptiveController``): evaluated
+    on each instance's actual trained keys at the instance's own next
+    temperature — hence the per-instance ``tau`` broadcast below —
+    instead of the linear-init model ``_band_switch_round`` uses for
+    the fixed schedule.
+
     Args:
       w: (N,) keys or (B, N) batch.
-      tau: temperature (scalar, may be traced).
+      tau: temperature — a scalar (may be traced), or (B,) with a
+        (B, N) ``w`` for per-instance temperatures (elementwise
+        broadcast against the per-instance gap ``g_K``).
       band: K, the band half-width in rank space.
 
     Returns:

@@ -121,7 +121,7 @@ class _SortRequest:                   # tracked in lists via `is`, and the
     seq: int
     deadline: float | None             # absolute monotonic, None = none
     submitted: float
-    progress: int = 0                  # global rounds completed
+    progress: int = 0                  # rounds executed so far
     attempts: int = 0                  # failed dispatches so far
     eligible_at: float = 0.0           # backoff gate for re-admission
     norm: float = 0.0
@@ -129,10 +129,20 @@ class _SortRequest:                   # tracked in lists via `is`, and the
     keys: np.ndarray | None = None     # (S_live, 2) uint32 chained keys
     alive: np.ndarray | None = None    # (S_live,) original restart idx
     losses: np.ndarray | None = None   # (S, R) f32, NaN where culled
+    # adaptive mode only: the request's plateau controller (indexed by
+    # ORIGINAL restart id) and which alive rows have already left the
+    # anneal (converged early; frozen, but still winner candidates).
+    ctrl: object | None = None
+    done_mask: np.ndarray | None = None  # (S_live,) bool
 
     @property
     def n_live(self) -> int:
-        return 1 if self.alive is None else len(self.alive)
+        """Instances the next dispatch must carry (pre-admission: 1)."""
+        if self.alive is None:
+            return 1
+        if self.done_mask is not None:
+            return int((~self.done_mask).sum())
+        return len(self.alive)
 
 
 class SortServer:
@@ -188,6 +198,20 @@ class SortServer:
     ``tournament_rungs > 1`` (with ``n_restarts > 1``) culls the worst
     ``cull_fraction`` of each request's restarts at its interior rung
     boundaries — successive halving, bit-identical survivors.
+
+    Adaptive annealing (``cfg.schedule="adaptive"``, EXPERIMENTS.md
+    §Adaptive): each request carries its own
+    ``core.annealing.AdaptiveController`` (decision quantum == the
+    scheduler rung), restarts jump to colder tau when their loss EWMA
+    plateaus, the dense->banded switch comes from the MEASURED tail
+    bound on their own keys, and the request resolves at the FIRST
+    boundary where every surviving restart has converged — fewer
+    rounds per request at equal final loss, counted in
+    ``stats["adaptive_exits"]`` / ``stats["rounds_saved"]``.  With
+    ``n_restarts == 1`` adaptive serving results are bit-identical to
+    the adaptive engine paths per seed; controller state commits only
+    on successful dispatches, so retries after a fault resume
+    bit-exactly.
     """
 
     def __init__(self, hw, d, cfg=None, max_batch: int = 8,
@@ -228,10 +252,20 @@ class SortServer:
         self._engine = engine_fn or run_round_segment
 
         rounds = self.cfg.rounds
+        self.adaptive = self.cfg.schedule == "adaptive"
         tournament = self.tournament_rungs > 1 and self.n_restarts > 1
         if sched_rungs is None:
-            sched_rungs = (self.tournament_rungs if tournament else
-                           next(k for k in (4, 3, 2, 1) if rounds % k == 0))
+            if self.adaptive:
+                # Scheduler rung == controller decision quantum, so
+                # every boundary the server preempts at is a boundary
+                # the controller observed at — adaptive server results
+                # stay bit-identical to the engine's adaptive runs.
+                from repro.core.annealing import adaptive_seg_len
+                sched_rungs = rounds // adaptive_seg_len(self.cfg)
+            else:
+                sched_rungs = (
+                    self.tournament_rungs if tournament else
+                    next(k for k in (4, 3, 2, 1) if rounds % k == 0))
         self.sched_rungs = int(sched_rungs)
         if not 1 <= self.sched_rungs <= rounds or rounds % self.sched_rungs:
             raise ValueError(
@@ -254,6 +288,7 @@ class SortServer:
             "completed": 0, "failed": 0, "deadline_missed": 0,
             "queue_rejected": 0, "retries": 0, "recoveries": 0,
             "stragglers": 0, "culled": 0, "latencies_ms": [],
+            "adaptive_exits": 0, "rounds_saved": 0,
             "compile_keys": set(),
         }
         self.events: list[dict] = []
@@ -412,12 +447,17 @@ class SortServer:
             keys = jnp.concatenate(
                 [base[None],
                  jax.random.split(jax.random.fold_in(base, 1), s - 1)])
-        req.keys = np.asarray(keys, np.uint32).reshape(s, 2)
+        req.keys = np.array(keys, np.uint32).reshape(s, 2)  # writable copy
         req.norm = float(np.float32(
             mean_pairwise_distance(jnp.asarray(req.x))))
         req.orders = np.tile(np.arange(n, dtype=np.int32), (s, 1))
         req.alive = np.arange(s)
         req.losses = np.full((s, self.cfg.rounds), np.nan, np.float32)
+        if self.adaptive:
+            from repro.core.shufflesoftsort import make_adaptive_controller
+            req.ctrl = make_adaptive_controller(
+                self.cfg, s, n, seg_len=self.seg_len)
+            req.done_mask = np.zeros(s, bool)
         self.events.append({"event": "admit", "seq": req.seq})
 
     def _regime(self, req: _SortRequest) -> str:
@@ -428,6 +468,17 @@ class SortServer:
         n = req.x.shape[0]
         if resolve_band(self.cfg, n) is None:
             return "dense"
+        if self.adaptive:
+            # Measured switch, from the request's controller: the
+            # request runs banded once EVERY live restart's own tail
+            # bound has cleared (conservative — the laggard holds its
+            # batchmates dense a rung longer, which is exact, just
+            # costlier; with n_restarts == 1 this is exactly the
+            # engine's per-instance rule, so single-restart serving
+            # stays bit-identical to the adaptive engine paths).
+            live = req.alive[~req.done_mask]
+            return ("banded" if live.size and req.ctrl.banded[live].all()
+                    else "dense")
         if n not in self._switch_cache:
             self._switch_cache[n] = rung_aligned_switch(
                 self.cfg, n, self.seg_len)
@@ -498,16 +549,34 @@ class SortServer:
         return True
 
     def _dispatch(self, reqs: list[_SortRequest], regime: str):
-        """One coalesced device call advancing ``reqs`` by one rung."""
+        """One coalesced device call advancing ``reqs`` by one rung.
+
+        Adaptive mode dispatches only each request's LIVE restarts
+        (early-stopped rows stay frozen at their converged state), at
+        their controller's schedule positions — a plateau jump shows up
+        here as a request whose next segment reads a colder slice of
+        the tau schedule than its executed-round count suggests.
+        """
         hw = reqs[0].hw
+        # Per-request rows going into this call (adaptive: live only).
+        sels = [np.flatnonzero(~r.done_mask) if self.adaptive
+                else np.arange(len(r.alive)) for r in reqs]
         xs = np.concatenate(
-            [np.repeat(r.x[None], r.n_live, axis=0) for r in reqs])
-        orders = np.concatenate([r.orders for r in reqs])
-        keys = np.concatenate([r.keys for r in reqs])
+            [np.repeat(r.x[None], len(sel), axis=0)
+             for r, sel in zip(reqs, sels)])
+        orders = np.concatenate(
+            [r.orders[sel] for r, sel in zip(reqs, sels)])
+        keys = np.concatenate([r.keys[sel] for r, sel in zip(reqs, sels)])
         norms = np.concatenate(
-            [np.full(r.n_live, r.norm, np.float32) for r in reqs])
-        progress = np.concatenate(
-            [np.full(r.n_live, r.progress, np.int64) for r in reqs])
+            [np.full(len(sel), r.norm, np.float32)
+             for r, sel in zip(reqs, sels)])
+        if self.adaptive:
+            progress = np.concatenate(
+                [r.ctrl.pos[r.alive[sel]] for r, sel in zip(reqs, sels)])
+        else:
+            progress = np.concatenate(
+                [np.full(len(sel), r.progress, np.int64)
+                 for r, sel in zip(reqs, sels)])
         bs = len(progress)
         # pad to the next power of two (capped at max_batch when the
         # chunk fits under it) so compiled programs stay bounded by
@@ -528,9 +597,19 @@ class SortServer:
 
         t0 = time.perf_counter()
         try:
-            o, k, l = self._engine(xs, orders, keys, norms, progress,
-                                   self.seg_len, hw=hw, cfg=self.cfg,
-                                   mesh=self.mesh)
+            if self.adaptive:
+                # regime= bypasses the model-based switch check (the
+                # controller owns the grouping); with_w= feeds the
+                # measured tail bound.
+                o, k, l, w = self._engine(
+                    xs, orders, keys, norms, progress, self.seg_len,
+                    hw=hw, cfg=self.cfg, mesh=self.mesh,
+                    regime=regime, with_w=True)
+                w = np.asarray(w)
+            else:
+                o, k, l = self._engine(xs, orders, keys, norms, progress,
+                                       self.seg_len, hw=hw, cfg=self.cfg,
+                                       mesh=self.mesh)
             o, k, l = np.asarray(o), np.asarray(k), np.asarray(l)
         except Exception as e:
             self._on_failure(reqs, e)
@@ -541,32 +620,81 @@ class SortServer:
         self.stats["batch_sizes"].append(bs)
 
         off = 0
-        for req in reqs:
-            nl = req.n_live
-            req.orders = o[off:off + nl]
-            req.keys = k[off:off + nl]
-            req.losses[req.alive,
-                       req.progress:req.progress + self.seg_len] = (
-                l[:, off:off + nl].T)
+        for req, sel in zip(reqs, sels):
+            nl = len(sel)
+            if self.adaptive:
+                orig = req.alive[sel]
+                exec0 = int(req.ctrl.executed[orig[0]])
+                req.orders[sel] = o[off:off + nl]
+                req.keys[sel] = k[off:off + nl]
+                seg_losses = l[:, off:off + nl].T        # (nl, seg)
+                req.losses[orig, exec0:exec0 + self.seg_len] = seg_losses
+                # Controller state commits only on a SUCCESSFUL
+                # dispatch (we are past the except above), so a retried
+                # request re-observes nothing and resumes bit-exactly.
+                req.ctrl.observe(orig, seg_losses, w[off:off + nl])
+                req.done_mask[sel] = req.ctrl.done[orig]
+            else:
+                req.orders = o[off:off + nl]
+                req.keys = k[off:off + nl]
+                req.losses[req.alive,
+                           req.progress:req.progress + self.seg_len] = (
+                    l[:, off:off + nl].T)
             req.progress += self.seg_len
             off += nl
             self._post_rung(req)
 
     def _post_rung(self, req: _SortRequest):
-        """Rung-boundary bookkeeping: tournament cull, then finalize."""
+        """Rung-boundary bookkeeping: tournament cull, then finalize.
+
+        Adaptive mode ranks every not-yet-culled restart (including
+        early-stopped ones — they converged, they still compete) by its
+        LAST-EXECUTED loss, and finalizes the request at the first
+        boundary where no restart is still annealing — the adaptive
+        early exit the ``adaptive_exits`` / ``rounds_saved`` counters
+        measure.
+        """
         from repro.core.shufflesoftsort import _tournament_cull
-        if req.progress in self._cull_edges and req.n_live > 1:
-            s_k = req.n_live
+        s_k = len(req.alive)
+        if req.progress in self._cull_edges and s_k > 1:
             keep = max(1, int(np.ceil(s_k * (1.0 - self.cull_fraction))))
             if keep < s_k:
-                final = req.losses[req.alive, req.progress - 1][None, :]
+                if self.adaptive:
+                    last = req.ctrl.executed[req.alive] - 1
+                    final = req.losses[req.alive, last][None, :]
+                else:
+                    final = req.losses[req.alive, req.progress - 1][None, :]
                 sel = _tournament_cull(final, keep)[0]
+                if self.adaptive:
+                    kept = np.zeros(s_k, bool)
+                    kept[sel] = True
+                    req.ctrl.mark_culled(req.alive[~kept])
+                    req.done_mask = req.done_mask[sel]
                 req.alive = req.alive[sel]
                 req.orders = req.orders[sel]
                 req.keys = req.keys[sel]
                 self.stats["culled"] += s_k - keep
                 self.events.append({"event": "cull", "seq": req.seq,
                                     "kept": keep, "of": s_k})
+        if self.adaptive:
+            if req.done_mask.all():
+                last = req.ctrl.executed[req.alive] - 1
+                final = req.losses[req.alive, last]
+                win = int(np.argmin(final))
+                order = req.orders[win]
+                saved = self.cfg.rounds - int(
+                    req.ctrl.executed[req.alive].max())
+                if saved > 0:
+                    self.stats["adaptive_exits"] += 1
+                    self.stats["rounds_saved"] += saved
+                    self.events.append(
+                        {"event": "adaptive_exit", "seq": req.seq,
+                         "round": self.cfg.rounds - saved,
+                         "saved": saved})
+                self._active.remove(req)
+                self._resolve_ok(
+                    req, (order, req.x[order], req.losses[req.alive[win]]))
+            return
         if req.progress >= self.cfg.rounds:
             final = req.losses[req.alive, -1]
             win = int(np.argmin(final))
@@ -655,7 +783,8 @@ def serve_sorts(args):
                                 chunk=min(256, args.sort_n),
                                 use_kernel=args.use_kernel,
                                 band=_parse_band(args.band),
-                                compute_dtype=args.dtype)
+                                compute_dtype=args.dtype,
+                                schedule=args.schedule)
     mesh = make_sort_mesh(args.mesh_devices) if args.mesh_devices else None
     server = SortServer(hw, d=args.sort_d, cfg=cfg,
                         max_batch=args.max_batch, max_wait_ms=args.wait_ms,
@@ -683,12 +812,19 @@ def serve_sorts(args):
     lat = np.asarray(server.stats["latencies_ms"], np.float64)
     p50 = float(np.percentile(lat, 50)) if lat.size else 0.0
     p99 = float(np.percentile(lat, 99)) if lat.size else 0.0
+    adaptive_note = ""
+    if cfg.schedule == "adaptive":
+        adaptive_note = (
+            f"; adaptive: {server.stats['adaptive_exits']} early exits, "
+            f"{server.stats['rounds_saved']} rounds saved")
     print(f"served {args.requests} sort requests in {wall:.2f}s "
           f"({sps:.2f} sorts/s) across {server.stats['batches']} device "
           f"batches (sizes {sizes}); p50 {p50:.1f}ms p99 {p99:.1f}ms; "
-          f"{improved}/{args.requests} layouts improved")
+          f"{improved}/{args.requests} layouts improved{adaptive_note}")
     return {"sorts_per_s": sps, "batches": server.stats["batches"],
-            "improved": int(improved), "p50_ms": p50, "p99_ms": p99}
+            "improved": int(improved), "p50_ms": p50, "p99_ms": p99,
+            "adaptive_exits": server.stats["adaptive_exits"],
+            "rounds_saved": server.stats["rounds_saved"]}
 
 
 # --------------------------------------------------------------------------
@@ -740,6 +876,12 @@ def main(argv=None):
     ap.add_argument("--sched-rungs", type=int, default=0,
                     help="scheduler preemption quantum: split the round "
                          "schedule into this many rungs (0 = auto)")
+    ap.add_argument("--schedule", choices=("fixed", "adaptive"),
+                    default="fixed",
+                    help="'adaptive' runs the plateau-driven controller: "
+                         "requests leave the anneal at the first "
+                         "converged rung boundary (EXPERIMENTS.md "
+                         "§Adaptive)")
     ap.add_argument("--seed", type=int, default=0,
                     help="server-owned PRNG seed for requests submitted "
                          "without a key (reproducible serving runs)")

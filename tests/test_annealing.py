@@ -1,0 +1,385 @@
+"""Adaptive annealing tier (core/annealing.py + schedule="adaptive").
+
+Hypothesis-free companion of tests/test_properties.py: everything here
+runs with the stock container deps, so the adaptive determinism
+contract keeps local coverage even where hypothesis is unavailable.
+
+Covers the rung machinery edge cases (``_rung_boundaries`` with more
+rungs than rounds, single-round schedules, ``rung_aligned_switch``
+landing exactly on a rung / on the final round), the
+``AdaptiveController`` unit behavior, and the cross-engine bit-identity
+contract: per seed, adaptive runs produce identical results on the
+sequential / vmap / shard_map / tournament / kernel paths, and a
+controller that never fires reproduces the fixed schedule exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.annealing import AdaptiveController, adaptive_seg_len
+from repro.core.shufflesoftsort import (
+    ShuffleSoftSortConfig,
+    _band_switch_round,
+    _rung_boundaries,
+    _tau_schedule,
+    make_adaptive_controller,
+    restart_tournament,
+    resolve_band,
+    rung_aligned_switch,
+    shuffle_soft_sort,
+    shuffle_soft_sort_batched,
+)
+from repro.core.softsort import is_valid_permutation
+from repro.launch.mesh import make_sort_mesh
+
+N, HW, D = 16, (4, 4), 2
+
+# Always-plateau controller: relative improvement is always < 1.0, so
+# every boundary past the first fires a jump — deterministic early
+# exits without depending on the loss landscape.
+FIRE = dict(schedule="adaptive", patience=1, plateau_rtol=1.0,
+            adapt_every=2)
+# Never-fire controller: patience larger than the number of rungs.
+NEVER = dict(schedule="adaptive", patience=10**6)
+
+
+def _problems(count, n=N, d=D, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.rand(count, n, d).astype(np.float32)
+
+
+# ---------------------------------------------------- rung machinery
+
+def test_rung_boundaries_basic():
+    assert _rung_boundaries(8, 4) == [2, 4, 6, 8]
+    assert _rung_boundaries(10, 3) == [3, 7, 10]
+    assert _rung_boundaries(5, 1) == [5]
+
+
+def test_rung_boundaries_more_rungs_than_rounds():
+    # n_rungs > rounds: duplicate edges collapse; strictly increasing,
+    # last == rounds, at most ``rounds`` rungs survive.
+    edges = _rung_boundaries(3, 7)
+    assert edges[-1] == 3
+    assert all(b > a for a, b in zip(edges, edges[1:]))
+    assert len(edges) <= 3
+    assert _rung_boundaries(2, 100) == [1, 2]
+
+
+def test_rung_boundaries_single_round():
+    assert _rung_boundaries(1, 1) == [1]
+    assert _rung_boundaries(1, 5) == [1]
+
+
+def test_rung_aligned_switch_no_band_is_never():
+    cfg = ShuffleSoftSortConfig(rounds=8, band=None)
+    for seg in (1, 2, 4, 8):
+        assert rung_aligned_switch(cfg, N, seg) == 8
+
+
+def test_rung_aligned_switch_snaps_up_to_boundary():
+    # A band tight enough to admit banding mid-schedule: check the
+    # snapped switch against the model switch for every divisor quantum.
+    cfg = ShuffleSoftSortConfig(rounds=8, band=4, band_eps=1e-2,
+                                tau_start=2.0, tau_end=0.01)
+    switch = _band_switch_round(cfg, N)
+    assert 0 < switch < cfg.rounds     # mid-schedule, else the test is vacuous
+    assert rung_aligned_switch(cfg, N, 1) == switch
+    for seg in (2, 4, 8):
+        snapped = rung_aligned_switch(cfg, N, seg)
+        assert snapped % seg == 0
+        assert switch <= snapped < switch + seg or snapped == cfg.rounds
+    # Exactly on a boundary: seg == switch leaves it unmoved.
+    if switch in (2, 4):
+        assert rung_aligned_switch(cfg, N, switch) == switch
+
+
+def test_rung_aligned_switch_at_final_round_exactly():
+    # A band the model only admits at the coldest temperature: the raw
+    # switch can land on rounds - 1 or rounds; snapping with
+    # seg == rounds must cap at rounds, never beyond.
+    cfg = ShuffleSoftSortConfig(rounds=8, band=4, band_eps=1e-9,
+                                tau_start=2.0, tau_end=2.0)
+    assert _band_switch_round(cfg, N) == cfg.rounds   # "never"
+    for seg in (1, 2, 4, 8):
+        assert rung_aligned_switch(cfg, N, seg) == cfg.rounds
+
+
+def test_rung_aligned_switch_single_round_schedule():
+    cfg = ShuffleSoftSortConfig(rounds=1, band=None)
+    assert rung_aligned_switch(cfg, N, 1) == 1
+
+
+# ---------------------------------------------------- adaptive_seg_len
+
+def test_adaptive_seg_len_explicit_divisor():
+    assert adaptive_seg_len(
+        ShuffleSoftSortConfig(rounds=8, adapt_every=2)) == 2
+    assert adaptive_seg_len(
+        ShuffleSoftSortConfig(rounds=8, adapt_every=8)) == 8
+
+
+def test_adaptive_seg_len_rejects_non_divisor():
+    with pytest.raises(ValueError, match="adapt_every"):
+        adaptive_seg_len(ShuffleSoftSortConfig(rounds=8, adapt_every=3))
+    with pytest.raises(ValueError, match="adapt_every"):
+        adaptive_seg_len(ShuffleSoftSortConfig(rounds=8, adapt_every=16))
+
+
+def test_adaptive_seg_len_default_rule():
+    # Largest divisor of rounds not exceeding rounds // 8.
+    assert adaptive_seg_len(ShuffleSoftSortConfig(rounds=40)) == 5
+    assert adaptive_seg_len(ShuffleSoftSortConfig(rounds=64)) == 8
+    assert adaptive_seg_len(ShuffleSoftSortConfig(rounds=7)) == 1
+    assert adaptive_seg_len(ShuffleSoftSortConfig(rounds=1)) == 1
+
+
+# ---------------------------------------------------- controller units
+
+def _ctrl(bs=3, rounds=8, seg=2, **kw):
+    cfg = ShuffleSoftSortConfig(rounds=rounds, schedule="adaptive",
+                                adapt_every=seg, **kw)
+    return AdaptiveController(cfg, bs, taus=_tau_schedule(cfg),
+                              band=None, seg_len=seg)
+
+
+def test_controller_validates_config():
+    cfg = ShuffleSoftSortConfig(rounds=8, schedule="adaptive")
+    taus = _tau_schedule(cfg)
+    with pytest.raises(ValueError, match="seg_len"):
+        AdaptiveController(cfg, 2, taus=taus, band=None, seg_len=3)
+    bad = ShuffleSoftSortConfig(rounds=8, schedule="adaptive", patience=0)
+    with pytest.raises(ValueError, match="patience"):
+        AdaptiveController(bad, 2, taus=_tau_schedule(bad), band=None,
+                           seg_len=2)
+    bad = ShuffleSoftSortConfig(rounds=8, schedule="adaptive",
+                                ewma_alpha=0.0)
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        AdaptiveController(bad, 2, taus=_tau_schedule(bad), band=None,
+                           seg_len=2)
+
+
+def test_controller_improving_losses_never_fire():
+    c = _ctrl(bs=2, plateau_rtol=1e-3)
+    # Halving losses each round: relative improvement stays >> rtol.
+    for step in range(4):
+        idx = c.live_indices()
+        assert idx.tolist() == [0, 1]
+        losses = np.full((2, 2), 2.0 ** -(step + 1), np.float32)
+        losses[:, 1] /= 2
+        d = c.observe(idx, losses)
+        assert d.fired == 0 and d.stopped == (2 if step == 3 else 0)
+    assert (c.executed == 8).all() and (c.pos == 8).all()
+    assert c.done.all() and c.rounds_saved() == 0
+    assert [d.boundary for d in c.decisions] == [2, 4, 6, 8]
+
+
+def test_controller_first_boundary_never_fires():
+    # best is inf before the first observe — an instant plateau on the
+    # very first rung would fire on zero evidence.
+    c = _ctrl(bs=1, patience=1, plateau_rtol=np.inf)
+    d = c.observe(np.array([0]), np.ones((1, 2), np.float32))
+    assert d.fired == 0
+    d = c.observe(np.array([0]), np.ones((1, 2), np.float32))
+    assert d.fired == 1
+
+
+def test_controller_plateau_jump_and_early_stop():
+    c = _ctrl(bs=1, patience=1, plateau_rtol=1.0)
+    flat = np.ones((1, 2), np.float32)
+    c.observe(np.array([0]), flat)            # seed: no fire
+    assert c.pos[0] == 2 and not c.done[0]
+    c.observe(np.array([0]), flat)            # fire: jump 2 -> pos 6
+    assert c.pos[0] == 6 and c.executed[0] == 4 and not c.done[0]
+    d = c.observe(np.array([0]), flat)        # fire past the end: stop
+    assert d.stopped == 1 and c.done[0]
+    assert c.executed[0] == 6 and c.pos[0] == 8
+    assert c.rounds_saved() == 2
+    assert c.live_indices().size == 0
+
+
+def test_controller_tau_rows_follow_per_instance_position():
+    c = _ctrl(bs=2, patience=1, plateau_rtol=1.0)
+    taus = c.taus
+    np.testing.assert_array_equal(c.tau_rows(np.array([0, 1])),
+                                  np.stack([taus[0:2]] * 2, axis=1))
+    c.observe(np.array([0, 1]), np.ones((2, 2), np.float32))
+    c.observe(np.array([1]), np.ones((1, 2), np.float32))  # 1 jumps to 6
+    np.testing.assert_array_equal(c.tau_rows(np.array([0])),
+                                  taus[2:4][:, None])
+    np.testing.assert_array_equal(c.tau_rows(np.array([1])),
+                                  taus[6:8][:, None])
+
+
+def test_controller_rejects_observing_stopped_instances():
+    c = _ctrl(bs=2, patience=1, plateau_rtol=1.0)
+    c.mark_culled([1])
+    assert c.live_indices().tolist() == [0]
+    with pytest.raises(AssertionError):
+        c.observe(np.array([0, 1]), np.ones((2, 2), np.float32))
+
+
+def test_make_adaptive_controller_wires_schedule_and_band():
+    cfg = ShuffleSoftSortConfig(rounds=8, **FIRE, band=4)
+    c = make_adaptive_controller(cfg, 5, N)
+    assert c.seg_len == 2 and c.band == resolve_band(cfg, N)
+    np.testing.assert_array_equal(c.taus, _tau_schedule(cfg))
+    assert make_adaptive_controller(cfg, 5, N, seg_len=4).seg_len == 4
+
+
+# ------------------------------------------- schedule gating + fixed parity
+
+def test_unknown_schedule_rejected_everywhere():
+    cfg = ShuffleSoftSortConfig(rounds=2, schedule="bogus")
+    x = _problems(1)[0]
+    with pytest.raises(ValueError, match="schedule"):
+        shuffle_soft_sort(x, HW, cfg)
+    with pytest.raises(ValueError, match="schedule"):
+        shuffle_soft_sort_batched(x[None], HW, cfg)
+    with pytest.raises(ValueError, match="schedule"):
+        restart_tournament(x[None], HW, cfg, n_restarts=2)
+
+
+def test_adaptive_rejects_per_round_callback():
+    cfg = ShuffleSoftSortConfig(rounds=4, inner_steps=1, **NEVER)
+    x = _problems(1)[0]
+    with pytest.raises(ValueError, match="callback"):
+        shuffle_soft_sort(x, HW, cfg, key=jax.random.PRNGKey(0),
+                          callback=lambda *a: None)
+    with pytest.raises(ValueError, match="callback"):
+        shuffle_soft_sort_batched(x[None], HW, cfg,
+                                  callback=lambda *a: None)
+
+
+def test_adaptive_equals_fixed_when_controller_never_fires():
+    """The opt-in invariant: schedule='adaptive' whose controller never
+    fires (and has no band) is bit-identical to the fixed schedule —
+    same orders AND same loss traces, full rounds executed."""
+    fixed = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=N)
+    adapt = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=N,
+                                  **NEVER)
+    x = _problems(1, seed=3)[0]
+    key = jax.random.PRNGKey(42)
+    o_f, s_f, l_f = shuffle_soft_sort(x, HW, fixed, key=key)
+    o_a, s_a, l_a = shuffle_soft_sort(x, HW, adapt, key=key)
+    np.testing.assert_array_equal(o_f, o_a)
+    np.testing.assert_array_equal(s_f, s_a)
+    np.testing.assert_array_equal(np.float32(l_f), np.float32(l_a))
+
+    res = shuffle_soft_sort_batched(x[None], HW, adapt, n_restarts=2,
+                                    key=key)
+    assert (res.rounds_executed == 8).all()
+    assert not np.isnan(res.all_losses).any()
+
+
+# ------------------------------------------- cross-engine bit-identity
+
+def test_adaptive_bit_identical_sequential_vmap_mesh_tournament():
+    """The tentpole determinism contract: per seed, the adaptive engine
+    produces identical permutations and loss traces on the sequential,
+    vmap, shard_map, and (cull-free) tournament paths, early exits
+    included."""
+    cfg = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=N, **FIRE)
+    xs = _problems(3, seed=7)
+    keys = jnp_keys = jax.vmap(jax.random.PRNGKey)(np.arange(3))
+
+    res = shuffle_soft_sort_batched(xs, HW, cfg, keys=keys)
+    assert res.rounds_executed is not None
+    assert (res.rounds_executed < cfg.rounds).all()     # early exits happened
+
+    for i in range(3):
+        o, s, l = shuffle_soft_sort(xs[i], HW, cfg, key=jnp_keys[i])
+        np.testing.assert_array_equal(o, res.order[i])
+        r = int(res.rounds_executed[i, 0])
+        assert len(l) == r
+        np.testing.assert_array_equal(np.float32(l), res.losses[i, :r])
+        assert np.isnan(res.losses[i, r:]).all()        # NaN past the stop
+
+    mesh = make_sort_mesh(min(2, jax.device_count()))
+    res_m = shuffle_soft_sort_batched(xs, HW, cfg, keys=keys, mesh=mesh)
+    np.testing.assert_array_equal(res.order, res_m.order)
+    np.testing.assert_array_equal(res.all_losses, res_m.all_losses)
+    np.testing.assert_array_equal(res.rounds_executed, res_m.rounds_executed)
+
+    tr = restart_tournament(xs, HW, cfg, n_restarts=1, keys=keys,
+                            cull_fraction=0.0, n_rungs=2)
+    np.testing.assert_array_equal(tr.order, res.order)
+    np.testing.assert_array_equal(tr.all_losses[:, 0], res.all_losses[:, 0])
+    assert tr.rounds_run == int(res.rounds_executed.sum())
+    assert tr.rounds_run < tr.rounds_full
+
+
+def test_adaptive_bit_identical_on_kernel_path():
+    cfg = ShuffleSoftSortConfig(rounds=4, inner_steps=1, chunk=N,
+                                use_kernel=True, schedule="adaptive",
+                                patience=1, plateau_rtol=1.0,
+                                adapt_every=1)
+    x = _problems(1, seed=11)[0]
+    key = jax.random.PRNGKey(5)
+    o_seq, _, l_seq = shuffle_soft_sort(x, HW, cfg, key=key)
+    res = shuffle_soft_sort_batched(x[None], HW, cfg, keys=key[None])
+    np.testing.assert_array_equal(o_seq, res.order[0])
+    r = int(res.rounds_executed[0, 0])
+    assert len(l_seq) == r < cfg.rounds
+    np.testing.assert_array_equal(np.float32(l_seq), res.losses[0, :r])
+
+
+def test_adaptive_tournament_culls_and_saves_rounds():
+    cfg = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=N, **FIRE)
+    xs = _problems(2, seed=13)
+    tr = restart_tournament(xs, HW, cfg, n_restarts=4,
+                            key=jax.random.PRNGKey(1),
+                            cull_fraction=0.5, n_rungs=2)
+    for o in tr.order:
+        assert is_valid_permutation(o)
+    assert tr.survivors[0].shape == (2, 2)               # 4 -> 2 at the cull
+    assert tr.rounds_run < tr.rounds_full
+    # The winner is one of the survivors and its trace is NaN-free up to
+    # its own stop.
+    for b in range(2):
+        assert tr.best_restart[b] in tr.survivors[-1][b]
+
+
+def test_measured_band_switch_flips_instances_to_banded():
+    """With a loose band_eps the measured tail bound clears immediately:
+    instances go banded at the first boundary (long before the
+    linear-init model would switch) and the run stays deterministic."""
+    cfg = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=N,
+                                band=4, band_eps=1e3, schedule="adaptive",
+                                patience=10**6, adapt_every=2)
+    xs = _problems(2, seed=17)
+    keys = jax.vmap(jax.random.PRNGKey)(np.arange(2))
+    ctrl = make_adaptive_controller(cfg, 2, N)
+    assert ctrl.band is not None and not ctrl.banded.any()
+
+    res1 = shuffle_soft_sort_batched(xs, HW, cfg, keys=keys)
+    res2 = shuffle_soft_sort_batched(xs, HW, cfg, keys=keys)
+    np.testing.assert_array_equal(res1.order, res2.order)
+    np.testing.assert_array_equal(res1.all_losses, res2.all_losses)
+    for o in res1.order:
+        assert is_valid_permutation(o)
+
+    # The controller itself flips on these keys: drive one observe with
+    # real end-of-rung keys via the engine's own controller plumbing.
+    from repro.core.shufflesoftsort import _run_adaptive, _prep_instances
+    _, b, s, n, keys_fl, xs_t, norms_t, orders = _prep_instances(
+        xs, HW, 1, None, keys)
+    ctrl = make_adaptive_controller(cfg, b * s, n)
+    _run_adaptive(xs_t, orders, keys_fl, norms_t, hw=HW, cfg=cfg,
+                  mesh=None, controller=ctrl)
+    assert ctrl.banded.all()
+    assert sum(d.switched for d in ctrl.decisions) == b * s
+
+
+def test_adaptive_rounds_saved_accounting():
+    cfg = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=N, **FIRE)
+    x = _problems(1, seed=19)[0]
+    res = shuffle_soft_sort_batched(x[None], HW, cfg,
+                                    keys=jax.random.PRNGKey(3)[None])
+    executed = int(res.rounds_executed[0, 0])
+    assert 0 < executed < cfg.rounds
+    n_valid = int((~np.isnan(res.losses[0])).sum())
+    assert n_valid == executed

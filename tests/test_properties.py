@@ -1,0 +1,164 @@
+"""Property-based determinism suite (hypothesis; ISSUE 7 satellite).
+
+Randomized-input statements of the invariants the unit suites check
+pointwise, drawn over keys / shapes / tau schedules (strategies shared
+from tests/conftest.py):
+
+  1. ``hard_permutation`` returns a valid permutation for ANY finite
+     key vector, duplicates included.
+  2. ``band_tail_bound`` upper-bounds the mass a banded apply actually
+     drops from the exact SoftSort matrix.
+  3. Chaining ``run_round_segment`` across ANY ordered partition of the
+     round schedule is bit-identical to one uninterrupted run — the
+     join/leave contract continuous batching and fault recovery rest on.
+  4. ``schedule="adaptive"`` whose controller never fires is
+     bit-identical to the fixed schedule per seed.
+
+The suite self-skips when hypothesis is not installed (the tier-1
+container image does not ship it); tests/test_annealing.py carries the
+hypothesis-free coverage.  CI runs this file in the `properties` job
+under the pinned, derandomized "ci" profile (see conftest.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+import conftest as strat  # noqa: E402  (shared strategies)
+from repro.core.shufflesoftsort import (  # noqa: E402
+    ShuffleSoftSortConfig,
+    _tau_schedule,
+    run_round_segment,
+    shuffle_soft_sort,
+)
+from repro.core.softsort import (  # noqa: E402
+    band_tail_bound,
+    hard_permutation,
+    is_valid_permutation,
+    softsort_matrix,
+)
+from repro.core.losses import mean_pairwise_distance  # noqa: E402
+
+
+def _problem(hw, d=2, seed=0):
+    n = hw[0] * hw[1]
+    return np.random.RandomState(seed).rand(n, d).astype(np.float32)
+
+
+def _instance_arrays(x, seed):
+    """Initial (orders, keys, norms) for one flattened instance — the
+    state a scheduler would hold before the first dispatched segment."""
+    n = x.shape[0]
+    orders = np.arange(n, dtype=np.int32)[None]
+    keys = np.asarray(jax.random.PRNGKey(seed), np.uint32).reshape(1, 2)
+    norms = np.float32([mean_pairwise_distance(jnp.asarray(x))])
+    return orders, keys, norms
+
+
+@given(w=strat.key_vectors())
+def test_hard_permutation_is_always_valid(w):
+    assert is_valid_permutation(hard_permutation(jnp.float32(w)))
+
+
+@given(w=strat.key_vectors(min_n=5), seed=strat.prng_seeds())
+def test_band_tail_bound_dominates_true_dropped_mass(w, seed):
+    w = jnp.float32(w)
+    n = w.shape[0]
+    rng = np.random.RandomState(seed % 2**31)
+    tau = np.float32(rng.uniform(0.01, 2.0))
+    band = int(rng.randint(1, n))
+    p = np.asarray(softsort_matrix(w, tau), np.float64)   # (N, N) exact-ish
+    # Row i keeps keys within `band` RANKS of i; everything else is the
+    # mass the banded apply drops.
+    ranks = np.argsort(np.argsort(np.asarray(w), kind="stable"),
+                       kind="stable")                     # key j -> rank
+    out_of_band = np.abs(ranks[None, :] - np.arange(n)[:, None]) > band
+    dropped = (p * out_of_band).sum(axis=1).max()
+    bound = float(band_tail_bound(w, tau, band))
+    # Exact-arithmetic bound; float32 softmax adds a few ULP of noise.
+    assert dropped <= bound * (1 + 1e-5) + 1e-6
+
+
+@given(hw=strat.grid_shapes(max_side=3), seed=strat.prng_seeds(),
+       cfg_draw=strat.tau_schedule_cfgs())
+def test_chained_segments_bit_identical_to_uninterrupted_run(
+        hw, seed, cfg_draw):
+    rounds, tau_start, tau_end = cfg_draw
+    cfg = ShuffleSoftSortConfig(rounds=rounds, inner_steps=1,
+                                chunk=hw[0] * hw[1], tau_start=tau_start,
+                                tau_end=tau_end)
+    x = _problem(hw, seed=seed % 1000)
+    orders0, keys0, norms0 = _instance_arrays(x, seed)
+    full = run_round_segment(x[None], orders0, keys0, norms0,
+                             np.zeros(1, np.int64), rounds, hw=hw, cfg=cfg)
+    # Re-run the same schedule under every drawn partition.
+    for split in ([1] * rounds, [rounds]):
+        _assert_chain_matches(x, hw, cfg, seed, split, full)
+
+
+@given(hw=strat.grid_shapes(max_side=3), seed=strat.prng_seeds(),
+       split_seed=strat.prng_seeds())
+def test_arbitrary_segment_splits_bit_identical(hw, seed, split_seed):
+    rounds = 6
+    cfg = ShuffleSoftSortConfig(rounds=rounds, inner_steps=1,
+                                chunk=hw[0] * hw[1])
+    x = _problem(hw, seed=seed % 1000)
+    orders0, keys0, norms0 = _instance_arrays(x, seed)
+    full = run_round_segment(x[None], orders0, keys0, norms0,
+                             np.zeros(1, np.int64), rounds, hw=hw, cfg=cfg)
+    rng = np.random.RandomState(split_seed % 2**31)
+    split, left = [], rounds
+    while left:
+        take = int(rng.randint(1, left + 1))
+        split.append(take)
+        left -= take
+    _assert_chain_matches(x, hw, cfg, seed, split, full)
+
+
+def _assert_chain_matches(x, hw, cfg, seed, split, full):
+    assert sum(split) == cfg.rounds
+    orders, keys, norms = _instance_arrays(x, seed)
+    pos, losses = 0, []
+    for seg in split:
+        orders, keys, l = run_round_segment(
+            x[None], orders, keys, norms, np.full(1, pos, np.int64), seg,
+            hw=hw, cfg=cfg)
+        losses.append(np.asarray(l))
+        pos += seg
+    np.testing.assert_array_equal(np.asarray(orders), np.asarray(full[0]),
+                                  err_msg=f"split={split}")
+    np.testing.assert_array_equal(np.asarray(keys), np.asarray(full[1]))
+    np.testing.assert_array_equal(np.concatenate(losses, axis=0),
+                                  np.asarray(full[2]))
+
+
+@given(hw=strat.grid_shapes(max_side=3), seed=strat.prng_seeds())
+def test_adaptive_equals_fixed_when_controller_never_fires(hw, seed):
+    n = hw[0] * hw[1]
+    fixed = ShuffleSoftSortConfig(rounds=4, inner_steps=1, chunk=n)
+    adapt = ShuffleSoftSortConfig(rounds=4, inner_steps=1, chunk=n,
+                                  schedule="adaptive", patience=10**6)
+    x = _problem(hw, seed=seed % 1000)
+    key = jax.random.PRNGKey(seed)
+    o_f, s_f, l_f = shuffle_soft_sort(x, hw, fixed, key=key)
+    o_a, s_a, l_a = shuffle_soft_sort(x, hw, adapt, key=key)
+    np.testing.assert_array_equal(o_f, o_a)
+    np.testing.assert_array_equal(s_f, s_a)
+    np.testing.assert_array_equal(np.float32(l_f), np.float32(l_a))
+
+
+def test_tau_schedule_is_float32_and_monotone_smoke():
+    # Anchor for the property file even when hypothesis examples shrink
+    # to nothing: the schedule both engines consume is float32 and
+    # non-increasing for tau_start >= tau_end.
+    cfg = ShuffleSoftSortConfig(rounds=16)
+    taus = _tau_schedule(cfg)
+    assert taus.dtype == np.float32
+    assert (np.diff(taus) <= 0).all()

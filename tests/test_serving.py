@@ -392,3 +392,98 @@ def test_cli_rejects_bf16_without_kernel(capsys):
         main(["--workload", "sort", "--dtype", "bfloat16"])
     assert ei.value.code == 2
     assert "--use-kernel" in capsys.readouterr().err
+
+# --------------------------------------- adaptive annealing x faults
+
+# Always-plateau adaptive config: every boundary past the first fires a
+# schedule jump, so each request deterministically exits the anneal at
+# 6 of 8 rounds — early exits happen regardless of the loss landscape.
+ACFG = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=16,
+                             schedule="adaptive", patience=1,
+                             plateau_rtol=1.0, adapt_every=2)
+
+
+@pytest.mark.parametrize("fail_calls", [
+    frozenset(),           # no faults: the early-exit baseline
+    frozenset({0}),        # first dispatch dies before any commit
+    frozenset({1}),        # mid-anneal fault between committed rungs
+    frozenset({0, 2}),     # retry storm across multiple rungs
+], ids=["clean", "first", "mid", "storm"])
+def test_adaptive_early_exit_resolves_exactly_once_under_faults(fail_calls):
+    """Fault x adaptive-early-exit grid: when requests converge early
+    during a retry storm, every future still resolves exactly once and
+    bit-identical to the fault-free adaptive engine — controller state
+    commits only on successful dispatches, so a replayed rung re-derives
+    the same decisions."""
+    xs = _problems(3, seed=9)
+    keys = [jax.random.PRNGKey(20 + i) for i in range(3)]
+    inj = FaultInjector(run_round_segment, fail_calls=fail_calls)
+    server = SortServer(HW, d=D, cfg=ACFG, max_batch=4, autostart=False,
+                        engine_fn=inj,
+                        retry=RetryPolicy(max_retries=3, backoff_base_s=0.0))
+    futs = [server.submit(xs[i], key=keys[i]) for i in range(3)]
+    _drain(server, max_ticks=200)
+    results = [f.result(timeout=5) for f in futs]
+    server.close()
+
+    _resolution_is_exactly_once(server, futs)
+    assert inj.faults == len(fail_calls)
+    assert server.stats["failed"] == 0
+    # A failed dispatch re-queues every request it carried (all 3 batch
+    # together here), so the retry ledger counts per request.
+    assert server.stats["retries"] == 3 * len(fail_calls)
+    # Every request converged early: 6 of 8 rounds with this controller.
+    assert server.stats["adaptive_exits"] == 3
+    assert server.stats["rounds_saved"] == 3 * 2
+    assert any(e["event"] == "adaptive_exit" for e in server.events)
+    for (order, _, losses), x, k in zip(results, xs, keys):
+        o_ref, _, l_ref = shuffle_soft_sort(x, HW, ACFG, key=k)
+        np.testing.assert_array_equal(order, o_ref)
+        valid = losses[~np.isnan(losses)]
+        np.testing.assert_array_equal(valid, np.float32(l_ref))
+        assert np.isnan(losses[len(l_ref):]).all()   # NaN past the stop
+
+
+def test_adaptive_retry_exhaustion_still_resolves_every_future():
+    """Even when the retry budget dies mid-adaptive-anneal the future
+    resolves exactly once — with the typed rejection, not a hang."""
+    inj = FaultInjector(run_round_segment, fail_calls={1, 2, 3})
+    server = SortServer(HW, d=D, cfg=ACFG, autostart=False, engine_fn=inj,
+                        retry=RetryPolicy(max_retries=2, backoff_base_s=0.0))
+    fut = server.submit(_problems(1, seed=21)[0], key=jax.random.PRNGKey(0))
+    _drain(server, max_ticks=200)
+    server.close()
+    with pytest.raises(RequestRejected):
+        fut.result(timeout=0)
+    assert server.stats["failed"] == 1
+    assert server.stats["adaptive_exits"] == 0
+    _resolution_is_exactly_once(server, [fut])
+
+
+def test_adaptive_tournament_serving_with_fault_matches_engine():
+    """n_restarts > 1: server-side adaptive tournament (cull at rung
+    boundaries + per-restart early stops) recovers from an injected
+    fault and still matches the engine's adaptive tournament winner."""
+    from repro.core.shufflesoftsort import restart_tournament
+
+    x = _problems(1, seed=23)[0]
+    base = jax.random.PRNGKey(9)
+    inj = FaultInjector(run_round_segment, fail_calls={2})
+    server = SortServer(HW, d=D, cfg=ACFG, n_restarts=4,
+                        tournament_rungs=2, autostart=False, engine_fn=inj,
+                        retry=RetryPolicy(max_retries=3, backoff_base_s=0.0))
+    fut = server.submit(x, key=base)
+    _drain(server, max_ticks=200)
+    order, _, _ = fut.result(timeout=5)
+    server.close()
+
+    # The server's restart keys: base + split(fold_in(base, 1), 3).
+    keys = np.concatenate(
+        [np.asarray(base)[None],
+         np.asarray(jax.random.split(jax.random.fold_in(base, 1), 3))])
+    ref = restart_tournament(x[None], HW, ACFG, n_restarts=4,
+                             keys=keys[None], cull_fraction=0.5, n_rungs=2)
+    np.testing.assert_array_equal(order, ref.order[0])
+    assert inj.faults == 1 and server.stats["recoveries"] >= 1
+    assert server.stats["culled"] > 0
+    _resolution_is_exactly_once(server, [fut])

@@ -35,7 +35,12 @@ Bench-specific checks:
     per-candidate timings, the winner must be IN the recorded candidate
     grid for its tier, and the winner's own timing must be present.
   * ``batched_bench --devices`` (BENCH_scaling.json) — cells need the
-    sweep axes and timing columns.
+    sweep axes and timing columns.  Adaptive-annealing rows
+    (``"mode": "adaptive"``, from ``batched_bench --adaptive``) are
+    gated on the paper-claims acceptance bar instead: the controller
+    must save >= 20% of schedule rounds at a final-loss gap <= 1% vs
+    the fixed engine on identical problems/keys (loss columns are
+    backend-exact, so the bar holds on any machine).
   * ``serving_bench`` (BENCH_serving.json) — cells need the per-scenario
     load axes and the tail-latency/robustness columns, the same
     ``wall_clock`` measured-only-on-TPU labeling rule as kernel cells,
@@ -83,6 +88,22 @@ EXPECTED_PASSES = {"fused_fwd": 2, "fused_bwd": 2,
 
 SCALING_CELL_KEYS = ("devices", "B", "S", "N", "vmap_s", "shard_s",
                      "tournament_s", "tournament_loss_gap")
+
+# Adaptive-annealing rows in BENCH_scaling.json (``"mode": "adaptive"``,
+# written by ``batched_bench --adaptive``): the fixed-vs-adaptive
+# comparison columns plus the two gated quantities — the controller
+# must save at least 20% of the schedule rounds at a final-loss gap of
+# at most 1% (the paper-claims acceptance bar; EXPERIMENTS.md
+# §Adaptive).  A committed row below the bar means the controller
+# regressed, not that the sweep was unlucky: the cells run on fixed
+# problems and keys.
+ADAPTIVE_CELL_KEYS = ("mode", "B", "N", "rounds", "adapt_every",
+                      "patience", "plateau_rtol", "decay_rungs",
+                      "fixed_s", "adaptive_s", "fixed_final_loss",
+                      "adaptive_final_loss", "mean_rounds_executed",
+                      "rounds_saved_frac", "final_loss_gap_pct")
+ADAPTIVE_MIN_SAVED_FRAC = 0.2
+ADAPTIVE_MAX_LOSS_GAP_PCT = 1.0
 
 SERVING_CELL_KEYS = ("scenario", "requests", "arrival_rate_hz",
                      "wall_clock", "wall_s", "completed", "failed",
@@ -321,10 +342,45 @@ def check_file(path: str, tol: float, tol_bf16: float) -> list[str]:
         for i, cell in enumerate(cells):
             if not isinstance(cell, dict):
                 continue
+            if cell.get("mode") == "adaptive":
+                _check_adaptive_cell(path, i, cell, errors)
+                continue
             for key in SCALING_CELL_KEYS:
                 if key not in cell:
                     errors.append(f"{path}: cells[{i}] missing '{key}'")
     return errors
+
+
+def _check_adaptive_cell(path, i, cell, errors):
+    for key in ADAPTIVE_CELL_KEYS:
+        if key not in cell:
+            errors.append(f"{path}: cells[{i}] missing '{key}'")
+    saved = cell.get("rounds_saved_frac")
+    if not isinstance(saved, (int, float)) or not 0.0 <= saved < 1.0:
+        errors.append(
+            f"{path}: cells[{i}].rounds_saved_frac = {saved!r} must be "
+            "in [0, 1)")
+    elif saved < ADAPTIVE_MIN_SAVED_FRAC:
+        errors.append(
+            f"{path}: cells[{i}].rounds_saved_frac = {saved:.3f} below "
+            f"the {ADAPTIVE_MIN_SAVED_FRAC:.0%} adaptive acceptance bar")
+    gap = cell.get("final_loss_gap_pct")
+    if not isinstance(gap, (int, float)):
+        errors.append(
+            f"{path}: cells[{i}].final_loss_gap_pct = {gap!r} must be "
+            "a number")
+    elif gap > ADAPTIVE_MAX_LOSS_GAP_PCT:
+        errors.append(
+            f"{path}: cells[{i}].final_loss_gap_pct = {gap:+.3f} exceeds "
+            f"the {ADAPTIVE_MAX_LOSS_GAP_PCT}% adaptive acceptance bar")
+    executed = cell.get("mean_rounds_executed")
+    rounds = cell.get("rounds")
+    if (isinstance(executed, (int, float)) and isinstance(rounds, int)
+            and isinstance(saved, (int, float))
+            and not 0 < executed <= rounds):
+        errors.append(
+            f"{path}: cells[{i}].mean_rounds_executed = {executed} "
+            f"outside (0, rounds={rounds}]")
 
 
 def main(argv=None) -> int:
