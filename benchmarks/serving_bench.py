@@ -13,7 +13,7 @@ with ``--inject-faults`` — deterministic worker failures and straggler
 delays injected at exact dispatch indices via
 ``runtime.fault_tolerance.FaultInjector``.
 
-Three scenarios per run:
+Four scenarios per run:
 
   * ``steady``    — in-budget load, no perturbations: the baseline
     p50/p99 and goodput row.
@@ -25,6 +25,14 @@ Three scenarios per run:
     queue with tight deadlines: the row shows load shedding doing its
     job (``queue_rejected`` + ``deadline_missed`` > 0) while admitted,
     in-deadline requests still complete.
+  * ``preempt``   — warm restart under load: the server is killed
+    (``close(drain=False)``) once a quarter of the traffic has
+    completed, and a successor adopts the in-flight requests from
+    their last committed round boundaries.  The row proves
+    exactly-once accounting ACROSS server generations
+    (``completed_gen1 + completed_gen2 == completed``) and that every
+    preempted request was resumed (``resumed_requests ==
+    preempted_inflight``) — EXPERIMENTS.md §Robustness.
 
 Every request is accounted for exactly once:
 
@@ -196,6 +204,110 @@ def run_scenario(name, cfg, *, requests, rate_hz, window,
     return cell
 
 
+def run_preempt_scenario(cfg, *, requests, rate_hz, window, queue_depth,
+                         max_batch, seed=0):
+    """Kill-and-resume under load: offer Poisson traffic to generation-1,
+    preempt it (``close(drain=False)``) once a quarter of the requests
+    completed, hand the in-flight requests to generation-2, and account
+    for every future exactly once across both servers."""
+    def make(resume=None):
+        hw0, d0 = SHAPES[0]
+        return SortServer(
+            hw0, d=d0, cfg=cfg, max_batch=max_batch, max_wait_ms=2.0,
+            queue_depth=queue_depth, seed=seed,
+            retry=RetryPolicy(max_retries=4, backoff_base_s=0.01,
+                              backoff_max_s=0.1),
+            straggler=StragglerMonitor(z=4.0, min_ratio=2.0, warmup=8),
+            resume=resume)
+
+    server = make()
+    _warm_compile_cache(cfg, server.seg_len, max_batch)
+    rng = np.random.RandomState(seed)
+    problems = _gen_problems(rng, requests)
+    gaps = rng.exponential(1.0 / rate_hz, size=requests)
+
+    futs, rejected = [], 0
+    t_start = time.perf_counter()
+    next_at = t_start
+    for i, (hw, d, x) in enumerate(problems):
+        next_at += gaps[i]
+        pause = next_at - time.perf_counter()
+        if pause > 0:
+            time.sleep(pause)
+        while sum(not f.done() for f in futs) >= window:
+            time.sleep(0.005)
+        try:
+            futs.append(server.submit(x, hw=hw, priority=i % 3))
+        except QueueFull:
+            rejected += 1
+    # preempt once a quarter of the offered load has completed but
+    # in-flight traffic remains (deadline: everything finished first)
+    quarter = max(1, requests // 4)
+    while (server.stats["completed"] < quarter
+           and any(not f.done() for f in futs)):
+        time.sleep(0.002)
+    handoff = server.close(drain=False)
+    gen1 = dict(server.stats)
+
+    server2 = make(resume=handoff)
+    outcomes = {"completed": 0, "failed": 0, "deadline_missed": 0}
+    for f in futs:
+        try:
+            f.result(timeout=600)
+            outcomes["completed"] += 1
+        except DeadlineExceeded:
+            outcomes["deadline_missed"] += 1
+        except (RequestFailed, ServerClosed):
+            outcomes["failed"] += 1
+    wall = time.perf_counter() - t_start
+    server2.close()
+    gen2 = server2.stats
+
+    lat = gen1["latencies_ms"] + gen2["latencies_ms"]
+    cell = {
+        "scenario": "preempt",
+        "requests": requests,
+        "arrival_rate_hz": rate_hz,
+        "deadline_s": None,
+        "shapes": [[list(hw), d] for hw, d in SHAPES],
+        "rounds": cfg.rounds,
+        "wall_clock": ("measured" if jax.default_backend() == "tpu"
+                       else "emulated"),
+        "wall_s": wall,
+        "completed": outcomes["completed"],
+        "failed": outcomes["failed"],
+        "deadline_missed": outcomes["deadline_missed"],
+        "queue_rejected": rejected,
+        "goodput_rps": outcomes["completed"] / max(wall, 1e-9),
+        "p50_ms": _percentile(lat, 50),
+        "p99_ms": _percentile(lat, 99),
+        "deadline_miss_rate": outcomes["deadline_missed"] / requests,
+        "retries": gen1["retries"] + gen2["retries"],
+        "recoveries": gen1["recoveries"] + gen2["recoveries"],
+        "stragglers": gen1["stragglers"] + gen2["stragglers"],
+        "batches": gen1["batches"] + gen2["batches"],
+        "mean_batch": (float(np.mean(gen1["batch_sizes"]
+                                     + gen2["batch_sizes"]))
+                       if gen1["batch_sizes"] + gen2["batch_sizes"]
+                       else 0.0),
+        "compile_programs": len(gen1["compile_keys"]
+                                | gen2["compile_keys"]),
+        "injected_faults": 0,
+        "injected_delays": 0,
+        # warm-restart accounting (gated by tools/check_bench.py)
+        "preempted_inflight": len(handoff.requests),
+        "resumed_requests": gen2["resumed"],
+        "completed_gen1": gen1["completed"],
+        "completed_gen2": gen2["completed"],
+    }
+    assert (cell["completed"] + cell["failed"] + cell["deadline_missed"]
+            + cell["queue_rejected"]) == requests, cell
+    assert cell["completed_gen1"] + cell["completed_gen2"] \
+        == cell["completed"], cell
+    assert cell["resumed_requests"] == cell["preempted_inflight"], cell
+    return cell
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -221,6 +333,9 @@ def main(argv=None):
     cells.append(run_scenario(
         "overload", cfg, requests=requests, rate_hz=500.0, window=requests,
         queue_depth=12, max_batch=4, deadline_s=0.5, seed=args.seed))
+    cells.append(run_preempt_scenario(
+        cfg, requests=requests, rate_hz=80.0, window=requests,
+        queue_depth=64, max_batch=4, seed=args.seed))
 
     record = {
         "bench": "serving_bench",

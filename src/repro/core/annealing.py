@@ -131,6 +131,35 @@ class AdaptiveController:
         self.fired = np.zeros(bs, np.int64)      # tau jumps taken
         self.decisions: list[RungDecision] = []
 
+    # ---- checkpointing ---------------------------------------------------
+
+    # Every mutable per-instance array `observe` / `mark_culled` touch.
+    # `decisions` (the host audit log) is deliberately not state: it
+    # feeds counters and tables, never a decision, so a resumed run's
+    # log simply restarts at the resume rung.
+    _STATE_FIELDS = ("pos", "executed", "done", "culled", "banded",
+                     "ewma", "best", "plateau", "fired")
+
+    def state_dict(self) -> dict[str, np.ndarray]:
+        """Copy of the full decision state, keyed by field name — what
+        ``runtime.anneal_checkpoint.AnnealCheckpointer`` persists at
+        every committed rung (EXPERIMENTS.md §Robustness)."""
+        return {f: getattr(self, f).copy() for f in self._STATE_FIELDS}
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore ``state_dict`` output (or its numpy round-trip).
+        Arrays are cast back to the constructor dtypes so decisions
+        after a resume are bitwise the ones an uninterrupted run makes.
+        """
+        for f in self._STATE_FIELDS:
+            cur = getattr(self, f)
+            new = np.asarray(state[f], dtype=cur.dtype)
+            if new.shape != cur.shape:
+                raise ValueError(
+                    f"controller state {f!r} has shape {new.shape}, "
+                    f"expected {cur.shape} (wrong instance count?)")
+            setattr(self, f, new.copy())
+
     # ---- engine-facing queries ------------------------------------------
 
     def live_indices(self) -> np.ndarray:

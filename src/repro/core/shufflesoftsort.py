@@ -127,6 +127,64 @@ class ShuffleSoftSortConfig:
     decay_rungs: int = 1        # rungs skipped per plateau fire
 
 
+class NumericalDivergence(RuntimeError):
+    """A rung-boundary sentinel saw a non-finite loss (or trained key).
+
+    SoftSort's ``exp(-|w - sorted(w)| / tau)`` relaxation under/overflows
+    exactly where long anneals spend most of their time — cold tau,
+    reduced precision — and a NaN that enters the loss silently poisons
+    the Adam moments and every later round.  The engines therefore check
+    the (host-side, already-materialized) per-round losses at each rung
+    boundary and raise this typed error with enough context to act on:
+    ``round`` (first non-finite global round), ``tau`` (the nominal
+    schedule temperature there), ``dtype`` (``cfg.compute_dtype``), and
+    ``context`` (which engine tripped).  ``runtime.fault_tolerance
+    .AnnealSupervisor`` catches it and — under an opt-in
+    ``DivergencePolicy`` — retries from the last rung checkpoint with
+    escalating fallbacks (EXPERIMENTS.md §Robustness).
+    """
+
+    def __init__(self, message: str, *, round: int | None = None,
+                 tau: float | None = None, dtype: str | None = None,
+                 context: str | None = None):
+        super().__init__(message)
+        self.round = round
+        self.tau = tau
+        self.dtype = dtype
+        self.context = context
+
+
+def _check_finite(losses_seg, start: int, cfg: "ShuffleSoftSortConfig",
+                  context: str, ws=None) -> None:
+    """Host-side divergence sentinel over one segment's losses.
+
+    ``losses_seg`` is (T, ...) round-major, covering global rounds
+    [start, start + T); ``ws`` optionally carries end-of-rung trained
+    keys (the adaptive path has them on host anyway).  Raises
+    ``NumericalDivergence`` pinpointing the first non-finite round.
+    """
+    losses_seg = np.asarray(losses_seg)
+    bad = ~np.isfinite(losses_seg)
+    if bad.any():
+        per_round = bad.reshape(losses_seg.shape[0], -1).any(axis=1)
+        t = int(np.argmax(per_round))
+        rnd = start + t
+        taus = _tau_schedule(cfg)
+        tau = float(taus[min(rnd, cfg.rounds - 1)])
+        raise NumericalDivergence(
+            f"non-finite loss at round {rnd} (tau~{tau:.4g}, "
+            f"compute_dtype={cfg.compute_dtype}, engine={context})",
+            round=rnd, tau=tau, dtype=cfg.compute_dtype, context=context)
+    if ws is not None and not np.isfinite(np.asarray(ws)).all():
+        rnd = start + losses_seg.shape[0] - 1
+        taus = _tau_schedule(cfg)
+        tau = float(taus[min(rnd, cfg.rounds - 1)])
+        raise NumericalDivergence(
+            f"non-finite trained keys at round {rnd} (tau~{tau:.4g}, "
+            f"compute_dtype={cfg.compute_dtype}, engine={context})",
+            round=rnd, tau=tau, dtype=cfg.compute_dtype, context=context)
+
+
 def _loss_fn(w, x_shuf, inv_shuf, tau, hw, norm, cfg: ShuffleSoftSortConfig,
              apply_fn) -> jnp.ndarray:
     y_shuf, colsum = apply_fn(w, x_shuf, tau)
@@ -404,6 +462,102 @@ def _run_segments(xs_t, orders, keys, taus, norms_t, *, start: int,
     return orders, keys, losses
 
 
+# --------------------------------------------------------------------------
+# Rung-boundary checkpointing (EXPERIMENTS.md §Robustness).
+# --------------------------------------------------------------------------
+
+def _open_checkpointer(checkpoint_dir, resume):
+    """Resolve the ``checkpoint_dir=`` / ``resume=`` knobs to an
+    ``AnnealCheckpointer`` (or None).  Imported lazily: core stays
+    importable without the runtime package on the path."""
+    if checkpoint_dir is None:
+        if resume:
+            raise ValueError("resume=True requires checkpoint_dir=")
+        return None
+    from repro.runtime.anneal_checkpoint import AnnealCheckpointer
+    return AnnealCheckpointer(str(checkpoint_dir))
+
+
+def _checkpoint_edges(rounds: int, every: int) -> list[int]:
+    """Rung-boundary rounds at which the fixed engines checkpoint:
+    every ``every`` rounds, with a final edge at ``rounds``."""
+    every = max(1, int(every))
+    edges = list(range(every, rounds, every))
+    if not edges or edges[-1] != rounds:
+        edges.append(rounds)
+    return edges
+
+
+def _engine_meta(kind: str, cfg: ShuffleSoftSortConfig, n: int, bs: int,
+                 hw) -> dict:
+    """Checkpoint meta record: the structural fingerprint a resume must
+    match (everything but ``cfg``, which the divergence-degradation
+    ladder is allowed to adjust mid-run) plus the full config repr for
+    audit."""
+    return {"engine": kind, "rounds": int(cfg.rounds), "n": int(n),
+            "instances": int(bs), "hw": list(hw),
+            "schedule": cfg.schedule, "cfg": repr(cfg)}
+
+
+def _meta_expect(meta: dict) -> dict:
+    return {k: v for k, v in meta.items() if k != "cfg"}
+
+
+def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
+                            switch: int, hw,
+                            cfg: ShuffleSoftSortConfig, dense_fn, band_fn,
+                            mesh, ckpt, resume: bool, every: int,
+                            rung_hook, meta: dict,
+                            check_finite: bool = True):
+    """Fixed-schedule batched run in checkpointed rung segments.
+
+    Chains ``_run_segments`` calls across the checkpoint edges — the
+    PR 6 segment-chaining contract makes the chained run bit-identical
+    to the single-dispatch fast path, so adding checkpoints never
+    perturbs results.  After each segment the full cross-round carry
+    (orders, chained keys, losses so far) is published atomically; on
+    ``resume`` the run restarts from the newest checkpoint's round (a
+    bare directory starts from scratch).  ``rung_hook(start_round)``
+    fires before each segment — the chaos harness's kill point.
+
+    Returns (orders (BS, N), keys (BS, 2), losses (R, BS) np.float32).
+    """
+    rounds = int(cfg.rounds)
+    start = 0
+    parts: list[np.ndarray] = []
+    if resume and ckpt is not None:
+        got = ckpt.restore_latest(_meta_expect(meta))
+        if got is not None:
+            state, start, _ = got
+            orders = jnp.asarray(state["orders"])
+            keys = jnp.asarray(state["keys"])
+            if start > 0:
+                parts.append(np.asarray(state["losses"], np.float32))
+            if start >= rounds:
+                return orders, keys, parts[0]
+    for end in _checkpoint_edges(rounds, every):
+        if end <= start:
+            continue
+        if rung_hook is not None:
+            rung_hook(start)
+        orders, keys, seg = _run_segments(
+            xs_t, orders, keys, taus[start:end], norms_t, start=start,
+            switch=switch, hw=hw, cfg=cfg, dense_fn=dense_fn,
+            band_fn=band_fn, mesh=mesh)
+        seg_np = np.asarray(seg, np.float32)
+        if check_finite:
+            _check_finite(seg_np, start, cfg, meta["engine"])
+        parts.append(seg_np)
+        if ckpt is not None:
+            ckpt.save(end, {"orders": np.asarray(orders),
+                            "keys": np.asarray(keys),
+                            "losses": np.concatenate(parts, axis=0)},
+                      meta=dict(meta, round=end))
+        start = end
+    losses = parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+    return orders, keys, losses
+
+
 def _run_rounds_ragged_impl(xs, orders, keys, tau_rows, norms, *, hw,
                             cfg: ShuffleSoftSortConfig, apply_fn):
     """Per-instance-temperature variant of ``_run_rounds_impl``.
@@ -576,7 +730,10 @@ def make_adaptive_controller(cfg: ShuffleSoftSortConfig, n_instances: int,
 
 def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
                   cfg: ShuffleSoftSortConfig, mesh, controller,
-                  boundary_hook=None):
+                  boundary_hook=None, ckpt=None, resume: bool = False,
+                  meta: dict | None = None, rung_hook=None,
+                  hook_state: dict | None = None,
+                  check_finite: bool = True):
     """Host-side adaptive decision loop around the ragged engines.
 
     Each iteration advances every live instance by one ``seg_len`` rung
@@ -590,6 +747,18 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
 
     ``boundary_hook(step, controller, losses)`` runs after each
     boundary's observe — the tournament culls from it.
+
+    Checkpointing (EXPERIMENTS.md §Robustness): with ``ckpt`` every
+    committed rung publishes orders/keys/losses plus the controller's
+    full ``state_dict`` and — for callers whose boundary hook carries
+    its own cross-rung state (the adaptive tournament's alive sets) —
+    the entries of ``hook_state`` (a mutable dict the caller owns;
+    restored IN PLACE on resume, so the hook closure sees the resumed
+    values).  ``rung_hook(executed_rounds)`` fires at the TOP of each
+    rung, before any work — a kill there loses at most the in-flight
+    rung, and the resumed run replays it from the last committed
+    boundary bit-identically (the controller's decisions are pure
+    functions of committed observations).
 
     Returns (orders (BS, N) device, keys (BS, 2) device,
     losses (BS, R) np.float32 — NaN at never-executed rounds,
@@ -605,10 +774,28 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
     d_mesh = 1 if mesh is None else mesh.shape["data"]
     device_rounds = 0
     step = 0
+    if resume and ckpt is not None:
+        got = ckpt.restore_latest(_meta_expect(meta or {}))
+        if got is not None:
+            state, _, m = got
+            orders = jnp.asarray(state["orders"])
+            keys = jnp.asarray(state["keys"])
+            losses_mat = np.asarray(state["losses"], np.float32).copy()
+            ctrl.load_state_dict(
+                {f: state["ctrl_" + f] for f in ctrl._STATE_FIELDS})
+            if hook_state is not None:
+                hook_state.clear()
+                hook_state.update({k[3:]: np.asarray(v)
+                                   for k, v in state.items()
+                                   if k.startswith("hs_")})
+            step = int(m["step"])
+            device_rounds = int(m["device_rounds"])
     while True:
         live = ctrl.live_indices()
         if live.size == 0:
             break
+        if rung_hook is not None:
+            rung_hook(step * seg)
         # All live instances have executed exactly step * seg rounds —
         # stopped instances never rejoin, so executed stays uniform.
         exec0 = step * seg
@@ -634,11 +821,23 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
             seg_losses[sel] = np.asarray(l).T
             ws_live[sel] = np.asarray(w)
             device_rounds += seg * (-(-gidx.size // d_mesh) * d_mesh)
+        if check_finite:
+            _check_finite(seg_losses.T, exec0, cfg, "adaptive", ws=ws_live)
         losses_mat[live, exec0:exec0 + seg] = seg_losses
         ctrl.observe(live, seg_losses, ws_live)
         if boundary_hook is not None:
             boundary_hook(step + 1, ctrl, losses_mat)
         step += 1
+        if ckpt is not None:
+            st = {"orders": np.asarray(orders), "keys": np.asarray(keys),
+                  "losses": losses_mat.copy()}
+            for f in ctrl._STATE_FIELDS:
+                st["ctrl_" + f] = getattr(ctrl, f).copy()
+            if hook_state is not None:
+                for k, v in hook_state.items():
+                    st["hs_" + k] = np.asarray(v)
+            ckpt.save(step, st, meta=dict(meta or {}, step=step,
+                                          device_rounds=device_rounds))
     return orders, keys, losses_mat, device_rounds
 
 
@@ -895,6 +1094,12 @@ def shuffle_soft_sort(
     cfg: ShuffleSoftSortConfig = ShuffleSoftSortConfig(),
     key: jax.Array | None = None,
     callback: Optional[Callable[[int, np.ndarray, float], None]] = None,
+    *,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+    checkpoint_every: int | None = None,
+    rung_hook: Optional[Callable[[int], None]] = None,
+    check_finite: bool = True,
 ) -> tuple[np.ndarray, np.ndarray, list[float]]:
     """Sort x (N, d) onto an (h, w) grid.  Returns (order, x[order], losses).
 
@@ -917,6 +1122,16 @@ def shuffle_soft_sort(
     converged rung boundary, so ``losses`` holds only the executed
     rounds.  The controller observes at rung boundaries, which is
     incompatible with the per-round ``callback`` stream.
+
+    Preemption safety (EXPERIMENTS.md §Robustness): ``checkpoint_dir``
+    publishes the cross-round carry (order, chained PRNG key, losses)
+    every ``checkpoint_every`` rounds (default ``rounds // 8``) through
+    ``runtime.anneal_checkpoint.AnnealCheckpointer``; ``resume=True``
+    restarts from the newest checkpoint there (a bare directory starts
+    fresh) and finishes bit-identical to an uninterrupted run with the
+    same seed.  ``rung_hook(start_round)`` fires before each segment
+    (the chaos harness's kill point); ``check_finite=False`` disables
+    the per-round ``NumericalDivergence`` sentinel.
     """
     _check_schedule(cfg)
     if key is None:
@@ -929,10 +1144,17 @@ def shuffle_soft_sort(
                 "boundaries, not per round)")
         res = shuffle_soft_sort_batched(
             jnp.asarray(x, jnp.float32)[None], hw, cfg,
-            n_restarts=1, keys=jnp.asarray(key)[None])
+            n_restarts=1, keys=jnp.asarray(key)[None],
+            checkpoint_dir=checkpoint_dir, resume=resume,
+            checkpoint_every=checkpoint_every, rung_hook=rung_hook,
+            check_finite=check_finite)
         executed = int(res.rounds_executed[0, 0])
         return (res.order[0], res.sorted[0],
                 [float(v) for v in res.losses[0][:executed]])
+    ckpt = _open_checkpointer(checkpoint_dir, resume)
+    if callback is not None and (ckpt is not None or rung_hook is not None):
+        raise ValueError("checkpoint_dir/rung_hook are incompatible with "
+                         "the per-round callback stream")
     n = x.shape[0]
     assert n == hw[0] * hw[1], (n, hw)
     x = jnp.asarray(x, jnp.float32)
@@ -945,15 +1167,45 @@ def shuffle_soft_sort(
     order = jnp.arange(n, dtype=jnp.int32)
     taus = _tau_schedule(cfg)
     losses: list[float] = []
-    for r in range(cfg.rounds):
+    start = 0
+    every = checkpoint_every or max(1, cfg.rounds // 8)
+    meta = _engine_meta("sequential", cfg, n, 1, hw)
+    if ckpt is not None:
+        # Normalize a typed key to raw uint32 data so it survives the
+        # numpy round-trip (identical stream either way).
+        karr = jnp.asarray(key)
+        if jnp.issubdtype(karr.dtype, jax.dtypes.prng_key):
+            key = jax.random.key_data(karr)
+        if resume:
+            got = ckpt.restore_latest(_meta_expect(meta))
+            if got is not None:
+                state, start, _ = got
+                order = jnp.asarray(state["order"])
+                key = jnp.asarray(state["key"])
+                losses = [float(v) for v in state["losses"]]
+    edges = set(_checkpoint_edges(cfg.rounds, every))
+    for r in range(start, cfg.rounds):
+        if rung_hook is not None and (r == start or r % every == 0):
+            rung_hook(r)
         key, sub = jax.random.split(key)
         order, loss = _outer_round(
             x, order, sub, jnp.float32(taus[r]), norm,
             hw=hw, cfg=cfg,
             apply_fn=band_fn if r >= switch else dense_fn)
         losses.append(float(loss))
+        if check_finite and not np.isfinite(losses[-1]):
+            raise NumericalDivergence(
+                f"non-finite loss at round {r} (tau~{float(taus[r]):.4g}, "
+                f"compute_dtype={cfg.compute_dtype}, engine=sequential)",
+                round=r, tau=float(taus[r]), dtype=cfg.compute_dtype,
+                context="sequential")
         if callback is not None:
             callback(r, np.asarray(order), losses[-1])
+        if ckpt is not None and (r + 1) in edges:
+            ckpt.save(r + 1, {"order": np.asarray(order),
+                              "key": np.asarray(key),
+                              "losses": np.asarray(losses, np.float32)},
+                      meta=dict(meta, round=r + 1))
     order = np.asarray(order)
     return order, np.asarray(x)[order], losses
 
@@ -1031,6 +1283,12 @@ def shuffle_soft_sort_batched(
     keys: jax.Array | None = None,
     callback: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
     mesh=None,
+    *,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+    checkpoint_every: int | None = None,
+    rung_hook: Optional[Callable[[int], None]] = None,
+    check_finite: bool = True,
 ) -> BatchedSortResult:
     """Sort B problems at once, S random restarts each.
 
@@ -1069,6 +1327,12 @@ def shuffle_soft_sort_batched(
         through the host would defeat the point of the mesh.
       mesh: optional jax Mesh with a "data" axis; shards the instance
         grid across its devices.
+      checkpoint_dir / resume / checkpoint_every / rung_hook /
+        check_finite: rung-boundary preemption safety, as in
+        ``shuffle_soft_sort`` (EXPERIMENTS.md §Robustness).  Resumed
+        runs are bit-identical per seed to uninterrupted runs on the
+        vmap AND mesh paths — including resume under a different mesh
+        size (the carry is stored in logical layout).
 
     Returns:
       ``BatchedSortResult`` — see its field docs.
@@ -1077,6 +1341,10 @@ def shuffle_soft_sort_batched(
     if mesh is not None and callback is not None:
         raise ValueError("callback streaming is not supported on the "
                          "sharded path; use mesh=None")
+    ckpt = _open_checkpointer(checkpoint_dir, resume)
+    if callback is not None and (ckpt is not None or rung_hook is not None):
+        raise ValueError("checkpoint_dir/rung_hook are incompatible with "
+                         "the per-round callback stream")
     xs, b, s, n, keys, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
     bs = b * s
@@ -1089,7 +1357,9 @@ def shuffle_soft_sort_batched(
         ctrl = make_adaptive_controller(cfg, bs, n)
         orders, _, losses_bs, _ = _run_adaptive(
             xs_t, orders, keys, norms_t, hw=hw, cfg=cfg, mesh=mesh,
-            controller=ctrl)
+            controller=ctrl, ckpt=ckpt, resume=resume,
+            meta=_engine_meta("adaptive", cfg, n, bs, hw),
+            rung_hook=rung_hook, check_finite=check_finite)
         all_losses = losses_bs.reshape(b, s, cfg.rounds)
         all_orders = np.asarray(orders).reshape(b, s, n)
         executed = ctrl.executed.reshape(b, s)
@@ -1117,13 +1387,30 @@ def shuffle_soft_sort_batched(
     taus = _tau_schedule(cfg)
 
     if callback is None:
-        # Fast path: the whole R-round schedule as one scanned device
-        # program (two when the band switch splits the anneal) — no
-        # per-round host round-trips.  With a mesh the same program
-        # runs per shard of the instance axis.
-        orders, _, losses_rb = _run_segments(
-            xs_t, orders, keys, taus, norms_t, start=0, switch=switch,
-            hw=hw, cfg=cfg, dense_fn=dense_fn, band_fn=band_fn, mesh=mesh)
+        if ckpt is not None or rung_hook is not None:
+            # Checkpointed path: the same schedule chained across rung
+            # segments (bit-identical to the fast path — PR 6's
+            # segment-chaining contract), publishing the carry at each
+            # edge so a preempted run resumes instead of restarting.
+            orders, _, losses_rb = _run_fixed_checkpointed(
+                xs_t, orders, keys, taus, norms_t, switch=switch,
+                hw=hw, cfg=cfg, dense_fn=dense_fn, band_fn=band_fn,
+                mesh=mesh, ckpt=ckpt, resume=resume,
+                every=checkpoint_every or max(1, cfg.rounds // 8),
+                rung_hook=rung_hook,
+                meta=_engine_meta("batched", cfg, n, bs, hw),
+                check_finite=check_finite)
+        else:
+            # Fast path: the whole R-round schedule as one scanned
+            # device program (two when the band switch splits the
+            # anneal) — no per-round host round-trips.  With a mesh the
+            # same program runs per shard of the instance axis.
+            orders, _, losses_rb = _run_segments(
+                xs_t, orders, keys, taus, norms_t, start=0, switch=switch,
+                hw=hw, cfg=cfg, dense_fn=dense_fn, band_fn=band_fn,
+                mesh=mesh)
+            if check_finite:
+                _check_finite(np.asarray(losses_rb), 0, cfg, "batched")
         all_losses = np.asarray(losses_rb).T             # (BS, R)
     else:
         # Streaming path: one dispatch per round so the callback can
@@ -1138,6 +1425,8 @@ def shuffle_soft_sort_batched(
                 hw=hw, cfg=cfg,
                 apply_fn=band_fn if r >= switch else dense_fn)
             loss_rounds.append(losses)
+            if check_finite:
+                _check_finite(np.asarray(losses)[None], r, cfg, "batched")
             callback(r, np.asarray(orders), np.asarray(losses))
         all_losses = np.asarray(jnp.stack(loss_rounds, axis=-1))
 
@@ -1226,7 +1515,9 @@ def _tournament_cull(final_losses: np.ndarray, keep: int) -> np.ndarray:
 
 def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
                                  orders, *, hw, cfg, cull_fraction,
-                                 n_rungs, mesh) -> TournamentResult:
+                                 n_rungs, mesh, ckpt=None,
+                                 resume=False, rung_hook=None,
+                                 check_finite=True) -> TournamentResult:
     """Adaptive-schedule tournament: the shared ``_run_adaptive`` loop
     with a cull hook at the rung edges.
 
@@ -1238,19 +1529,28 @@ def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
     converged, not because it lost), and a culled restart just leaves
     the winner set; either way the per-instance PRNG streams of the
     survivors never see a perturbation.
+
+    The cross-rung cull state (current alive sets + the survivors log)
+    lives in ``hstate``, which ``_run_adaptive`` persists alongside the
+    controller at every committed rung — so a preempted adaptive
+    tournament resumes with its culls intact, bit-identical to an
+    uninterrupted run.
     """
     ctrl = make_adaptive_controller(cfg, b * s, n)
     n_steps = cfg.rounds // ctrl.seg_len
     edges = _rung_boundaries(n_steps, min(n_rungs, n_steps))
     interior = set(edges[:-1])
     edge_set = set(edges)
-    alive_box = {"alive": np.tile(np.arange(s), (b, 1))}   # (B, S_k)
-    survivors_log: list[np.ndarray] = []
+    # Checkpointed hook state: "alive" is the live (B, S_k) map;
+    # "surv_<i>" entries are the per-edge survivors log (numbered keys
+    # because the widths shrink — a ragged log can't be one array).
+    hstate: dict[str, np.ndarray] = {
+        "alive": np.tile(np.arange(s), (b, 1))}
 
     def hook(step, ctrl_, losses_mat):
         if step not in edge_set:
             return
-        alive = alive_box["alive"]
+        alive = hstate["alive"]
         s_k = alive.shape[1]
         keep = max(1, int(np.ceil(s_k * (1.0 - cull_fraction))))
         if step in interior and keep < s_k:
@@ -1261,15 +1561,20 @@ def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
             np.put_along_axis(kept_mask, sel, True, axis=1)
             ctrl_.mark_culled(rows[~kept_mask])
             alive = np.take_along_axis(alive, sel, axis=1)
-            alive_box["alive"] = alive
-        survivors_log.append(alive.copy())
+            hstate["alive"] = alive
+        n_logged = sum(1 for kk in hstate if kk.startswith("surv_"))
+        hstate[f"surv_{n_logged:03d}"] = alive.copy()
 
     orders_f, _, losses_mat, device_rounds = _run_adaptive(
         xs_t, orders, keys_fl, norms_t, hw=hw, cfg=cfg, mesh=mesh,
-        controller=ctrl, boundary_hook=hook)
+        controller=ctrl, boundary_hook=hook, ckpt=ckpt, resume=resume,
+        meta=_engine_meta("tournament-adaptive", cfg, n, b * s, hw),
+        rung_hook=rung_hook, hook_state=hstate, check_finite=check_finite)
     # If every restart stopped before a late edge, its hook never fired;
     # the live set was already final, so log it for those rungs too.
-    alive = alive_box["alive"]
+    alive = hstate["alive"]
+    survivors_log = [hstate[kk] for kk in
+                     sorted(kk for kk in hstate if kk.startswith("surv_"))]
     while len(survivors_log) < len(edges):
         survivors_log.append(alive.copy())
 
@@ -1302,6 +1607,11 @@ def restart_tournament(
     cull_fraction: float = 0.5,
     n_rungs: int = 3,
     mesh=None,
+    *,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+    rung_hook: Optional[Callable[[int], None]] = None,
+    check_finite: bool = True,
 ) -> TournamentResult:
     """Successive-halving restart scheduler over the batched engine.
 
@@ -1329,18 +1639,27 @@ def restart_tournament(
         ``n_rungs - 1`` interior boundaries.
       mesh: optional 1-D "data" mesh — each rung's (shrinking) instance
         grid is shard_mapped across it.
+      checkpoint_dir / resume / rung_hook / check_finite: rung-boundary
+        preemption safety (EXPERIMENTS.md §Robustness).  The tournament
+        checkpoints at its OWN rung edges (the cull boundaries) — the
+        natural seam, so alive sets and survivor logs are always
+        consistent with the stored orders; ``checkpoint_every`` does
+        not apply here.
 
     Returns:
       ``TournamentResult`` — see its field docs.
     """
     assert 0.0 <= cull_fraction < 1.0, cull_fraction
     _check_schedule(cfg)
+    ckpt = _open_checkpointer(checkpoint_dir, resume)
     xs, b, s, n, keys_fl, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
     if cfg.schedule == "adaptive":
         return _restart_tournament_adaptive(
             xs, b, s, n, keys_fl, xs_t, norms_t, orders, hw=hw, cfg=cfg,
-            cull_fraction=cull_fraction, n_rungs=n_rungs, mesh=mesh)
+            cull_fraction=cull_fraction, n_rungs=n_rungs, mesh=mesh,
+            ckpt=ckpt, resume=resume, rung_hook=rung_hook,
+            check_finite=check_finite)
     dense_fn = _select_apply_fn(cfg)
     band = resolve_band(cfg, n)
     switch = _band_switch_round(cfg, n)
@@ -1358,8 +1677,31 @@ def restart_tournament(
     survivors_log: list[np.ndarray] = []
     rounds_run = 0
     start = 0
+    k_done = 0
+    meta = _engine_meta("tournament", cfg, n, b * s, hw)
+    if resume and ckpt is not None:
+        got = ckpt.restore_latest(_meta_expect(meta))
+        if got is not None:
+            state, _, m = got
+            alive = np.asarray(state["alive"])
+            all_losses = np.asarray(state["all_losses"], np.float32).copy()
+            k_done = int(m["rung"])
+            survivors_log = [np.asarray(state[f"surv_{i:03d}"])
+                             for i in range(k_done)]
+            # xs for the live set is a pure gather of the inputs — only
+            # the carry (orders/keys/norms/alive) needs storage.
+            cur = dict(xs=jnp.repeat(xs, alive.shape[1], axis=0),
+                       orders=jnp.asarray(state["orders"]),
+                       keys=jnp.asarray(state["keys"]),
+                       norms=jnp.asarray(state["norms"]))
+            start = int(m["start"])
+            rounds_run = int(m["rounds_run"])
     d_mesh = 1 if mesh is None else mesh.shape["data"]
     for k, end in enumerate(edges):
+        if k < k_done:
+            continue
+        if rung_hook is not None:
+            rung_hook(start)
         s_k = alive.shape[1]
         orders_d, keys_d, losses_d = _run_segments(
             cur["xs"], cur["orders"], cur["keys"], taus[start:end],
@@ -1370,6 +1712,8 @@ def restart_tournament(
         bs_exec = -(-b * s_k // d_mesh) * d_mesh
         rounds_run += (end - start) * bs_exec
         seg = np.asarray(losses_d).T.reshape(b, s_k, end - start)
+        if check_finite:
+            _check_finite(np.asarray(losses_d), start, cfg, "tournament")
         all_losses[np.arange(b)[:, None], alive, start:end] = seg
 
         keep = max(1, int(np.ceil(s_k * (1.0 - cull_fraction))))
@@ -1391,6 +1735,16 @@ def restart_tournament(
                        norms=cur["norms"])
         survivors_log.append(alive.copy())
         start = end
+        if ckpt is not None:
+            st = {"orders": np.asarray(cur["orders"]),
+                  "keys": np.asarray(cur["keys"]),
+                  "norms": np.asarray(cur["norms"]),
+                  "alive": alive.copy(),
+                  "all_losses": all_losses.copy()}
+            for i, sv in enumerate(survivors_log):
+                st[f"surv_{i:03d}"] = sv
+            ckpt.save(end, st, meta=dict(meta, rung=k + 1, start=end,
+                                         rounds_run=rounds_run))
 
     s_fin = alive.shape[1]
     final = all_losses[np.arange(b)[:, None], alive, -1]  # (B, S_fin)

@@ -145,6 +145,26 @@ class _SortRequest:                   # tracked in lists via `is`, and the
         return len(self.alive)
 
 
+@dataclasses.dataclass
+class WarmHandoff:
+    """In-flight state a preempted ``SortServer`` hands its successor.
+
+    ``close(drain=False)`` returns one: every unresolved request — with
+    its future, committed round-boundary engine state, and controller —
+    plus the server-owned PRNG stream position and sequence counter.  A
+    new server constructed with ``resume=handoff`` adopts the requests
+    and finishes them from their last committed rung: the original
+    futures resolve from the new server, exactly once, bit-identical to
+    what the first server would have produced (tests/test_serving.py,
+    EXPERIMENTS.md §Robustness).  When the first server had a
+    ``checkpoint_dir``, the same state is also persisted there, so a
+    successor in a NEW process can ``resume=<dir>`` (fresh futures,
+    exposed as ``server.resumed``)."""
+    requests: list            # unresolved _SortRequests, seq order
+    rng_state: dict           # np.random PCG64 bit-generator state
+    seq: int                  # next submission sequence number
+
+
 class SortServer:
     """Continuous-batching scheduler for grid-sort requests.
 
@@ -223,6 +243,7 @@ class SortServer:
                  default_deadline_s: float | None = None,
                  retry=None, straggler=None,
                  straggler_recovery: int = 8,
+                 checkpoint_dir: str | None = None, resume=None,
                  engine_fn=None, autostart: bool = True):
         from repro.core.shufflesoftsort import (
             ShuffleSoftSortConfig,
@@ -288,7 +309,7 @@ class SortServer:
             "completed": 0, "failed": 0, "deadline_missed": 0,
             "queue_rejected": 0, "retries": 0, "recoveries": 0,
             "stragglers": 0, "culled": 0, "latencies_ms": [],
-            "adaptive_exits": 0, "rounds_saved": 0,
+            "adaptive_exits": 0, "rounds_saved": 0, "resumed": 0,
             "compile_keys": set(),
         }
         self.events: list[dict] = []
@@ -296,11 +317,18 @@ class SortServer:
         self._pending: list[_SortRequest] = []
         self._active: list[_SortRequest] = []
         self._stop = False
+        self._preempt = False
         self._seq = 0
         self._dispatch_idx = 0
         self._bucket_cap = self.max_batch
         self._healthy_streak = 0
         self._switch_cache: dict[int, int] = {}
+        self.checkpoint_dir = checkpoint_dir
+        self.resumed: list[_SortRequest] = []
+        if resume is not None:
+            handoff = (resume if isinstance(resume, WarmHandoff)
+                       else self._load_handoff(resume))
+            self._adopt(handoff)
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._started = False
         if autostart:
@@ -366,15 +394,171 @@ class SortServer:
             self._cv.notify()
         return fut
 
-    def close(self):
-        """Stop the scheduler; every queued or in-flight future resolves
-        with ``ServerClosed`` (no caller blocks forever)."""
+    def close(self, drain: bool = True):
+        """Stop the scheduler.
+
+        ``drain=True`` (the default): every queued or in-flight future
+        resolves with ``ServerClosed`` — no caller blocks forever.
+
+        ``drain=False`` — **warm restart** (simulated preemption): stop
+        WITHOUT rejecting.  Returns a ``WarmHandoff`` carrying every
+        unresolved request at its last committed round boundary; a
+        successor server built with ``resume=`` finishes them and the
+        original futures resolve exactly once.  If ``checkpoint_dir``
+        is set the handoff is also persisted there for cross-process
+        resume (``resume=<dir>``).
+        """
         with self._cv:
             self._stop = True
+            if not drain:
+                self._preempt = True
             self._cv.notify_all()
         if self._started:
             self._worker.join(timeout=120)
-        self._reject_all(ServerClosed("SortServer closed"))
+        if drain:
+            self._reject_all(ServerClosed("SortServer closed"))
+            return None
+        with self._cv:
+            inflight = self._pending + self._active
+            self._pending, self._active = [], []
+        inflight = sorted((r for r in inflight if not r.future.done()),
+                          key=lambda r: r.seq)
+        handoff = WarmHandoff(requests=inflight,
+                              rng_state=self._rng.bit_generator.state,
+                              seq=self._seq)
+        self.events.append({"event": "preempt",
+                            "inflight": len(inflight)})
+        if self.checkpoint_dir is not None:
+            self._save_handoff(handoff)
+        return handoff
+
+    # ---- warm restart (preemption handoff) ------------------------------
+
+    def _adopt(self, handoff: WarmHandoff):
+        """Adopt a predecessor's in-flight requests: they re-enter the
+        admission queue at their last committed round boundary (backoff
+        gates cleared — the fault was the preemption, not the request)
+        and their futures resolve from THIS server."""
+        self._rng.bit_generator.state = handoff.rng_state
+        self._seq = max(self._seq, int(handoff.seq))
+        for req in handoff.requests:
+            if req.future.done():       # pragma: no cover - defensive
+                continue
+            req.eligible_at = 0.0
+            self.stats["requests"] += 1
+            self.stats["resumed"] += 1
+            self.resumed.append(req)
+            self._pending.append(req)
+            self.events.append({"event": "adopt", "seq": req.seq,
+                                "progress": req.progress})
+
+    def _save_handoff(self, handoff: WarmHandoff):
+        """Persist the handoff to ``checkpoint_dir`` (atomic, via
+        CheckpointManager): flat per-request arrays + a JSON manifest of
+        the scalars, so a successor in a new process can resume."""
+        from repro.core.annealing import AdaptiveController
+        from repro.runtime.checkpoint import CheckpointManager
+        now = time.monotonic()
+        arrays: dict[str, np.ndarray] = {}
+        metas = []
+        for i, req in enumerate(handoff.requests):
+            arrays[f"req{i}_x"] = req.x
+            arrays[f"req{i}_key"] = req.key
+            has_state = req.orders is not None
+            if has_state:
+                arrays[f"req{i}_orders"] = req.orders
+                arrays[f"req{i}_keys"] = req.keys
+                arrays[f"req{i}_alive"] = req.alive
+                arrays[f"req{i}_losses"] = req.losses
+                if req.done_mask is not None:
+                    arrays[f"req{i}_done"] = req.done_mask
+                if req.ctrl is not None:
+                    for f in AdaptiveController._STATE_FIELDS:
+                        arrays[f"req{i}_ctrl_{f}"] = getattr(req.ctrl, f)
+            metas.append({
+                "hw": list(req.hw), "d": int(req.d),
+                "priority": int(req.priority), "seq": int(req.seq),
+                "progress": int(req.progress),
+                "attempts": int(req.attempts), "norm": float(req.norm),
+                "deadline_left": (None if req.deadline is None
+                                  else max(0.0, req.deadline - now)),
+                "has_state": has_state,
+                "has_ctrl": req.ctrl is not None,
+                "has_done": req.done_mask is not None,
+            })
+        mgr = CheckpointManager(self.checkpoint_dir, keep=1,
+                                async_save=False)
+        mgr.save(0, arrays, extra={
+            "kind": "sort-server-handoff",
+            "rng_state": handoff.rng_state,
+            "seq": int(handoff.seq),
+            "requests": metas,
+        })
+
+    def _load_handoff(self, path: str) -> WarmHandoff:
+        """Rebuild a ``WarmHandoff`` persisted by ``_save_handoff``.
+        Requests get FRESH futures (the writer's died with its process);
+        they are exposed on ``self.resumed`` after adoption.  Adaptive
+        controllers are reconstructed from this server's config and
+        restored bit-exactly via ``load_state_dict``."""
+        from repro.core.annealing import AdaptiveController
+        from repro.runtime.checkpoint import CheckpointManager
+        mgr = CheckpointManager(path, keep=1, async_save=False)
+        step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no server handoff in {path}")
+        extra = mgr.manifest(step).get("extra", {})
+        if extra.get("kind") != "sort-server-handoff":
+            raise ValueError(
+                f"{path} step {step} is not a SortServer handoff "
+                f"(kind={extra.get('kind')!r})")
+        metas = extra["requests"]
+        names: list[str] = []
+        for i, m in enumerate(metas):
+            names += [f"req{i}_x", f"req{i}_key"]
+            if m["has_state"]:
+                names += [f"req{i}_orders", f"req{i}_keys",
+                          f"req{i}_alive", f"req{i}_losses"]
+                if m["has_done"]:
+                    names.append(f"req{i}_done")
+                if m["has_ctrl"]:
+                    names += [f"req{i}_ctrl_{f}"
+                              for f in AdaptiveController._STATE_FIELDS]
+        # int placeholder leaves carry no dtype, so restore() returns
+        # the arrays exactly as saved — no cast on the resume path.
+        arrays, _ = mgr.restore({k: 0 for k in names}, step)
+        now = time.monotonic()
+        reqs = []
+        for i, m in enumerate(metas):
+            req = _SortRequest(
+                x=arrays[f"req{i}_x"], hw=tuple(m["hw"]), d=int(m["d"]),
+                key=arrays[f"req{i}_key"], future=Future(),
+                priority=int(m["priority"]), seq=int(m["seq"]),
+                deadline=(None if m["deadline_left"] is None
+                          else now + float(m["deadline_left"])),
+                submitted=now, progress=int(m["progress"]),
+                attempts=int(m["attempts"]), norm=float(m["norm"]))
+            if m["has_state"]:
+                req.orders = arrays[f"req{i}_orders"]
+                req.keys = arrays[f"req{i}_keys"]
+                req.alive = arrays[f"req{i}_alive"]
+                req.losses = arrays[f"req{i}_losses"]
+                if m["has_done"]:
+                    req.done_mask = arrays[f"req{i}_done"].astype(bool)
+                if m["has_ctrl"]:
+                    from repro.core.shufflesoftsort import (
+                        make_adaptive_controller,
+                    )
+                    ctrl = make_adaptive_controller(
+                        self.cfg, len(req.losses), req.x.shape[0],
+                        seg_len=self.seg_len)
+                    ctrl.load_state_dict(
+                        {f: arrays[f"req{i}_ctrl_{f}"]
+                         for f in AdaptiveController._STATE_FIELDS})
+                    req.ctrl = ctrl
+            reqs.append(req)
+        return WarmHandoff(requests=reqs, rng_state=extra["rng_state"],
+                           seq=int(extra["seq"]))
 
     # ---- resolution bookkeeping (every future resolves exactly once) ----
 
@@ -430,7 +614,10 @@ class SortServer:
                 continue
             if not did_work:
                 time.sleep(0.02)              # pending all in backoff
-        self._reject_all(ServerClosed("SortServer closed"))
+        # Warm restart: a preempted server leaves its in-flight requests
+        # intact for close(drain=False) to hand off.
+        if not self._preempt:
+            self._reject_all(ServerClosed("SortServer closed"))
 
     def _admit(self, req: _SortRequest):
         """First admission: derive restart keys + engine state.  Restart
@@ -613,6 +800,18 @@ class SortServer:
             o, k, l = np.asarray(o), np.asarray(k), np.asarray(l)
         except Exception as e:
             self._on_failure(reqs, e)
+            return
+        # Divergence sentinel: a non-finite loss (or soft-sort key) must
+        # never commit into request state — route it through the retry
+        # path as a typed NumericalDivergence BEFORE the commit below,
+        # so the re-dispatch replays from the last finite boundary.
+        if not np.isfinite(l).all() or (self.adaptive
+                                        and not np.isfinite(w).all()):
+            from repro.core.shufflesoftsort import NumericalDivergence
+            self._on_failure(reqs, NumericalDivergence(
+                f"non-finite loss in serving dispatch (regime {regime})",
+                round=int(progress.min()),
+                dtype=str(self.cfg.compute_dtype), context="serving"))
             return
         dt = time.perf_counter() - t0
         self._record_timing(dt, self.seg_len * bucket)

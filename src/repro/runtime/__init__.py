@@ -1,5 +1,13 @@
 from repro.runtime.checkpoint import CheckpointManager  # noqa: F401
-from repro.runtime.fault_tolerance import TrainSupervisor  # noqa: F401
+from repro.runtime.anneal_checkpoint import AnnealCheckpointer  # noqa: F401
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    AnnealSupervisor,
+    DivergencePolicy,
+    FaultInjector,
+    RetryPolicy,
+    TrainSupervisor,
+    WorkerFailure,
+)
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
 from repro.runtime.compression import (  # noqa: F401
     CompressionState,

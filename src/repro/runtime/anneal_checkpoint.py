@@ -1,0 +1,120 @@
+"""Rung-boundary checkpointing for the annealing engines.
+
+``AnnealCheckpointer`` is the thin persistence layer behind the
+``checkpoint_dir=`` / ``resume=`` knobs on ``shuffle_soft_sort``,
+``shuffle_soft_sort_batched``, and ``restart_tournament``: at each rung
+boundary the engine hands it a flat ``{name: ndarray}`` snapshot of the
+full per-instance carry (shuffle orders, chained PRNG keys, executed
+loss traces, tournament alive sets, adaptive-controller state) plus a
+small JSON ``meta`` record (engine kind, round/rung position, structural
+fingerprint), and it writes them through ``CheckpointManager`` — so the
+anneal inherits the same atomic tmp-then-rename publish, manifest,
+keep-k GC, and resume-latest semantics the LM trainer already has.
+
+Why a flat dict and not the engines' pytrees: the state a resumed run
+needs is exactly what crosses the rung boundary, which the PR 6 segment
+seam made small and explicit — N int32 orders and a (2,) uint32 key per
+instance, NOT the inner-loop ``w``/Adam moments (the trainer
+re-initializes ``w = arange(N)`` every round, so the carry between
+rounds is only ``order``/``key``; snapshotting at rung boundaries
+captures the complete state by construction).  Flat string keys also
+survive the manifest round-trip without a treedef parser: ``restore``
+rebuilds ``like`` from the manifest's recorded key list, and dict
+flattening is key-sorted on both sides.
+
+Structural fingerprint: ``meta`` fields listed in ``expect`` at restore
+time must match exactly (engine kind, rounds, N, instance count,
+schedule, grid) — resuming a checkpoint against a different problem is
+a hard error, not silent corruption.  Deliberately NOT fingerprinted:
+``compute_dtype`` / ``tau_end`` / ``band``, because the divergence
+graceful-degradation ladder (``runtime.fault_tolerance
+.DivergencePolicy``) resumes the same run under an adjusted config.
+The full config repr is stored for audit.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def _jsonable(v: Any) -> Any:
+    """Normalize a meta value to what a JSON round-trip returns, so
+    fingerprint comparison is layout-stable (tuples become lists, numpy
+    scalars become Python scalars)."""
+    return json.loads(json.dumps(v, default=lambda o: (
+        o.item() if isinstance(o, np.generic) else list(o))))
+
+
+class AnnealCheckpointer:
+    """Flat-dict checkpoint store for annealing engine state.
+
+    Synchronous by default: the per-rung state is a few N-sized integer
+    arrays, the write is microseconds next to a rung of device compute,
+    and a synchronous publish means a crash at ANY point leaves either
+    the previous rung's checkpoint or the new one — never a half-written
+    latest.  (``CheckpointManager``'s async path remains available for
+    callers that want it.)
+    """
+
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.mgr = CheckpointManager(directory, keep=keep,
+                                     async_save=async_save)
+
+    # ------------------------------------------------------------- save
+
+    def save(self, round_idx: int, state: dict[str, np.ndarray],
+             meta: dict) -> None:
+        """Publish ``state`` as the checkpoint for rung/round
+        ``round_idx``.  ``state`` must be a flat ``{str: array-like}``
+        dict; ``meta`` must be JSON-serializable."""
+        assert all(isinstance(k, str) for k in state), state.keys()
+        self.mgr.save(int(round_idx),
+                      {k: np.asarray(v) for k, v in state.items()},
+                      extra={"anneal": meta,
+                             "state_keys": sorted(state)})
+
+    def wait(self) -> None:
+        self.mgr.wait()
+
+    # ---------------------------------------------------------- restore
+
+    def latest_round(self) -> Optional[int]:
+        return self.mgr.latest_step()
+
+    def restore_latest(self, expect: dict | None = None):
+        """Load the newest checkpoint, or ``None`` if the directory has
+        none (a fresh ``resume=True`` run starts from scratch — which is
+        what lets a supervisor pass ``resume=True`` unconditionally).
+
+        ``expect`` maps meta field -> required value; a mismatch on any
+        listed field raises ``ValueError`` (wrong problem / engine for
+        this checkpoint directory).
+
+        Returns ``(state, round_idx, meta)``.
+        """
+        self.mgr.wait()
+        step = self.mgr.latest_step()
+        if step is None:
+            return None
+        man = self.mgr.manifest(step)
+        meta = man["extra"]["anneal"]
+        if expect:
+            for k, v in expect.items():
+                if meta.get(k) != _jsonable(v):
+                    raise ValueError(
+                        f"checkpoint at {self.mgr.directory} (round "
+                        f"{step}) does not match this run: meta[{k!r}] "
+                        f"= {meta.get(k)!r}, expected {_jsonable(v)!r}")
+        keys = man["extra"]["state_keys"]
+        # Plain-int like-leaves carry no dtype, so restore returns the
+        # stored arrays uncast — dtypes round-trip exactly, which the
+        # bit-identical-resume contract needs (a uint32 PRNG key cast
+        # through float would be corruption, not restoration).
+        like = {k: 0 for k in keys}
+        state, _ = self.mgr.restore(like, step)
+        return state, int(step), meta

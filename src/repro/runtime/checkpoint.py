@@ -48,6 +48,15 @@ class CheckpointManager:
         self.async_save = async_save
         self._save_thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
+        # A crash mid-save strands its tmp-<step> staging dir (the
+        # atomic publish is the rename; anything still named tmp- never
+        # published).  Sweep them at open so a resumed run doesn't
+        # accumulate garbage or trip over a half-written staging dir of
+        # its own step number.  One manager owns a directory at a time.
+        for name in os.listdir(directory):
+            if name.startswith("tmp-"):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # ----------------------------------------------------------- saving
 
@@ -123,6 +132,13 @@ class CheckpointManager:
         final = os.path.join(self.directory, f"step-{step:09d}")
         data = np.load(os.path.join(final, "arrays.npz"))
         flat_like, treedef = jax.tree.flatten(like)
+        saved = self.manifest(step).get("num_leaves")
+        if saved is not None and saved != len(flat_like):
+            raise ValueError(
+                f"checkpoint step {step} in {self.directory} holds "
+                f"{saved} leaves but `like` has {len(flat_like)} — the "
+                f"state layout changed since this checkpoint was "
+                f"written; restore with the layout it was saved under")
         flat = [data[f"leaf_{i:05d}"] for i in range(len(flat_like))]
         flat = [np.asarray(a, dtype=l.dtype) if hasattr(l, "dtype") else a
                 for a, l in zip(flat, flat_like)]

@@ -21,8 +21,13 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import threading
 import time
 from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
 
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.straggler import StragglerMonitor
@@ -83,15 +88,27 @@ class FaultInjector:
         self.calls = 0
         self.faults = 0
         self.delays = 0
+        # SortServer dispatches from worker threads; unguarded += on the
+        # counters races (two dispatches can draw the same index and the
+        # chaos schedule double-fires or skips).  The lock covers only
+        # index assignment + counting — the injected sleep and the
+        # wrapped engine run outside it, so injection never serializes
+        # the dispatches it is perturbing.
+        self._lock = threading.Lock()
 
     def __call__(self, *args, **kwargs):
-        i = self.calls
-        self.calls += 1
-        if i in self.delay_calls:
-            self.delays += 1
-            self.sleep_fn(self.delay_calls[i])
-        if i in self.fail_calls:
-            self.faults += 1
+        with self._lock:
+            i = self.calls
+            self.calls += 1
+            delay = self.delay_calls.get(i)
+            fail = i in self.fail_calls
+            if delay is not None:
+                self.delays += 1
+            if fail:
+                self.faults += 1
+        if delay is not None:
+            self.sleep_fn(delay)
+        if fail:
             raise self.exc_type(f"injected fault at dispatch {i}")
         return self.engine_fn(*args, **kwargs)
 
@@ -124,6 +141,11 @@ class TrainSupervisor:
         """Run to ``start_step + num_steps``, surviving step failures."""
         step = start_step
         target = start_step + num_steps
+        # Host snapshot of the initial state: a failure BEFORE the first
+        # checkpoint restarts from here.  Without it the retry loop kept
+        # the partially-advanced state while resetting only the step
+        # counter — a silent divergence from a clean run.
+        init_state = jax.tree.map(np.asarray, state)
         # resume from a newer checkpoint if one exists
         latest = self.ckpt.latest_step()
         if latest is not None and latest > step:
@@ -157,6 +179,7 @@ class TrainSupervisor:
                 if latest is None:
                     log.warning("failure before first checkpoint; "
                                 "restarting from initial state")
+                    state = jax.tree.map(np.array, init_state)
                     step = start_step
                     continue
                 self.ckpt.wait()
@@ -166,3 +189,136 @@ class TrainSupervisor:
                          step, self.restarts)
         self.ckpt.wait()
         return state, step
+
+
+@dataclasses.dataclass(frozen=True)
+class DivergencePolicy:
+    """Graceful-degradation ladder for ``NumericalDivergence`` failures.
+
+    Each divergence event consumes ONE rung of the ladder, in order:
+
+      1. ``promote_f32`` — if the run was computing in bfloat16, retry
+         the remaining rounds in float32 (the usual cure: bf16's 8-bit
+         mantissa under-resolves small loss deltas at cold tau).
+      2. ``tau_floor`` — clamp ``tau_end`` up to the floor; an
+         over-aggressive anneal drives the softmax logits ``w / tau``
+         to overflow before the permutation has locked in.
+      3. ``widen_band`` — double an explicit band half-width (or drop
+         an ``"auto"`` band back to dense): a too-narrow band can strand
+         mass outside the window and zero out rows.
+
+    ``apply`` returns the degraded config plus a human-readable
+    description, or ``None`` when no rung is applicable — the caller
+    (``AnnealSupervisor``) re-raises the original divergence then.
+    Retries restart from the last committed rung checkpoint, so the
+    ladder never repeats completed work (EXPERIMENTS.md §Robustness).
+    """
+    promote_f32: bool = True
+    tau_floor: float = 0.05
+    widen_band: bool = True
+    max_fallbacks: int = 3
+
+    def apply(self, cfg, failure) -> Optional[tuple[Any, str]]:
+        if self.promote_f32 and cfg.compute_dtype == "bfloat16":
+            return (dataclasses.replace(cfg, compute_dtype="float32"),
+                    "promoted compute_dtype bfloat16 -> float32")
+        if self.tau_floor and cfg.tau_end < self.tau_floor:
+            return (dataclasses.replace(cfg, tau_end=float(self.tau_floor)),
+                    f"clamped tau_end {cfg.tau_end:g} -> {self.tau_floor:g}")
+        if self.widen_band and cfg.band is not None:
+            if cfg.band == "auto":
+                return (dataclasses.replace(cfg, band=None),
+                        "dropped band 'auto' -> dense")
+            return (dataclasses.replace(cfg, band=int(cfg.band) * 2),
+                    f"widened band {cfg.band} -> {int(cfg.band) * 2}")
+        return None
+
+
+class AnnealSupervisor:
+    """Checkpoint/restart driver for the annealing engines — the sort
+    path's sibling of ``TrainSupervisor``.
+
+    Wraps one of the resumable entry points
+    (``shuffle_soft_sort_batched`` by default; ``restart_tournament``
+    and ``shuffle_soft_sort`` share the knob contract) and supervises a
+    run to completion:
+
+    * **Worker failures** (``failure_types``) restart the engine with
+      ``resume=True`` under a ``RetryPolicy`` budget — the engine
+      replays from its last committed rung-boundary checkpoint, and
+      because rung carries are complete (orders + PRNG keys + losses +
+      controller state), the finished run is bit-identical per seed to
+      an uninterrupted one (tests/test_checkpointing.py kill-at-any-rung
+      sweep).
+    * **Numerical divergences** consume rungs of an optional
+      ``DivergencePolicy`` ladder instead of the retry budget; each
+      fallback re-runs only the rounds after the last finite rung,
+      with the degraded config recorded in ``stats["fallbacks"]``.
+
+    The supervisor owns no engine state — the checkpoint directory IS
+    the state, which is what makes the restart path preemption-safe:
+    kill the process anywhere and a new supervisor over the same
+    directory continues the run.
+    """
+
+    def __init__(self, run_fn: Optional[Callable] = None, *,
+                 checkpoint_dir: str,
+                 retry: Optional[RetryPolicy] = None,
+                 degrade: Optional[DivergencePolicy] = None,
+                 failure_types: tuple = (WorkerFailure,),
+                 sleep_fn: Callable[[float], None] = time.sleep):
+        if run_fn is None:
+            from repro.core.shufflesoftsort import shuffle_soft_sort_batched
+            run_fn = shuffle_soft_sort_batched
+        self.run_fn = run_fn
+        self.checkpoint_dir = checkpoint_dir
+        self.retry = retry or RetryPolicy()
+        self.degrade = degrade
+        self.failure_types = tuple(failure_types)
+        self.sleep_fn = sleep_fn
+        self.stats: dict[str, Any] = {
+            "attempts": 0, "restarts": 0, "fallbacks": []}
+        self.history: list[dict] = []
+
+    def run(self, xs, hw, cfg, **kwargs):
+        """Run ``run_fn(xs, hw, cfg, ...)`` to completion, restarting
+        from the latest rung checkpoint after each supervised failure.
+        Extra ``kwargs`` are forwarded verbatim (engine selection knobs,
+        ``rung_hook`` for chaos tests, ...)."""
+        from repro.core.shufflesoftsort import NumericalDivergence
+        cfg_cur = cfg
+        restarts = 0
+        while True:
+            self.stats["attempts"] += 1
+            try:
+                return self.run_fn(xs, hw, cfg_cur,
+                                   checkpoint_dir=self.checkpoint_dir,
+                                   resume=True, **kwargs)
+            except NumericalDivergence as e:
+                n_fb = len(self.stats["fallbacks"])
+                fallback = None
+                if (self.degrade is not None
+                        and n_fb < self.degrade.max_fallbacks):
+                    fallback = self.degrade.apply(cfg_cur, e)
+                if fallback is None:
+                    raise
+                cfg_cur, desc = fallback
+                self.stats["fallbacks"].append(desc)
+                self.history.append({
+                    "event": "divergence", "round": e.round, "tau": e.tau,
+                    "dtype": e.dtype, "fallback": desc})
+                log.warning("divergence at round %s (tau=%s, %s): %s",
+                            e.round, e.tau, e.dtype, desc)
+            except self.failure_types as e:
+                restarts += 1
+                self.stats["restarts"] = restarts
+                self.history.append({"event": "failure", "error": str(e)})
+                if restarts > self.retry.max_retries:
+                    raise RuntimeError(
+                        f"exceeded {self.retry.max_retries} restarts"
+                    ) from e
+                delay = self.retry.backoff(restarts)
+                if delay:
+                    self.sleep_fn(delay)
+                log.info("restarting after failure (%d restarts): %s",
+                         restarts, e)

@@ -1,0 +1,357 @@
+"""Preemption-safety suite: rung-boundary checkpoints, AnnealSupervisor
+chaos, and numerical-divergence sentinels (EXPERIMENTS.md §Robustness).
+
+The central claim is proven the same way the engine-equivalence claims
+are: bit-exactly.  For every engine (sequential, vmap, shard_map mesh,
+tournament, adaptive) the kill-at-any-rung sweep injects a
+``WorkerFailure`` at EVERY rung index in turn — via a ``FaultInjector``
+wrapped around the engine's ``rung_hook``, which fires at the top of a
+rung segment BEFORE dispatch, i.e. exactly where a preemption lands —
+and asserts the supervised resume finishes with results identical to an
+uninterrupted run: same orders, same loss traces (NaN pattern included),
+same survivor sets, same rounds executed.  No tolerance, no "close
+enough": a resumed anneal IS the anneal.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.shufflesoftsort import (
+    NumericalDivergence,
+    ShuffleSoftSortConfig,
+    restart_tournament,
+    shuffle_soft_sort,
+    shuffle_soft_sort_batched,
+)
+from repro.launch.mesh import make_sort_mesh
+from repro.runtime.anneal_checkpoint import AnnealCheckpointer
+from repro.runtime.fault_tolerance import (
+    AnnealSupervisor,
+    DivergencePolicy,
+    FaultInjector,
+    RetryPolicy,
+    WorkerFailure,
+)
+
+N, HW, D = 16, (4, 4), 2
+CFG = ShuffleSoftSortConfig(rounds=4, inner_steps=2, chunk=16)
+ACFG = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=16,
+                             schedule="adaptive", patience=1,
+                             plateau_rtol=1.0, adapt_every=2)
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="elastic-resume test needs >= 8 (forced host) devices")
+
+
+def _x(seed=0, b=None):
+    rng = np.random.default_rng(seed)
+    shape = (N, D) if b is None else (b, N, D)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def _fast_retry():
+    return RetryPolicy(max_retries=3, backoff_base_s=0.0)
+
+
+def _count_rungs(run):
+    """Number of rung_hook firings in an uninterrupted run."""
+    calls = []
+    run(rung_hook=calls.append)
+    return len(calls)
+
+
+# ------------------------------------------------- checkpointer unit tests
+
+def test_anneal_checkpointer_roundtrip(tmp_path):
+    ck = AnnealCheckpointer(str(tmp_path))
+    state = {"orders": np.arange(N, dtype=np.int32),
+             "keys": np.array([3, 5], np.uint32),
+             "losses": np.array([1.5, np.nan], np.float32)}
+    ck.save(2, state, meta={"engine": "test", "rounds": 4})
+    ck.save(3, {k: v + 0 for k, v in state.items()},
+            meta={"engine": "test", "rounds": 4})
+    assert ck.latest_round() == 3
+    got, rnd, meta = ck.restore_latest(expect={"engine": "test"})
+    assert rnd == 3 and meta["rounds"] == 4
+    for k in state:
+        assert got[k].dtype == state[k].dtype, k   # exact dtype round-trip
+        np.testing.assert_array_equal(got[k], state[k])
+
+
+def test_anneal_checkpointer_empty_dir_returns_none(tmp_path):
+    assert AnnealCheckpointer(str(tmp_path)).restore_latest() is None
+
+
+def test_anneal_checkpointer_fingerprint_mismatch(tmp_path):
+    ck = AnnealCheckpointer(str(tmp_path))
+    ck.save(1, {"orders": np.arange(N)}, meta={"engine": "batched",
+                                               "n": N, "rounds": 4})
+    with pytest.raises(ValueError, match="does not match"):
+        ck.restore_latest(expect={"rounds": 8})
+    with pytest.raises(ValueError, match="does not match"):
+        ck.restore_latest(expect={"engine": "sequential"})
+    # matching fingerprint loads fine
+    assert ck.restore_latest(expect={"engine": "batched", "n": N})
+
+
+def test_resume_against_wrong_problem_is_typed_error(tmp_path):
+    key = jax.random.PRNGKey(0)
+    shuffle_soft_sort(_x(), HW, CFG, key=key,
+                      checkpoint_dir=str(tmp_path), checkpoint_every=1)
+    wrong = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=16)
+    with pytest.raises(ValueError, match="does not match"):
+        shuffle_soft_sort(_x(), HW, wrong, key=key,
+                          checkpoint_dir=str(tmp_path), resume=True)
+
+
+# --------------------------------------------- kill-at-any-rung sweeps
+
+def _sweep(run, result_fields, tmp_path):
+    """Reference an uninterrupted run, then kill at every rung index and
+    assert the supervised resume is bit-identical on every field."""
+    ref = result_fields(run())
+    n_rungs = _count_rungs(run)
+    assert n_rungs >= 2, n_rungs
+    for k in range(n_rungs):
+        hook = FaultInjector(lambda r: None, fail_calls={k})
+        sup = AnnealSupervisor(
+            lambda xs, hw, cfg, **kw: run(**kw),
+            checkpoint_dir=str(tmp_path / f"kill{k}"), retry=_fast_retry())
+        got = result_fields(sup.run(None, HW, CFG, rung_hook=hook))
+        assert hook.faults == 1, (k, hook.faults)
+        assert sup.stats["restarts"] == 1
+        for name, a in ref.items():
+            np.testing.assert_array_equal(
+                a, got[name], err_msg=f"kill at rung {k}: field {name}")
+
+
+def test_sequential_kill_at_every_rung(tmp_path):
+    x, key = _x(), jax.random.PRNGKey(7)
+
+    def run(**kw):
+        return shuffle_soft_sort(x, HW, CFG, key=key,
+                                 checkpoint_every=1, **kw)
+
+    _sweep(run, lambda r: {"order": np.asarray(r[0]),
+                           "losses": np.asarray(r[2])}, tmp_path)
+
+
+@pytest.mark.parametrize("use_mesh", [False, True],
+                         ids=["vmap", "mesh"])
+def test_batched_kill_at_every_rung(tmp_path, use_mesh):
+    xs, key = _x(1, b=3), jax.random.PRNGKey(11)
+    mesh = make_sort_mesh() if use_mesh else None
+
+    def run(**kw):
+        return shuffle_soft_sort_batched(xs, HW, CFG, n_restarts=2,
+                                         key=key, mesh=mesh,
+                                         checkpoint_every=1, **kw)
+
+    _sweep(run, lambda r: {"all_orders": r.all_orders,
+                           "all_losses": r.all_losses,
+                           "best_restart": r.best_restart}, tmp_path)
+
+
+def test_adaptive_kill_at_every_rung(tmp_path):
+    xs, key = _x(2, b=3), jax.random.PRNGKey(13)
+
+    def run(**kw):
+        return shuffle_soft_sort_batched(xs, HW, ACFG, n_restarts=2,
+                                         key=key, **kw)
+
+    _sweep(run, lambda r: {"all_orders": r.all_orders,
+                           "all_losses": r.all_losses,
+                           "rounds_executed": r.rounds_executed}, tmp_path)
+
+
+@pytest.mark.parametrize("cfg,kw", [(CFG, dict(n_rungs=2)),
+                                    (ACFG, dict())],
+                         ids=["fixed", "adaptive"])
+def test_tournament_kill_at_every_rung(tmp_path, cfg, kw):
+    x, key = _x(3), jax.random.PRNGKey(17)
+
+    def run(**extra):
+        return restart_tournament(x[None], HW, cfg, n_restarts=4, key=key,
+                                  **kw, **extra)
+
+    def fields(r):
+        out = {"order": r.order, "all_losses": r.all_losses,
+               "rounds_run": np.asarray(r.rounds_run)}
+        for i, surv in enumerate(r.survivors):
+            out[f"survivors_{i}"] = surv
+        return out
+
+    _sweep(run, fields, tmp_path)
+
+
+@multi_device
+def test_elastic_resume_on_different_mesh_size(tmp_path):
+    """Kill on a 2-device mesh, resume on a 4-device mesh: the carry is
+    stored in logical layout, so the finished run must still be
+    bit-identical to an uninterrupted one (on ANY mesh)."""
+    xs, key = _x(4, b=3), jax.random.PRNGKey(19)
+    ref = shuffle_soft_sort_batched(xs, HW, CFG, n_restarts=2, key=key)
+    hook = FaultInjector(lambda r: None, fail_calls={2})
+    with pytest.raises(WorkerFailure):
+        shuffle_soft_sort_batched(
+            xs, HW, CFG, n_restarts=2, key=key, mesh=make_sort_mesh(2),
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            rung_hook=hook)
+    res = shuffle_soft_sort_batched(
+        xs, HW, CFG, n_restarts=2, key=key, mesh=make_sort_mesh(4),
+        checkpoint_dir=str(tmp_path), checkpoint_every=1, resume=True)
+    np.testing.assert_array_equal(ref.all_orders, res.all_orders)
+    np.testing.assert_array_equal(ref.all_losses, res.all_losses)
+
+
+def test_resume_skips_completed_rounds(tmp_path):
+    """A resume must replay only the rounds after the last committed
+    rung — counted via rung_hook firings on the second run."""
+    xs, key = _x(5, b=2), jax.random.PRNGKey(23)
+    shuffle_soft_sort_batched(xs, HW, CFG, key=key,
+                              checkpoint_dir=str(tmp_path),
+                              checkpoint_every=2)
+    calls = []
+    res = shuffle_soft_sort_batched(xs, HW, CFG, key=key,
+                                    checkpoint_dir=str(tmp_path),
+                                    checkpoint_every=2, resume=True,
+                                    rung_hook=calls.append)
+    assert calls == []        # fully checkpointed: nothing to replay
+    ref = shuffle_soft_sort_batched(xs, HW, CFG, key=key)
+    np.testing.assert_array_equal(ref.all_orders, res.all_orders)
+
+
+# --------------------------------------------------- divergence sentinels
+
+def test_sentinel_raises_typed_divergence():
+    bad = _x()
+    bad[0, 0] = np.nan
+    with pytest.raises(NumericalDivergence) as ei:
+        shuffle_soft_sort(bad, HW, CFG, key=jax.random.PRNGKey(0))
+    e = ei.value
+    assert e.round == 0
+    assert e.dtype == "float32"
+    assert np.isfinite(e.tau)
+
+
+def test_sentinel_fires_on_batched_and_tournament():
+    bad = _x(1, b=2)
+    bad[1, 3, 1] = np.inf
+    with pytest.raises(NumericalDivergence):
+        shuffle_soft_sort_batched(bad, HW, CFG, key=jax.random.PRNGKey(0))
+    with pytest.raises(NumericalDivergence):
+        restart_tournament(bad, HW, CFG, n_restarts=2, n_rungs=2,
+                           key=jax.random.PRNGKey(0))
+
+
+def test_sentinel_opt_out():
+    bad = _x()
+    bad[0, 0] = np.nan
+    order, _, losses = shuffle_soft_sort(
+        bad, HW, CFG, key=jax.random.PRNGKey(0), check_finite=False)
+    assert len(order) == N                 # ran to completion, unguarded
+    assert not np.isfinite(losses).all()
+
+
+def test_divergence_policy_ladder_order():
+    pol = DivergencePolicy(tau_floor=0.05)
+    cfg = ShuffleSoftSortConfig(rounds=4, compute_dtype="bfloat16",
+                                tau_end=0.01, band=2)
+    err = NumericalDivergence("x")
+    cfg, d1 = pol.apply(cfg, err)
+    assert cfg.compute_dtype == "float32" and "float32" in d1
+    cfg, d2 = pol.apply(cfg, err)
+    assert cfg.tau_end == pytest.approx(0.05) and "tau_end" in d2
+    cfg, d3 = pol.apply(cfg, err)
+    assert cfg.band == 4 and "band" in d3
+    # f32 + clamped tau + dense: no rung applies, ladder exhausted
+    import dataclasses
+    assert pol.apply(dataclasses.replace(cfg, band=None), err) is None
+
+
+def test_divergence_policy_auto_band_drops_to_dense():
+    pol = DivergencePolicy()
+    cfg = ShuffleSoftSortConfig(rounds=4, band="auto")
+    cfg, desc = pol.apply(cfg, NumericalDivergence("x"))
+    assert cfg.band is None and "dense" in desc
+
+
+# ------------------------------------------------------ AnnealSupervisor
+
+def test_supervisor_applies_fallback_ladder(tmp_path):
+    seen = []
+
+    def flaky(xs, hw, cfg, **kw):
+        seen.append(cfg.compute_dtype)
+        if cfg.compute_dtype == "bfloat16":
+            raise NumericalDivergence("overflow", round=2, tau=0.25,
+                                      dtype="bfloat16")
+        return {"dtype": cfg.compute_dtype}
+
+    sup = AnnealSupervisor(flaky, checkpoint_dir=str(tmp_path),
+                           degrade=DivergencePolicy())
+    out = sup.run(None, HW, ShuffleSoftSortConfig(
+        rounds=4, compute_dtype="bfloat16"))
+    assert out["dtype"] == "float32"
+    assert seen == ["bfloat16", "float32"]
+    assert len(sup.stats["fallbacks"]) == 1
+    assert sup.history[0]["round"] == 2
+
+
+def test_supervisor_reraises_divergence_without_policy(tmp_path):
+    def diverge(xs, hw, cfg, **kw):
+        raise NumericalDivergence("boom")
+
+    sup = AnnealSupervisor(diverge, checkpoint_dir=str(tmp_path))
+    with pytest.raises(NumericalDivergence):
+        sup.run(None, HW, CFG)
+
+
+def test_supervisor_exhausts_retry_budget(tmp_path):
+    def always_fail(xs, hw, cfg, **kw):
+        raise WorkerFailure("down")
+
+    sleeps = []
+    sup = AnnealSupervisor(
+        always_fail, checkpoint_dir=str(tmp_path),
+        retry=RetryPolicy(max_retries=2, backoff_base_s=0.01),
+        sleep_fn=sleeps.append)
+    with pytest.raises(RuntimeError, match="exceeded 2 restarts"):
+        sup.run(None, HW, CFG)
+    assert sup.stats["attempts"] == 3
+    assert sleeps == [0.01, 0.02]          # exponential backoff observed
+
+
+def test_supervisor_divergence_mid_run_resumes_from_checkpoint(tmp_path):
+    """A real (injected-NaN) divergence mid-anneal: the supervisor
+    degrades the config and the retry replays only from the last finite
+    rung — the engine-level restore path, not a from-scratch rerun."""
+    xs, key = _x(6, b=2), jax.random.PRNGKey(29)
+    state = {"fired": False}
+
+    def hook(r):
+        if r >= 2 and not state["fired"]:
+            state["fired"] = True
+            raise NumericalDivergence("injected", round=r, tau=0.1,
+                                      dtype="float32")
+
+    sup = AnnealSupervisor(
+        checkpoint_dir=str(tmp_path),
+        degrade=DivergencePolicy(tau_floor=0.05),
+        retry=_fast_retry())
+    res = sup.run(xs, HW, ShuffleSoftSortConfig(
+        rounds=4, inner_steps=2, chunk=16, tau_end=0.01),
+        key=key, rung_hook=hook, checkpoint_every=1)
+    assert res.all_orders.shape == (2, 1, N)
+    assert len(sup.stats["fallbacks"]) == 1
+    # rounds 0-1 committed before the divergence were NOT re-run under
+    # the degraded config: the stored trace must match the original
+    # config's first rounds bit-exactly.
+    ref = shuffle_soft_sort_batched(xs, HW, ShuffleSoftSortConfig(
+        rounds=4, inner_steps=2, chunk=16, tau_end=0.01), key=key)
+    np.testing.assert_array_equal(ref.all_losses[:, :, :2],
+                                  res.all_losses[:, :, :2])

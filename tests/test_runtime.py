@@ -9,7 +9,11 @@ import jax.numpy as jnp
 
 from repro.runtime.checkpoint import CheckpointManager
 from repro.runtime.compression import compress_gradients, init_compression
-from repro.runtime.fault_tolerance import TrainSupervisor, WorkerFailure
+from repro.runtime.fault_tolerance import (
+    FaultInjector,
+    TrainSupervisor,
+    WorkerFailure,
+)
 from repro.runtime.straggler import StragglerMonitor
 from repro.runtime.sog_compress import (
     compress_checkpoint,
@@ -62,6 +66,61 @@ def test_checkpoint_async_save(tmp_path):
     mgr.save(5, st)
     mgr.wait()
     assert mgr.latest_step() == 5
+
+
+def test_checkpoint_stale_tmp_swept_on_init(tmp_path):
+    """A crash mid-save strands tmp-<step> staging dirs; opening a
+    manager over the directory must sweep them (they never published,
+    so they are garbage by definition)."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _state())
+    os.makedirs(tmp_path / "tmp-2")
+    with open(tmp_path / "tmp-2" / "arrays.npz", "w") as f:
+        f.write("half-written garbage")
+    mgr2 = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    assert not (tmp_path / "tmp-2").exists()
+    assert mgr2.latest_step() == 1          # published steps untouched
+    restored, _ = mgr2.restore(_state())
+    assert restored is not None
+
+
+def test_checkpoint_restore_num_leaves_mismatch_is_typed(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(1, _state())
+    like = dict(_state(), extra_leaf=jnp.zeros(2))
+    with pytest.raises(ValueError, match="layout changed"):
+        mgr.restore(like)
+
+
+def test_checkpoint_keep_k_gc_under_async_saves(tmp_path):
+    """Keep-k GC with the async writer: save() serializes one in-flight
+    write at a time, so a burst of async saves must still end with
+    exactly the newest k checkpoints on disk, no torn tmp dirs."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=True)
+    st = _state()
+    for s in range(1, 6):
+        mgr.save(s, st)
+    mgr.wait()
+    assert mgr.all_steps() == [4, 5]
+    assert not [n for n in os.listdir(tmp_path) if n.startswith("tmp-")]
+    restored, step = mgr.restore(st)
+    assert step == 5
+
+
+def test_checkpoint_restore_casts_to_like_dtype(tmp_path):
+    """restore() casts each leaf to the like-leaf's dtype when it has
+    one — the mixed-precision resume path — and leaves dtype-less
+    (plain int) like-leaves uncast."""
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    st = {"w": np.arange(4, dtype=np.float32),
+          "k": np.array([1, 2], np.uint32)}
+    mgr.save(1, st)
+    like = {"w": np.zeros(4, np.float64), "k": 0}
+    restored, _ = mgr.restore(like)
+    assert restored["w"].dtype == np.float64       # cast to like
+    assert restored["k"].dtype == np.uint32        # int leaf: uncast
+    np.testing.assert_array_equal(restored["w"], st["w"])
+    np.testing.assert_array_equal(restored["k"], st["k"])
 
 
 def test_checkpoint_resharding_on_load(tmp_path):
@@ -135,6 +194,63 @@ def test_supervisor_resumes_from_existing_checkpoint(tmp_path):
     sup2 = TrainSupervisor(step, lambda s: None, mgr, checkpoint_every=10)
     _, step_idx = sup2.run(state0, 0, 30)
     assert step_idx == 30
+
+
+def test_supervisor_failure_before_first_checkpoint_restores_state(tmp_path):
+    """Regression: a failure BEFORE the first checkpoint used to reset
+    only the step counter while keeping the partially-advanced state —
+    the retried run then advanced the counter state twice for the early
+    steps.  The restart must replay from the INITIAL state."""
+    calls = {"n": 0}
+
+    def counting_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:                # fail before any checkpoint
+            raise WorkerFailure("early failure")
+        return {"count": state["count"] + 1}, {"count": state["count"]}
+
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    sup = TrainSupervisor(counting_step, lambda s: None, mgr,
+                          checkpoint_every=100)
+    state, step_idx = sup.run({"count": jnp.int32(0)}, 0, 10)
+    assert step_idx == 10
+    assert sup.restarts == 1
+    # 2 steps advanced + failed attempt discarded + 10 clean steps:
+    # final count must equal a clean run's, not 2 + 10.
+    assert int(state["count"]) == 10
+
+
+def test_fault_injector_thread_safe():
+    """Concurrent dispatches must draw unique call indices: the chaos
+    schedule fires each injected fault exactly once, and the counters
+    add up, under heavy thread contention."""
+    import threading
+
+    inj = FaultInjector(lambda: "ok", fail_calls={5, 50, 500},
+                        delay_calls={10: 0.0, 100: 0.0})
+    outcomes = {"faults": 0, "ok": 0}
+    lock = threading.Lock()
+
+    def worker():
+        for _ in range(100):
+            try:
+                inj()
+            except WorkerFailure:
+                with lock:
+                    outcomes["faults"] += 1
+            else:
+                with lock:
+                    outcomes["ok"] += 1
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert inj.calls == 800
+    assert inj.faults == 3 and outcomes["faults"] == 3
+    assert inj.delays == 2
+    assert outcomes["ok"] == 797
 
 
 # -------------------------------------------------------------- straggler

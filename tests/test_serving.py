@@ -487,3 +487,129 @@ def test_adaptive_tournament_serving_with_fault_matches_engine():
     assert inj.faults == 1 and server.stats["recoveries"] >= 1
     assert server.stats["culled"] > 0
     _resolution_is_exactly_once(server, [fut])
+
+
+# --------------------------------------------- warm restart (preemption)
+
+def test_warm_restart_resolves_in_flight_futures_bit_identically():
+    """close(drain=False) mid-anneal hands every unresolved request to a
+    successor server, which finishes it from its last committed round
+    boundary: the ORIGINAL futures resolve exactly once, bit-identical
+    to uninterrupted sequential runs."""
+    from repro.launch.serve import WarmHandoff
+
+    xs = _problems(3, seed=31)
+    keys = [jax.random.PRNGKey(40 + i) for i in range(3)]
+    server = SortServer(HW, d=D, cfg=CFG, max_batch=8, autostart=False)
+    futs = [server.submit(x, key=k) for x, k in zip(xs, keys)]
+    server._tick()
+    server._tick()                         # all requests mid-anneal
+    handoff = server.close(drain=False)
+    assert isinstance(handoff, WarmHandoff)
+    assert len(handoff.requests) == 3      # nothing resolved yet
+    assert not any(f.done() for f in futs)
+    assert all(r.progress > 0 for r in handoff.requests)
+
+    server2 = SortServer(HW, d=D, cfg=CFG, max_batch=8, autostart=False,
+                         resume=handoff)
+    assert server2.stats["resumed"] == 3
+    _drain(server2)
+    server2.close()
+    for f, x, k in zip(futs, xs, keys):
+        order, srt, losses = f.result(timeout=0)
+        o_ref, s_ref, l_ref = shuffle_soft_sort(x, HW, CFG, key=k)
+        np.testing.assert_array_equal(order, o_ref)
+        np.testing.assert_array_equal(losses, np.asarray(l_ref))
+    # exactly once, ledger split across the two generations
+    assert all(f.done() for f in futs)
+    terminal = sum(s.stats["completed"] + s.stats["failed"]
+                   + s.stats["deadline_missed"] for s in (server, server2))
+    assert terminal == len(futs)
+
+
+def test_warm_restart_under_live_load_strands_nothing():
+    """Threaded kill: preempt a RUNNING server mid-load; the successor
+    resolves every future (result, never ServerClosed)."""
+    inj = FaultInjector(run_round_segment,
+                        delay_calls={i: 0.03 for i in range(64)})
+    server = SortServer(HW, d=D, cfg=CFG, max_wait_ms=2.0, engine_fn=inj)
+    futs = [server.submit(x, key=jax.random.PRNGKey(60 + i))
+            for i, x in enumerate(_problems(6, seed=33))]
+    time.sleep(0.12)                       # let some dispatches run
+    handoff = server.close(drain=False)
+    assert not any(f.done() and f.exception() is not None for f in futs)
+    server2 = SortServer(HW, d=D, cfg=CFG, max_wait_ms=2.0,
+                         resume=handoff)
+    for f in futs:
+        order, _, losses = f.result(timeout=120)
+        assert order.shape == (N,) and np.isfinite(losses).all()
+    server2.close()
+    done1 = server.stats["completed"]
+    assert done1 + server2.stats["completed"] == len(futs)
+    assert server2.stats["resumed"] == len(handoff.requests)
+    with pytest.raises(ServerClosed):
+        server2.submit(_problems(1)[0])
+
+
+def test_warm_restart_disk_roundtrip_adaptive(tmp_path):
+    """Cross-process resume: the handoff persists to checkpoint_dir and
+    a successor built with resume=<dir> (fresh futures on .resumed)
+    finishes the adaptive requests bit-identical to an uninterrupted
+    server — controller state round-trips through disk exactly."""
+    xs = _problems(3, seed=37)
+    keys = [jax.random.PRNGKey(70 + i) for i in range(3)]
+
+    def reference():
+        srv = SortServer(HW, d=D, cfg=ACFG, max_batch=8, autostart=False)
+        futs = [srv.submit(x, key=k) for x, k in zip(xs, keys)]
+        _drain(srv)
+        srv.close()
+        return [f.result(timeout=0) for f in futs]
+
+    ref = reference()
+    server = SortServer(HW, d=D, cfg=ACFG, max_batch=8, autostart=False,
+                        checkpoint_dir=str(tmp_path))
+    futs = [server.submit(x, key=k) for x, k in zip(xs, keys)]
+    server._tick()                         # one rung committed
+    server.close(drain=False)              # persists to tmp_path
+
+    server2 = SortServer(HW, d=D, cfg=ACFG, max_batch=8, autostart=False,
+                         resume=str(tmp_path))
+    assert not any(f.done() for f in futs)     # gen-1 futures are dead
+    assert len(server2.resumed) == 3
+    _drain(server2)
+    server2.close()
+    got = {r.seq: r.future.result(timeout=0) for r in server2.resumed}
+    for i, (o_ref, s_ref, l_ref) in enumerate(ref):
+        order, srt, losses = got[i]
+        np.testing.assert_array_equal(order, o_ref)
+        np.testing.assert_array_equal(losses, l_ref)
+
+
+def test_dispatch_divergence_sentinel_is_typed_and_exactly_once():
+    """A dispatch returning non-finite losses must never commit: the
+    server retries from the last finite boundary and, with a
+    deterministically-poisoned engine, exhausts the budget into a
+    RequestFailed caused by NumericalDivergence."""
+    from repro.core.shufflesoftsort import NumericalDivergence
+
+    def poisoned(xs, orders, keys, norms, progress, seg_len, **kw):
+        o, k, l = run_round_segment(xs, orders, keys, norms, progress,
+                                    seg_len, **kw)
+        return o, k, np.full_like(np.asarray(l), np.nan)
+
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                        engine_fn=poisoned,
+                        retry=RetryPolicy(max_retries=1,
+                                          backoff_base_s=0.0))
+    fut = server.submit(_problems(1, seed=41)[0],
+                        key=jax.random.PRNGKey(5))
+    for _ in range(8):
+        server._tick()
+        time.sleep(0.001)
+    server.close()
+    assert fut.done()
+    exc = fut.exception()
+    assert isinstance(exc, RequestFailed)
+    assert isinstance(exc.__cause__, NumericalDivergence)
+    _resolution_is_exactly_once(server, [fut])

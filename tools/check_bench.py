@@ -49,7 +49,13 @@ Bench-specific checks:
     requests`` — a committed serving row that leaks or double-counts a
     request is a scheduler bug, not a measurement.  Fault-scenario rows
     (``injected_faults > 0``) must additionally show the recovery
-    machinery engaging: ``retries + failed >= 1``.
+    machinery engaging: ``retries + failed >= 1``.  Warm-restart rows
+    (``"scenario": "preempt"``) are gated on the cross-generation
+    ledger: at least one request was actually in flight at the kill
+    (``preempted_inflight >= 1``), every one of them was adopted by the
+    successor (``resumed_requests == preempted_inflight``), and the two
+    generations' completions partition the total
+    (``completed_gen1 + completed_gen2 == completed``).
 
 Usage (CI runs exactly this, see .github/workflows/ci.yml):
 
@@ -111,6 +117,11 @@ SERVING_CELL_KEYS = ("scenario", "requests", "arrival_rate_hz",
                      "p50_ms", "p99_ms", "deadline_miss_rate", "retries",
                      "recoveries", "stragglers", "batches", "mean_batch",
                      "injected_faults", "injected_delays")
+
+# Warm-restart ("preempt") serving rows: the kill-and-resume ledger a
+# committed row must balance across the two server generations.
+SERVING_PREEMPT_KEYS = ("preempted_inflight", "resumed_requests",
+                        "completed_gen1", "completed_gen2")
 
 AUTOTUNE_CELL_KEYS = ("tier", "N", "d", "K", "dtype", "backend", "winner",
                       "winner_s", "candidate_s")
@@ -263,6 +274,31 @@ def _check_serving_cells(path, doc, cells, errors):
             errors.append(
                 f"{path}: cells[{i}] injected faults but neither retried "
                 "nor failed — the recovery path never engaged")
+        if cell.get("scenario") == "preempt":
+            pre = {k: cell.get(k) for k in SERVING_PREEMPT_KEYS}
+            if not all(isinstance(v, int) and v >= 0
+                       for v in pre.values()):
+                errors.append(
+                    f"{path}: cells[{i}] preempt columns must be "
+                    f"non-negative ints, got {pre}")
+                continue
+            if pre["preempted_inflight"] < 1:
+                errors.append(
+                    f"{path}: cells[{i}] preempt row with no in-flight "
+                    "requests at the kill — the scenario never "
+                    "exercised the warm restart")
+            if pre["resumed_requests"] != pre["preempted_inflight"]:
+                errors.append(
+                    f"{path}: cells[{i}] leaked preempted requests: "
+                    f"resumed_requests = {pre['resumed_requests']} != "
+                    f"preempted_inflight = {pre['preempted_inflight']}")
+            if (isinstance(cell.get("completed"), int)
+                    and pre["completed_gen1"] + pre["completed_gen2"]
+                    != cell["completed"]):
+                errors.append(
+                    f"{path}: cells[{i}] generation completions do not "
+                    f"partition the total: {pre['completed_gen1']} + "
+                    f"{pre['completed_gen2']} != {cell['completed']}")
 
 
 def _check_autotune_cells(path, doc, cells, errors):
