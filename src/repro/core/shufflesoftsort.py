@@ -478,6 +478,29 @@ def _open_checkpointer(checkpoint_dir, resume):
     return AnnealCheckpointer(str(checkpoint_dir))
 
 
+def _open_guardrails(guardrail, cfg: "ShuffleSoftSortConfig",
+                     context: str):
+    """Resolve the ``guardrail=`` knob to a ``GuardrailMonitor`` (or
+    None).  Accepts a ``GuardrailPolicy`` (a fresh monitor is built for
+    this run) or an existing monitor (callers that want to read
+    incident history afterwards).  Imported lazily, like
+    ``_open_checkpointer`` — core stays importable without the runtime
+    package on the path."""
+    if guardrail is None:
+        return None
+    from repro.runtime.guardrails import GuardrailMonitor, GuardrailPolicy
+    if isinstance(guardrail, GuardrailMonitor):
+        return guardrail if guardrail.active else None
+    if not isinstance(guardrail, GuardrailPolicy):
+        raise TypeError(
+            "guardrail= must be a GuardrailPolicy or GuardrailMonitor, "
+            f"got {guardrail!r}")
+    if guardrail.mode == "off":
+        return None
+    return GuardrailMonitor(guardrail, context=context,
+                            dtype=cfg.compute_dtype)
+
+
 def _checkpoint_edges(rounds: int, every: int) -> list[int]:
     """Rung-boundary rounds at which the fixed engines checkpoint:
     every ``every`` rounds, with a final edge at ``rounds``."""
@@ -508,7 +531,8 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
                             cfg: ShuffleSoftSortConfig, dense_fn, band_fn,
                             mesh, ckpt, resume: bool, every: int,
                             rung_hook, meta: dict,
-                            check_finite: bool = True):
+                            check_finite: bool = True,
+                            band: int | None = None, monitor=None):
     """Fixed-schedule batched run in checkpointed rung segments.
 
     Chains ``_run_segments`` calls across the checkpoint edges — the
@@ -520,11 +544,24 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
     bare directory starts from scratch).  ``rung_hook(start_round)``
     fires before each segment — the chaos harness's kill point.
 
+    With a ``monitor`` (``runtime.guardrails.GuardrailMonitor``) the
+    integrity probes run on each rung's synced state AFTER the finite
+    sentinel and BEFORE ``ckpt.save`` — so the newest checkpoint is
+    always the last *verified* rung, and a violation replays from
+    there.  Shadow-sampled rungs snapshot the rung's input orders/keys
+    to host first (the engines donate their input buffers) and re-run
+    the segment through the pure-jnp oracle tier for comparison.
+
     Returns (orders (BS, N), keys (BS, 2), losses (R, BS) np.float32).
     """
     rounds = int(cfg.rounds)
     start = 0
     parts: list[np.ndarray] = []
+    mon = monitor if (monitor is not None and monitor.active) else None
+    if mon is not None:
+        cfg_o = dataclasses.replace(cfg, use_kernel=False)
+        dense_o = _select_apply_fn(cfg_o)
+        band_o = dense_o if band is None else _select_apply_fn(cfg_o, band)
     if resume and ckpt is not None:
         got = ckpt.restore_latest(_meta_expect(meta))
         if got is not None:
@@ -540,6 +577,11 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
             continue
         if rung_hook is not None:
             rung_hook(start)
+        k_in = o_in = None
+        if mon is not None:
+            k_in = np.asarray(keys)
+            if mon.wants_shadow(start):
+                o_in = np.asarray(orders)
         orders, keys, seg = _run_segments(
             xs_t, orders, keys, taus[start:end], norms_t, start=start,
             switch=switch, hw=hw, cfg=cfg, dense_fn=dense_fn,
@@ -547,6 +589,22 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
         seg_np = np.asarray(seg, np.float32)
         if check_finite:
             _check_finite(seg_np, start, cfg, meta["engine"])
+        if mon is not None:
+            oracle_l = oracle_o = None
+            if o_in is not None:
+                o_sh, _, seg_sh = _run_segments(
+                    xs_t, jnp.asarray(o_in), jnp.asarray(k_in),
+                    taus[start:end], norms_t, start=start, switch=switch,
+                    hw=hw, cfg=cfg_o, dense_fn=dense_o, band_fn=band_o,
+                    mesh=mesh)
+                oracle_l = np.asarray(seg_sh, np.float32)
+                if mon.compare_orders():
+                    oracle_o = np.asarray(o_sh)
+            mon.check_rung(
+                start=start, losses=seg_np, orders=np.asarray(orders),
+                keys_in=k_in, keys_out=np.asarray(keys),
+                seg_len=end - start, tau=float(taus[start]),
+                oracle_losses=oracle_l, oracle_orders=oracle_o)
         parts.append(seg_np)
         if ckpt is not None:
             ckpt.save(end, {"orders": np.asarray(orders),
@@ -733,7 +791,7 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
                   boundary_hook=None, ckpt=None, resume: bool = False,
                   meta: dict | None = None, rung_hook=None,
                   hook_state: dict | None = None,
-                  check_finite: bool = True):
+                  check_finite: bool = True, monitor=None):
     """Host-side adaptive decision loop around the ragged engines.
 
     Each iteration advances every live instance by one ``seg_len`` rung
@@ -770,6 +828,12 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
     dense_fn = _select_apply_fn(cfg)
     band_fn = (dense_fn if ctrl.band is None
                else _select_apply_fn(cfg, ctrl.band))
+    mon = monitor if (monitor is not None and monitor.active) else None
+    if mon is not None:
+        cfg_o = dataclasses.replace(cfg, use_kernel=False)
+        dense_o = _select_apply_fn(cfg_o)
+        band_o = (dense_o if ctrl.band is None
+                  else _select_apply_fn(cfg_o, ctrl.band))
     losses_mat = np.full((bs, cfg.rounds), np.nan, np.float32)
     d_mesh = 1 if mesh is None else mesh.shape["data"]
     device_rounds = 0
@@ -802,17 +866,31 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
         seg_losses = np.empty((live.size, seg), np.float32)
         ws_live = np.empty((live.size, n), np.float32)
         banded_mask = ctrl.banded[live]
+        want_shadow = mon is not None and mon.wants_shadow(exec0)
+        if mon is not None:
+            orders_live = np.empty((live.size, n), np.int32)
+            keys_in = np.asarray(jnp.take(keys, jnp.asarray(live), axis=0))
+        if want_shadow:
+            shadow_l = np.empty((live.size, seg), np.float32)
+            shadow_o = np.empty((live.size, n), np.int32)
         for is_banded in (False, True):
             sel = np.flatnonzero(banded_mask == is_banded)
             if sel.size == 0:
                 continue
             gidx = live[sel]
             rows = jnp.asarray(gidx)
+            tau_rows_g = ctrl.tau_rows(gidx)
+            # Shadow rungs snapshot the group's input carry to host
+            # BEFORE the primary dispatch: the ragged engines donate
+            # their input buffers, so post-hoc reads would be invalid.
+            if want_shadow:
+                o_in = np.asarray(jnp.take(orders, rows, axis=0))
+                k_in = np.asarray(jnp.take(keys, rows, axis=0))
             o, k2, l, w = _ragged_w_run(
                 jnp.take(xs_t, rows, axis=0),
                 jnp.take(orders, rows, axis=0),
                 jnp.take(keys, rows, axis=0),
-                ctrl.tau_rows(gidx),
+                tau_rows_g,
                 jnp.take(norms_t, rows, axis=0),
                 hw=hw, cfg=cfg,
                 apply_fn=band_fn if is_banded else dense_fn, mesh=mesh)
@@ -820,9 +898,32 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
             keys = keys.at[rows].set(k2)
             seg_losses[sel] = np.asarray(l).T
             ws_live[sel] = np.asarray(w)
+            if mon is not None:
+                orders_live[sel] = np.asarray(o)
+            if want_shadow:
+                o_sh, _, l_sh, _ = _ragged_w_run(
+                    jnp.take(xs_t, rows, axis=0), jnp.asarray(o_in),
+                    jnp.asarray(k_in), tau_rows_g,
+                    jnp.take(norms_t, rows, axis=0),
+                    hw=hw, cfg=cfg_o,
+                    apply_fn=band_o if is_banded else dense_o, mesh=mesh)
+                shadow_l[sel] = np.asarray(l_sh).T
+                shadow_o[sel] = np.asarray(o_sh)
             device_rounds += seg * (-(-gidx.size // d_mesh) * d_mesh)
         if check_finite:
             _check_finite(seg_losses.T, exec0, cfg, "adaptive", ws=ws_live)
+        if mon is not None:
+            tau_vec = np.asarray(ctrl.tau_rows(live))[0]
+            mon.check_rung(
+                start=exec0, losses=seg_losses.T, orders=orders_live,
+                keys_in=keys_in,
+                keys_out=np.asarray(
+                    jnp.take(keys, jnp.asarray(live), axis=0)),
+                seg_len=seg, ws=ws_live, tau=tau_vec, band=ctrl.band,
+                banded_mask=banded_mask,
+                oracle_losses=shadow_l.T if want_shadow else None,
+                oracle_orders=(shadow_o if want_shadow
+                               and mon.compare_orders() else None))
         losses_mat[live, exec0:exec0 + seg] = seg_losses
         ctrl.observe(live, seg_losses, ws_live)
         if boundary_hook is not None:
@@ -863,7 +964,8 @@ def rung_aligned_switch(cfg: ShuffleSoftSortConfig, n: int,
 
 def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
                       hw, cfg: ShuffleSoftSortConfig, mesh=None,
-                      regime: str | None = None, with_w: bool = False):
+                      regime: str | None = None, with_w: bool = False,
+                      guardrail=None):
     """Round-boundary join/leave hook for continuous-batching servers.
 
     Runs ``seg_len`` outer rounds on BS flattened instances where
@@ -901,6 +1003,12 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
         it; "dense" / "banded" selects the apply explicitly (adaptive
         schedulers own the grouping).
       with_w:  also return the end-of-segment trained keys.
+      guardrail: optional ``runtime.guardrails.GuardrailPolicy`` (or
+        monitor) — runs the permutation-integrity probes on this
+        segment's results (bijectivity, loss sanity, PRNG key-chain,
+        band-tail audit when ``with_w``, and sampled oracle shadow
+        recompute), raising ``IntegrityViolation`` on corruption.
+        Probes are read-only; results are unchanged.
 
     Returns:
       (orders (BS, N), keys (BS, 2), losses (seg_len, BS)) — plus
@@ -927,13 +1035,16 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
         if regime == "banded" and band is None:
             raise ValueError("regime='banded' requires a resolvable "
                              "cfg.band for this problem size")
-        apply_fn = (_select_apply_fn(cfg, band) if regime == "banded"
+        seg_banded = regime == "banded"
+        apply_fn = (_select_apply_fn(cfg, band) if seg_banded
                     else _select_apply_fn(cfg))
     else:
         switch = rung_aligned_switch(cfg, n, seg_len)
         if band is None or (p + seg_len <= switch).all():
+            seg_banded = False
             apply_fn = _select_apply_fn(cfg)
         elif (p >= switch).all():
+            seg_banded = True
             apply_fn = _select_apply_fn(cfg, band)
         else:
             raise ValueError(
@@ -941,6 +1052,18 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
                 f"regimes across the rung-aligned dense->banded switch "
                 f"{switch}; group instances by regime "
                 f"(rung_aligned_switch)")
+
+    mon = _open_guardrails(guardrail, cfg, "segment")
+    o_in_np = k_in_np = None
+    shadow = False
+    if mon is not None:
+        # Host snapshots BEFORE dispatch: the ragged engines donate
+        # their input orders buffers.  Taken pre-padding so the shadow
+        # recursion sees the caller's exact instance set.
+        o_in_np = np.asarray(orders)
+        k_in_np = np.asarray(keys)
+        xs0, norms0, p0 = xs, norms, p.copy()
+        shadow = mon.wants_shadow(int(p.min()))
 
     bs = xs.shape[0]
     if mesh is not None:
@@ -952,21 +1075,49 @@ def run_round_segment(xs, orders, keys, norms, progress, seg_len: int, *,
             p = np.concatenate([p, np.repeat(p[:1], pad)])
     taus = _tau_schedule(cfg)
     tau_rows = jnp.asarray(taus[p[:, None] + np.arange(seg_len)].T)
+    ws = None
     if with_w:
         if mesh is None:
-            return _run_rounds_ragged_w(xs, orders, keys, tau_rows, norms,
-                                        hw=hw, cfg=cfg, apply_fn=apply_fn)
-        orders, keys, losses, ws = _run_rounds_ragged_w_sharded(
-            xs, orders, keys, tau_rows, norms,
-            mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
-        return orders[:bs], keys[:bs], losses[:, :bs], ws[:bs]
-    if mesh is None:
-        return _run_rounds_ragged(xs, orders, keys, tau_rows, norms,
-                                  hw=hw, cfg=cfg, apply_fn=apply_fn)
-    orders, keys, losses = _run_rounds_ragged_sharded(
-        xs, orders, keys, tau_rows, norms,
-        mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
-    return orders[:bs], keys[:bs], losses[:, :bs]
+            orders, keys, losses, ws = _run_rounds_ragged_w(
+                xs, orders, keys, tau_rows, norms,
+                hw=hw, cfg=cfg, apply_fn=apply_fn)
+        else:
+            orders, keys, losses, ws = _run_rounds_ragged_w_sharded(
+                xs, orders, keys, tau_rows, norms,
+                mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
+            orders, keys = orders[:bs], keys[:bs]
+            losses, ws = losses[:, :bs], ws[:bs]
+    else:
+        if mesh is None:
+            orders, keys, losses = _run_rounds_ragged(
+                xs, orders, keys, tau_rows, norms,
+                hw=hw, cfg=cfg, apply_fn=apply_fn)
+        else:
+            orders, keys, losses = _run_rounds_ragged_sharded(
+                xs, orders, keys, tau_rows, norms,
+                mesh=mesh, hw=hw, cfg=cfg, apply_fn=apply_fn)
+            orders, keys, losses = orders[:bs], keys[:bs], losses[:, :bs]
+    if mon is not None:
+        oracle_l = oracle_o = None
+        if shadow:
+            res_sh = run_round_segment(
+                xs0, o_in_np, k_in_np, norms0, p0, seg_len, hw=hw,
+                cfg=dataclasses.replace(cfg, use_kernel=False),
+                mesh=mesh, regime=regime)
+            oracle_l = np.asarray(res_sh[2], np.float32)
+            if mon.compare_orders():
+                oracle_o = np.asarray(res_sh[0])
+        mon.check_rung(
+            start=int(p0.min()), losses=np.asarray(losses, np.float32),
+            orders=np.asarray(orders), n=n, keys_in=k_in_np,
+            keys_out=np.asarray(keys), seg_len=seg_len,
+            ws=None if ws is None else np.asarray(ws),
+            tau=taus[p0].astype(np.float32),
+            band=band if (seg_banded and ws is not None) else None,
+            oracle_losses=oracle_l, oracle_orders=oracle_o)
+    if with_w:
+        return orders, keys, losses, ws
+    return orders, keys, losses
 
 
 def _tau_schedule(cfg: ShuffleSoftSortConfig) -> np.ndarray:
@@ -1100,6 +1251,7 @@ def shuffle_soft_sort(
     checkpoint_every: int | None = None,
     rung_hook: Optional[Callable[[int], None]] = None,
     check_finite: bool = True,
+    guardrail=None,
 ) -> tuple[np.ndarray, np.ndarray, list[float]]:
     """Sort x (N, d) onto an (h, w) grid.  Returns (order, x[order], losses).
 
@@ -1132,6 +1284,12 @@ def shuffle_soft_sort(
     same seed.  ``rung_hook(start_round)`` fires before each segment
     (the chaos harness's kill point); ``check_finite=False`` disables
     the per-round ``NumericalDivergence`` sentinel.
+
+    ``guardrail=`` (a ``runtime.guardrails.GuardrailPolicy``) runs the
+    permutation-integrity probes at every rung edge — invariant checks
+    plus sampled oracle shadow recompute — raising a typed
+    ``IntegrityViolation`` on silent corruption.  Probes are read-only:
+    a guarded run returns bit-identical results to an unguarded one.
     """
     _check_schedule(cfg)
     if key is None:
@@ -1147,11 +1305,12 @@ def shuffle_soft_sort(
             n_restarts=1, keys=jnp.asarray(key)[None],
             checkpoint_dir=checkpoint_dir, resume=resume,
             checkpoint_every=checkpoint_every, rung_hook=rung_hook,
-            check_finite=check_finite)
+            check_finite=check_finite, guardrail=guardrail)
         executed = int(res.rounds_executed[0, 0])
         return (res.order[0], res.sorted[0],
                 [float(v) for v in res.losses[0][:executed]])
     ckpt = _open_checkpointer(checkpoint_dir, resume)
+    mon = _open_guardrails(guardrail, cfg, "sequential")
     if callback is not None and (ckpt is not None or rung_hook is not None):
         raise ValueError("checkpoint_dir/rung_hook are incompatible with "
                          "the per-round callback stream")
@@ -1170,12 +1329,13 @@ def shuffle_soft_sort(
     start = 0
     every = checkpoint_every or max(1, cfg.rounds // 8)
     meta = _engine_meta("sequential", cfg, n, 1, hw)
-    if ckpt is not None:
+    if ckpt is not None or mon is not None:
         # Normalize a typed key to raw uint32 data so it survives the
         # numpy round-trip (identical stream either way).
         karr = jnp.asarray(key)
         if jnp.issubdtype(karr.dtype, jax.dtypes.prng_key):
             key = jax.random.key_data(karr)
+    if ckpt is not None:
         if resume:
             got = ckpt.restore_latest(_meta_expect(meta))
             if got is not None:
@@ -1184,23 +1344,59 @@ def shuffle_soft_sort(
                 key = jnp.asarray(state["key"])
                 losses = [float(v) for v in state["losses"]]
     edges = set(_checkpoint_edges(cfg.rounds, every))
+    if mon is not None:
+        cfg_o = dataclasses.replace(cfg, use_kernel=False)
+        dense_o = _select_apply_fn(cfg_o)
+        band_o = dense_o if band is None else _select_apply_fn(cfg_o, band)
+    seg_start = start
+    o_snap = k_snap = None
     for r in range(start, cfg.rounds):
         if rung_hook is not None and (r == start or r % every == 0):
             rung_hook(r)
+        if mon is not None and r == seg_start:
+            # Rung-start carry snapshot for the key-chain probe and
+            # (when this rung is sampled) the oracle shadow replay.
+            o_snap = np.asarray(order)
+            k_snap = np.asarray(key)
         key, sub = jax.random.split(key)
         order, loss = _outer_round(
             x, order, sub, jnp.float32(taus[r]), norm,
             hw=hw, cfg=cfg,
             apply_fn=band_fn if r >= switch else dense_fn)
         losses.append(float(loss))
-        if check_finite and not np.isfinite(losses[-1]):
-            raise NumericalDivergence(
-                f"non-finite loss at round {r} (tau~{float(taus[r]):.4g}, "
-                f"compute_dtype={cfg.compute_dtype}, engine=sequential)",
-                round=r, tau=float(taus[r]), dtype=cfg.compute_dtype,
-                context="sequential")
+        if check_finite:
+            # Whole-segment sentinel (shared with the batched engines):
+            # validates every round since the last rung edge, not just
+            # the newest value, so the error pinpoints the FIRST bad
+            # round even if a later one recovered to a finite loss.
+            _check_finite(
+                np.asarray(losses[seg_start:], np.float32)[:, None],
+                seg_start, cfg, "sequential")
         if callback is not None:
             callback(r, np.asarray(order), losses[-1])
+        if mon is not None and (r + 1) in edges:
+            oracle_l = oracle_o = None
+            if mon.wants_shadow(seg_start):
+                o_sh, k_sh = jnp.asarray(o_snap), jnp.asarray(k_snap)
+                shadow_losses = []
+                for rr in range(seg_start, r + 1):
+                    k_sh, sub_sh = jax.random.split(k_sh)
+                    o_sh, l_sh = _outer_round(
+                        x, o_sh, sub_sh, jnp.float32(taus[rr]), norm,
+                        hw=hw, cfg=cfg_o,
+                        apply_fn=band_o if rr >= switch else dense_o)
+                    shadow_losses.append(float(l_sh))
+                oracle_l = np.asarray(shadow_losses, np.float32)
+                if mon.compare_orders():
+                    oracle_o = np.asarray(o_sh)[None]
+            mon.check_rung(
+                start=seg_start,
+                losses=np.asarray(losses[seg_start:], np.float32),
+                orders=np.asarray(order)[None], n=n,
+                keys_in=k_snap[None], keys_out=np.asarray(key)[None],
+                seg_len=r + 1 - seg_start, tau=float(taus[seg_start]),
+                oracle_losses=oracle_l, oracle_orders=oracle_o)
+            seg_start = r + 1
         if ckpt is not None and (r + 1) in edges:
             ckpt.save(r + 1, {"order": np.asarray(order),
                               "key": np.asarray(key),
@@ -1289,6 +1485,7 @@ def shuffle_soft_sort_batched(
     checkpoint_every: int | None = None,
     rung_hook: Optional[Callable[[int], None]] = None,
     check_finite: bool = True,
+    guardrail=None,
 ) -> BatchedSortResult:
     """Sort B problems at once, S random restarts each.
 
@@ -1333,6 +1530,12 @@ def shuffle_soft_sort_batched(
         runs are bit-identical per seed to uninterrupted runs on the
         vmap AND mesh paths — including resume under a different mesh
         size (the carry is stored in logical layout).
+      guardrail: optional ``runtime.guardrails.GuardrailPolicy`` (or an
+        existing monitor) — permutation-integrity probes at every rung
+        boundary, raising ``IntegrityViolation`` on silent corruption.
+        The fixed fast path reroutes through the rung-segmented runner
+        (bit-identical by the segment-chaining contract) so probes see
+        real rung boundaries.
 
     Returns:
       ``BatchedSortResult`` — see its field docs.
@@ -1342,9 +1545,11 @@ def shuffle_soft_sort_batched(
         raise ValueError("callback streaming is not supported on the "
                          "sharded path; use mesh=None")
     ckpt = _open_checkpointer(checkpoint_dir, resume)
-    if callback is not None and (ckpt is not None or rung_hook is not None):
-        raise ValueError("checkpoint_dir/rung_hook are incompatible with "
-                         "the per-round callback stream")
+    mon = _open_guardrails(guardrail, cfg, "batched")
+    if callback is not None and (ckpt is not None or rung_hook is not None
+                                 or mon is not None):
+        raise ValueError("checkpoint_dir/rung_hook/guardrail are "
+                         "incompatible with the per-round callback stream")
     xs, b, s, n, keys, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
     bs = b * s
@@ -1359,7 +1564,7 @@ def shuffle_soft_sort_batched(
             xs_t, orders, keys, norms_t, hw=hw, cfg=cfg, mesh=mesh,
             controller=ctrl, ckpt=ckpt, resume=resume,
             meta=_engine_meta("adaptive", cfg, n, bs, hw),
-            rung_hook=rung_hook, check_finite=check_finite)
+            rung_hook=rung_hook, check_finite=check_finite, monitor=mon)
         all_losses = losses_bs.reshape(b, s, cfg.rounds)
         all_orders = np.asarray(orders).reshape(b, s, n)
         executed = ctrl.executed.reshape(b, s)
@@ -1387,11 +1592,13 @@ def shuffle_soft_sort_batched(
     taus = _tau_schedule(cfg)
 
     if callback is None:
-        if ckpt is not None or rung_hook is not None:
+        if ckpt is not None or rung_hook is not None or mon is not None:
             # Checkpointed path: the same schedule chained across rung
             # segments (bit-identical to the fast path — PR 6's
             # segment-chaining contract), publishing the carry at each
             # edge so a preempted run resumes instead of restarting.
+            # Guardrail monitors ride the same seam: probes need rung-
+            # boundary host syncs, which the fast path doesn't have.
             orders, _, losses_rb = _run_fixed_checkpointed(
                 xs_t, orders, keys, taus, norms_t, switch=switch,
                 hw=hw, cfg=cfg, dense_fn=dense_fn, band_fn=band_fn,
@@ -1399,7 +1606,7 @@ def shuffle_soft_sort_batched(
                 every=checkpoint_every or max(1, cfg.rounds // 8),
                 rung_hook=rung_hook,
                 meta=_engine_meta("batched", cfg, n, bs, hw),
-                check_finite=check_finite)
+                check_finite=check_finite, band=band, monitor=mon)
         else:
             # Fast path: the whole R-round schedule as one scanned
             # device program (two when the band switch splits the
@@ -1517,7 +1724,8 @@ def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
                                  orders, *, hw, cfg, cull_fraction,
                                  n_rungs, mesh, ckpt=None,
                                  resume=False, rung_hook=None,
-                                 check_finite=True) -> TournamentResult:
+                                 check_finite=True,
+                                 monitor=None) -> TournamentResult:
     """Adaptive-schedule tournament: the shared ``_run_adaptive`` loop
     with a cull hook at the rung edges.
 
@@ -1569,7 +1777,8 @@ def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
         xs_t, orders, keys_fl, norms_t, hw=hw, cfg=cfg, mesh=mesh,
         controller=ctrl, boundary_hook=hook, ckpt=ckpt, resume=resume,
         meta=_engine_meta("tournament-adaptive", cfg, n, b * s, hw),
-        rung_hook=rung_hook, hook_state=hstate, check_finite=check_finite)
+        rung_hook=rung_hook, hook_state=hstate, check_finite=check_finite,
+        monitor=monitor)
     # If every restart stopped before a late edge, its hook never fired;
     # the live set was already final, so log it for those rungs too.
     alive = hstate["alive"]
@@ -1612,6 +1821,7 @@ def restart_tournament(
     resume: bool = False,
     rung_hook: Optional[Callable[[int], None]] = None,
     check_finite: bool = True,
+    guardrail=None,
 ) -> TournamentResult:
     """Successive-halving restart scheduler over the batched engine.
 
@@ -1652,6 +1862,7 @@ def restart_tournament(
     assert 0.0 <= cull_fraction < 1.0, cull_fraction
     _check_schedule(cfg)
     ckpt = _open_checkpointer(checkpoint_dir, resume)
+    mon = _open_guardrails(guardrail, cfg, "tournament")
     xs, b, s, n, keys_fl, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
     if cfg.schedule == "adaptive":
@@ -1659,7 +1870,7 @@ def restart_tournament(
             xs, b, s, n, keys_fl, xs_t, norms_t, orders, hw=hw, cfg=cfg,
             cull_fraction=cull_fraction, n_rungs=n_rungs, mesh=mesh,
             ckpt=ckpt, resume=resume, rung_hook=rung_hook,
-            check_finite=check_finite)
+            check_finite=check_finite, monitor=mon)
     dense_fn = _select_apply_fn(cfg)
     band = resolve_band(cfg, n)
     switch = _band_switch_round(cfg, n)
@@ -1697,12 +1908,21 @@ def restart_tournament(
             start = int(m["start"])
             rounds_run = int(m["rounds_run"])
     d_mesh = 1 if mesh is None else mesh.shape["data"]
+    if mon is not None:
+        cfg_o = dataclasses.replace(cfg, use_kernel=False)
+        dense_o = _select_apply_fn(cfg_o)
+        band_o = dense_o if band is None else _select_apply_fn(cfg_o, band)
     for k, end in enumerate(edges):
         if k < k_done:
             continue
         if rung_hook is not None:
             rung_hook(start)
         s_k = alive.shape[1]
+        k_in = o_in = None
+        if mon is not None:
+            k_in = np.asarray(cur["keys"])
+            if mon.wants_shadow(start):
+                o_in = np.asarray(cur["orders"])
         orders_d, keys_d, losses_d = _run_segments(
             cur["xs"], cur["orders"], cur["keys"], taus[start:end],
             cur["norms"], start=start, switch=switch,
@@ -1714,6 +1934,23 @@ def restart_tournament(
         seg = np.asarray(losses_d).T.reshape(b, s_k, end - start)
         if check_finite:
             _check_finite(np.asarray(losses_d), start, cfg, "tournament")
+        if mon is not None:
+            oracle_l = oracle_o = None
+            if o_in is not None:
+                o_sh, _, seg_sh = _run_segments(
+                    cur["xs"], jnp.asarray(o_in), jnp.asarray(k_in),
+                    taus[start:end], cur["norms"], start=start,
+                    switch=switch, hw=hw, cfg=cfg_o, dense_fn=dense_o,
+                    band_fn=band_o, mesh=mesh)
+                oracle_l = np.asarray(seg_sh, np.float32)
+                if mon.compare_orders():
+                    oracle_o = np.asarray(o_sh)
+            mon.check_rung(
+                start=start, losses=np.asarray(losses_d, np.float32),
+                orders=np.asarray(orders_d), keys_in=k_in,
+                keys_out=np.asarray(keys_d), seg_len=end - start,
+                tau=float(taus[start]), oracle_losses=oracle_l,
+                oracle_orders=oracle_o)
         all_losses[np.arange(b)[:, None], alive, start:end] = seg
 
         keep = max(1, int(np.ceil(s_k * (1.0 - cull_fraction))))

@@ -129,6 +129,14 @@ class _SortRequest:                   # tracked in lists via `is`, and the
     keys: np.ndarray | None = None     # (S_live, 2) uint32 chained keys
     alive: np.ndarray | None = None    # (S_live,) original restart idx
     losses: np.ndarray | None = None   # (S, R) f32, NaN where culled
+    # Guardrail state (runtime.guardrails): the request's probe policy
+    # (None = server default at admission), its stateful monitor, the
+    # integrity-strike count, and the self-healed config override a
+    # DivergencePolicy rung installed (None = serve with server cfg).
+    guardrail: object | None = None    # GuardrailPolicy
+    monitor: object | None = None      # GuardrailMonitor (lazy, not saved)
+    strikes: int = 0
+    cfg_override: object | None = None  # ShuffleSoftSortConfig
     # adaptive mode only: the request's plateau controller (indexed by
     # ORIGINAL restart id) and which alive rows have already left the
     # anneal (converged early; frozen, but still winner candidates).
@@ -163,6 +171,10 @@ class WarmHandoff:
     requests: list            # unresolved _SortRequests, seq order
     rng_state: dict           # np.random PCG64 bit-generator state
     seq: int                  # next submission sequence number
+    # When the server's engine_fn is a FaultInjector (chaos tests), its
+    # injection cursor/schedules ride along so a resumed chaos scenario
+    # keeps exact fault accounting (FaultInjector.state_dict()).
+    injector_state: dict | None = None
 
 
 class SortServer:
@@ -244,13 +256,18 @@ class SortServer:
                  retry=None, straggler=None,
                  straggler_recovery: int = 8,
                  checkpoint_dir: str | None = None, resume=None,
-                 engine_fn=None, autostart: bool = True):
+                 engine_fn=None, autostart: bool = True,
+                 guardrail=None, degrade=None):
         from repro.core.shufflesoftsort import (
             ShuffleSoftSortConfig,
             _rung_boundaries,
             run_round_segment,
         )
-        from repro.runtime.fault_tolerance import RetryPolicy
+        from repro.runtime.fault_tolerance import (
+            DivergencePolicy,
+            RetryPolicy,
+        )
+        from repro.runtime.guardrails import GuardrailPolicy
         from repro.runtime.straggler import StragglerMonitor
 
         self.hw = tuple(hw)
@@ -271,6 +288,13 @@ class SortServer:
         self.straggler = straggler or StragglerMonitor()
         self.straggler_recovery = int(straggler_recovery)
         self._engine = engine_fn or run_round_segment
+        if guardrail is not None and not isinstance(guardrail,
+                                                    GuardrailPolicy):
+            raise TypeError(
+                f"guardrail must be a GuardrailPolicy or None, "
+                f"got {guardrail!r}")
+        self.guardrail = guardrail          # server-default probe policy
+        self.degrade = degrade or DivergencePolicy()
 
         rounds = self.cfg.rounds
         self.adaptive = self.cfg.schedule == "adaptive"
@@ -310,6 +334,8 @@ class SortServer:
             "queue_rejected": 0, "retries": 0, "recoveries": 0,
             "stragglers": 0, "culled": 0, "latencies_ms": [],
             "adaptive_exits": 0, "rounds_saved": 0, "resumed": 0,
+            "integrity_violations": 0, "self_heals": 0,
+            "integrity_incidents": [],
             "compile_keys": set(),
         }
         self.events: list[dict] = []
@@ -322,7 +348,7 @@ class SortServer:
         self._dispatch_idx = 0
         self._bucket_cap = self.max_batch
         self._healthy_streak = 0
-        self._switch_cache: dict[int, int] = {}
+        self._switch_cache: dict[tuple, int] = {}
         self.checkpoint_dir = checkpoint_dir
         self.resumed: list[_SortRequest] = []
         if resume is not None:
@@ -345,7 +371,8 @@ class SortServer:
     # ---- client API ------------------------------------------------------
 
     def submit(self, x: np.ndarray, key=None, *, hw=None,
-               priority: int = 0, deadline_s: float | None = None) -> Future:
+               priority: int = 0, deadline_s: float | None = None,
+               guardrail=None) -> Future:
         """Enqueue one (N, d) problem; returns a Future of
         ``(order (N,), sorted (N, d), losses (R,))``.
 
@@ -355,8 +382,17 @@ class SortServer:
         ``deadline_s`` — relative seconds; past it the request is shed
         with ``DeadlineExceeded``.  Missing ``key`` draws from the
         server-owned seeded stream (reproducible per server seed).
+        ``guardrail`` — a per-request ``GuardrailPolicy`` overriding the
+        server default (``GuardrailPolicy(mode="off")`` opts a request
+        out of a guarded server's probes).
         Raises ``QueueFull`` / ``ServerClosed`` synchronously.
         """
+        from repro.runtime.guardrails import GuardrailPolicy
+        if guardrail is not None and not isinstance(guardrail,
+                                                    GuardrailPolicy):
+            raise TypeError(
+                f"guardrail must be a GuardrailPolicy or None, "
+                f"got {guardrail!r}")
         x = np.asarray(x, np.float32)
         req_hw = self.hw if hw is None else tuple(hw)
         if x.ndim != 2 or x.shape[0] != req_hw[0] * req_hw[1]:
@@ -387,7 +423,9 @@ class SortServer:
                 key=np.asarray(key, np.uint32).reshape(2),
                 future=fut, priority=int(priority), seq=self._seq,
                 deadline=None if deadline_s is None else now + deadline_s,
-                submitted=now)
+                submitted=now,
+                guardrail=self.guardrail if guardrail is None
+                else guardrail)
             self._seq += 1
             self.stats["requests"] += 1
             self._pending.append(req)
@@ -425,7 +463,11 @@ class SortServer:
                           key=lambda r: r.seq)
         handoff = WarmHandoff(requests=inflight,
                               rng_state=self._rng.bit_generator.state,
-                              seq=self._seq)
+                              seq=self._seq,
+                              injector_state=(
+                                  self._engine.state_dict()
+                                  if hasattr(self._engine, "state_dict")
+                                  else None))
         self.events.append({"event": "preempt",
                             "inflight": len(inflight)})
         if self.checkpoint_dir is not None:
@@ -441,6 +483,9 @@ class SortServer:
         and their futures resolve from THIS server."""
         self._rng.bit_generator.state = handoff.rng_state
         self._seq = max(self._seq, int(handoff.seq))
+        if (handoff.injector_state is not None
+                and hasattr(self._engine, "load_state_dict")):
+            self._engine.load_state_dict(handoff.injector_state)
         for req in handoff.requests:
             if req.future.done():       # pragma: no cover - defensive
                 continue
@@ -485,6 +530,11 @@ class SortServer:
                 "has_state": has_state,
                 "has_ctrl": req.ctrl is not None,
                 "has_done": req.done_mask is not None,
+                "strikes": int(req.strikes),
+                "guardrail": (None if req.guardrail is None
+                              else dataclasses.asdict(req.guardrail)),
+                "cfg_override": (None if req.cfg_override is None
+                                 else dataclasses.asdict(req.cfg_override)),
             })
         mgr = CheckpointManager(self.checkpoint_dir, keep=1,
                                 async_save=False)
@@ -493,6 +543,7 @@ class SortServer:
             "rng_state": handoff.rng_state,
             "seq": int(handoff.seq),
             "requests": metas,
+            "injector_state": handoff.injector_state,
         })
 
     def _load_handoff(self, path: str) -> WarmHandoff:
@@ -538,6 +589,16 @@ class SortServer:
                           else now + float(m["deadline_left"])),
                 submitted=now, progress=int(m["progress"]),
                 attempts=int(m["attempts"]), norm=float(m["norm"]))
+            req.strikes = int(m.get("strikes", 0))
+            if m.get("guardrail") is not None:
+                from repro.runtime.guardrails import GuardrailPolicy
+                req.guardrail = GuardrailPolicy(**m["guardrail"])
+            if m.get("cfg_override") is not None:
+                from repro.core.shufflesoftsort import (
+                    ShuffleSoftSortConfig,
+                )
+                req.cfg_override = ShuffleSoftSortConfig(
+                    **m["cfg_override"])
             if m["has_state"]:
                 req.orders = arrays[f"req{i}_orders"]
                 req.keys = arrays[f"req{i}_keys"]
@@ -558,7 +619,8 @@ class SortServer:
                     req.ctrl = ctrl
             reqs.append(req)
         return WarmHandoff(requests=reqs, rng_state=extra["rng_state"],
-                           seq=int(extra["seq"]))
+                           seq=int(extra["seq"]),
+                           injector_state=extra.get("injector_state"))
 
     # ---- resolution bookkeeping (every future resolves exactly once) ----
 
@@ -647,13 +709,20 @@ class SortServer:
             req.done_mask = np.zeros(s, bool)
         self.events.append({"event": "admit", "seq": req.seq})
 
+    def _cfg_for(self, req: _SortRequest):
+        """The config this request dispatches under: the server config,
+        unless an integrity self-heal installed a per-request override
+        (kernel retired, band widened, dtype promoted)."""
+        return self.cfg if req.cfg_override is None else req.cfg_override
+
     def _regime(self, req: _SortRequest) -> str:
         from repro.core.shufflesoftsort import (
             resolve_band,
             rung_aligned_switch,
         )
+        cfg = self._cfg_for(req)
         n = req.x.shape[0]
-        if resolve_band(self.cfg, n) is None:
+        if resolve_band(cfg, n) is None:
             return "dense"
         if self.adaptive:
             # Measured switch, from the request's controller: the
@@ -666,10 +735,11 @@ class SortServer:
             live = req.alive[~req.done_mask]
             return ("banded" if live.size and req.ctrl.banded[live].all()
                     else "dense")
-        if n not in self._switch_cache:
-            self._switch_cache[n] = rung_aligned_switch(
-                self.cfg, n, self.seg_len)
-        return "banded" if req.progress >= self._switch_cache[n] else "dense"
+        ck = (n, cfg)
+        if ck not in self._switch_cache:
+            self._switch_cache[ck] = rung_aligned_switch(
+                cfg, n, self.seg_len)
+        return "banded" if req.progress >= self._switch_cache[ck] else "dense"
 
     def _tick(self) -> bool:
         """One scheduler pass: shed expired, admit, dispatch one rung
@@ -720,9 +790,14 @@ class SortServer:
 
         groups: dict[tuple, list[_SortRequest]] = {}
         for req in self._active:
-            groups.setdefault(((req.hw, req.d), self._regime(req)),
-                              []).append(req)
-        for (sig, regime), reqs in groups.items():
+            # Guardrail policy and self-healed config extend the group
+            # key: every request in one device call must share a config
+            # (one compiled program) and a probe policy (uniform
+            # verification of the call's slices).
+            groups.setdefault(
+                ((req.hw, req.d), self._regime(req),
+                 req.guardrail, req.cfg_override), []).append(req)
+        for (sig, regime, _pol, _ovr), reqs in groups.items():
             chunk: list[_SortRequest] = []
             size = 0
             for req in reqs:
@@ -745,6 +820,9 @@ class SortServer:
         the tau schedule than its executed-round count suggests.
         """
         hw = reqs[0].hw
+        cfg_use = self._cfg_for(reqs[0])   # uniform per group (key'd)
+        pol = reqs[0].guardrail
+        guarded = pol is not None and pol.mode != "off"
         # Per-request rows going into this call (adaptive: live only).
         sels = [np.flatnonzero(~r.done_mask) if self.adaptive
                 else np.arange(len(r.alive)) for r in reqs]
@@ -765,6 +843,11 @@ class SortServer:
                 [np.full(len(sel), r.progress, np.int64)
                  for r, sel in zip(reqs, sels)])
         bs = len(progress)
+        # Guardrail probes need this rung's INPUT state after the
+        # commit loop overwrites per-request state: alias the pre-pad
+        # arrays (padding below reallocates, so these stay intact).
+        xs_in, orders_in, keys_in = xs, orders, keys
+        norms_in, progress_in = norms, progress
         # pad to the next power of two (capped at max_batch when the
         # chunk fits under it) so compiled programs stay bounded by
         # |signatures| x |regimes| x log2(max_batch), not traffic
@@ -790,12 +873,13 @@ class SortServer:
                 # measured tail bound.
                 o, k, l, w = self._engine(
                     xs, orders, keys, norms, progress, self.seg_len,
-                    hw=hw, cfg=self.cfg, mesh=self.mesh,
+                    hw=hw, cfg=cfg_use, mesh=self.mesh,
                     regime=regime, with_w=True)
                 w = np.asarray(w)
             else:
+                w = None
                 o, k, l = self._engine(xs, orders, keys, norms, progress,
-                                       self.seg_len, hw=hw, cfg=self.cfg,
+                                       self.seg_len, hw=hw, cfg=cfg_use,
                                        mesh=self.mesh)
             o, k, l = np.asarray(o), np.asarray(k), np.asarray(l)
         except Exception as e:
@@ -805,22 +889,36 @@ class SortServer:
         # never commit into request state — route it through the retry
         # path as a typed NumericalDivergence BEFORE the commit below,
         # so the re-dispatch replays from the last finite boundary.
-        if not np.isfinite(l).all() or (self.adaptive
-                                        and not np.isfinite(w).all()):
+        # Guarded groups instead attribute non-finite state per request
+        # slice (the monitor's "finite" probe), so one corrupted request
+        # never fails its clean batchmates.
+        if not guarded and (
+                not np.isfinite(l).all()
+                or (self.adaptive and not np.isfinite(w).all())):
             from repro.core.shufflesoftsort import NumericalDivergence
             self._on_failure(reqs, NumericalDivergence(
                 f"non-finite loss in serving dispatch (regime {regime})",
-                round=int(progress.min()),
-                dtype=str(self.cfg.compute_dtype), context="serving"))
+                round=int(progress_in.min()),
+                dtype=str(cfg_use.compute_dtype), context="serving"))
             return
         dt = time.perf_counter() - t0
         self._record_timing(dt, self.seg_len * bucket)
         self.stats["batches"] += 1
         self.stats["batch_sizes"].append(bs)
 
+        bad: list = []
+        if guarded:
+            bad = self._verify_slices(
+                reqs, sels, regime, cfg_use, hw,
+                xs_in, orders_in, keys_in, norms_in, progress_in,
+                o, k, l, w)
+        bad_set = {id(r) for r, _ in bad}
         off = 0
         for req, sel in zip(reqs, sels):
             nl = len(sel)
+            if id(req) in bad_set:
+                off += nl           # corrupted: do NOT commit; the
+                continue            # retry replays this rung exactly
             if self.adaptive:
                 orig = req.alive[sel]
                 exec0 = int(req.ctrl.executed[orig[0]])
@@ -842,6 +940,121 @@ class SortServer:
             req.progress += self.seg_len
             off += nl
             self._post_rung(req)
+        for req, exc in bad:
+            self._integrity_failure(req, exc)
+
+    # ---- guardrails: per-request probe verification + self-healing ------
+
+    def _verify_slices(self, reqs, sels, regime, cfg_use, hw,
+                       xs_in, orders_in, keys_in, norms_in, progress_in,
+                       o, k, l, w):
+        """Run this dispatch's guardrail probes per request slice,
+        BEFORE any commit.  Returns ``[(req, IntegrityViolation), ...]``
+        for the slices that failed — only those requests re-queue; their
+        clean batchmates commit normally (the committed request state is
+        the last *verified* rung, so the retry replays exactly the
+        corrupted segment).
+
+        The shadow recompute calls ``run_round_segment`` directly (not
+        ``self._engine`` — chaos tests wrap the engine in a
+        ``FaultInjector``; the oracle must stay clean) with the kernel
+        tier retired, on the request's own input slice.
+        """
+        from repro.core.shufflesoftsort import (
+            _tau_schedule,
+            run_round_segment,
+        )
+        from repro.runtime.guardrails import (
+            GuardrailMonitor,
+            IntegrityViolation,
+        )
+        taus = _tau_schedule(cfg_use)
+        bad = []
+        off = 0
+        for req, sel in zip(reqs, sels):
+            nl = len(sel)
+            sl = slice(off, off + nl)
+            off += nl
+            if nl == 0:         # pragma: no cover - defensive
+                continue
+            mon = req.monitor
+            if mon is None or mon.policy is not req.guardrail:
+                mon = req.monitor = GuardrailMonitor(
+                    req.guardrail, context="serving",
+                    dtype=cfg_use.compute_dtype)
+            start = int(progress_in[sl].min())
+            try:
+                # Adaptive w rows must be finite before ctrl.observe —
+                # the unguarded global sentinel is skipped for guarded
+                # groups, so attribute it here, per slice.
+                if w is not None and not np.isfinite(w[sl]).all():
+                    mon._fail("finite",
+                              "non-finite soft-sort keys in serving "
+                              f"dispatch at round {start}",
+                              round=start)
+                oracle_l = oracle_o = None
+                if mon.wants_shadow(start):
+                    ocfg = dataclasses.replace(cfg_use, use_kernel=False)
+                    if self.adaptive:
+                        sh = run_round_segment(
+                            xs_in[sl], orders_in[sl], keys_in[sl],
+                            norms_in[sl], progress_in[sl], self.seg_len,
+                            hw=hw, cfg=ocfg, regime=regime)
+                    else:
+                        sh = run_round_segment(
+                            xs_in[sl], orders_in[sl], keys_in[sl],
+                            norms_in[sl], progress_in[sl], self.seg_len,
+                            hw=hw, cfg=ocfg)
+                    oracle_l = np.asarray(sh[2], np.float32)
+                    if mon.compare_orders():
+                        oracle_o = np.asarray(sh[0])
+                band = None
+                if (self.adaptive and regime == "banded"
+                        and req.ctrl is not None):
+                    band = req.ctrl.band
+                mon.check_rung(
+                    start=start,
+                    losses=l[:, sl],
+                    orders=o[sl],
+                    n=req.x.shape[0],
+                    keys_in=keys_in[sl], keys_out=k[sl],
+                    seg_len=self.seg_len,
+                    ws=None if w is None else w[sl],
+                    tau=taus[np.asarray(progress_in[sl], np.int64)],
+                    band=band,
+                    oracle_losses=oracle_l, oracle_orders=oracle_o)
+            except IntegrityViolation as e:
+                bad.append((req, e))
+        return bad
+
+    def _integrity_failure(self, req: _SortRequest, exc):
+        """Remediation for a probe failure on one request: record the
+        structured incident, count a strike, and past the policy's
+        ``heal_after`` budget consume a ``DivergencePolicy`` rung as a
+        per-request config override (kernel→oracle, band widening,
+        dtype promotion) — then re-queue the request from its last
+        verified boundary through the normal retry path."""
+        rec = exc.incident() if hasattr(exc, "incident") else {
+            "probe": None, "message": str(exc)}
+        rec["seq"] = int(req.seq)
+        self.stats["integrity_violations"] += 1
+        self.stats["integrity_incidents"].append(rec)
+        self.events.append({"event": "integrity", "seq": req.seq,
+                            "probe": getattr(exc, "probe", None),
+                            "round": getattr(exc, "round", None)})
+        req.strikes += 1
+        if req.strikes > req.guardrail.heal_after:
+            cfg_use = self._cfg_for(req)
+            step = self.degrade.apply(cfg_use, exc)
+            if step is not None:
+                healed, note = step
+                req.cfg_override = healed
+                req.monitor = None      # dtype/config may have changed
+                req.strikes = 0
+                self.stats["self_heals"] += 1
+                self.events.append({"event": "self_heal",
+                                    "seq": req.seq, "action": note})
+        self._on_failure([req], exc)
 
     def _post_rung(self, req: _SortRequest):
         """Rung-boundary bookkeeping: tournament cull, then finalize.
@@ -976,7 +1189,12 @@ def serve_sorts(args):
     from repro.core.metrics import mean_neighbor_distance
     from repro.core.shufflesoftsort import ShuffleSoftSortConfig
     from repro.launch.mesh import make_sort_mesh
+    from repro.runtime.guardrails import GuardrailPolicy
 
+    guardrail = (None if args.guardrail == "off" else
+                 GuardrailPolicy(mode=args.guardrail,
+                                 shadow_rate=args.shadow_rate,
+                                 seed=args.seed))
     hw = (args.sort_hw, args.sort_n // args.sort_hw)
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
                                 chunk=min(256, args.sort_n),
@@ -992,7 +1210,7 @@ def serve_sorts(args):
                         cull_fraction=args.cull_fraction,
                         queue_depth=args.queue_depth,
                         sched_rungs=args.sched_rungs or None,
-                        seed=args.seed)
+                        seed=args.seed, guardrail=guardrail)
     rng = np.random.RandomState(0)
     xs = rng.rand(args.requests, args.sort_n, args.sort_d).astype(np.float32)
 
@@ -1016,14 +1234,23 @@ def serve_sorts(args):
         adaptive_note = (
             f"; adaptive: {server.stats['adaptive_exits']} early exits, "
             f"{server.stats['rounds_saved']} rounds saved")
+    guard_note = ""
+    if guardrail is not None:
+        guard_note = (
+            f"; guardrail {guardrail.mode}: "
+            f"{server.stats['integrity_violations']} violations, "
+            f"{server.stats['self_heals']} self-heals")
     print(f"served {args.requests} sort requests in {wall:.2f}s "
           f"({sps:.2f} sorts/s) across {server.stats['batches']} device "
           f"batches (sizes {sizes}); p50 {p50:.1f}ms p99 {p99:.1f}ms; "
-          f"{improved}/{args.requests} layouts improved{adaptive_note}")
+          f"{improved}/{args.requests} layouts improved"
+          f"{adaptive_note}{guard_note}")
     return {"sorts_per_s": sps, "batches": server.stats["batches"],
             "improved": int(improved), "p50_ms": p50, "p99_ms": p99,
             "adaptive_exits": server.stats["adaptive_exits"],
-            "rounds_saved": server.stats["rounds_saved"]}
+            "rounds_saved": server.stats["rounds_saved"],
+            "integrity_violations": server.stats["integrity_violations"],
+            "self_heals": server.stats["self_heals"]}
 
 
 # --------------------------------------------------------------------------
@@ -1084,6 +1311,18 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0,
                     help="server-owned PRNG seed for requests submitted "
                          "without a key (reproducible serving runs)")
+    ap.add_argument("--guardrail", choices=("off", "invariants", "shadow"),
+                    default="off",
+                    help="permutation-integrity probes at every rung "
+                         "boundary: 'invariants' runs the free host-side "
+                         "checks (valid permutation, loss sanity, PRNG "
+                         "key chain), 'shadow' adds sampled pure-jnp "
+                         "oracle recompute (EXPERIMENTS.md §Robustness, "
+                         "'Silent corruption')")
+    ap.add_argument("--shadow-rate", type=float, default=None,
+                    help="fraction of rungs to shadow-recompute under "
+                         "--guardrail shadow (default 1/32; overhead "
+                         "scales with the rate)")
     args = ap.parse_args(argv)
 
     if args.workload == "sort":
@@ -1098,6 +1337,18 @@ def main(argv=None):
         if args.dtype != "float32" and not args.use_kernel:
             ap.error("--dtype bfloat16 requires --use-kernel (the jnp "
                      "apply tier has no bf16 mode)")
+        # --shadow-rate only modulates the shadow tier; a rate with the
+        # probes off (or invariants-only) would silently do nothing.
+        if args.shadow_rate is not None and args.guardrail != "shadow":
+            ap.error("--shadow-rate requires --guardrail shadow (the "
+                     f"'{args.guardrail}' tier runs no shadow "
+                     "recompute)")
+        if args.shadow_rate is not None and not (
+                0.0 <= args.shadow_rate <= 1.0):
+            ap.error(f"--shadow-rate {args.shadow_rate} must be in "
+                     "[0, 1]")
+        if args.shadow_rate is None:
+            args.shadow_rate = 0.03125
         return serve_sorts(args)
 
     cfg = reduced_config(get_config(args.arch), **PRESETS[args.preset])

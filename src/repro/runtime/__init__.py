@@ -2,11 +2,17 @@ from repro.runtime.checkpoint import CheckpointManager  # noqa: F401
 from repro.runtime.anneal_checkpoint import AnnealCheckpointer  # noqa: F401
 from repro.runtime.fault_tolerance import (  # noqa: F401
     AnnealSupervisor,
+    CorruptionSpec,
     DivergencePolicy,
     FaultInjector,
     RetryPolicy,
     TrainSupervisor,
     WorkerFailure,
+)
+from repro.runtime.guardrails import (  # noqa: F401
+    GuardrailMonitor,
+    GuardrailPolicy,
+    IntegrityViolation,
 )
 from repro.runtime.straggler import StragglerMonitor  # noqa: F401
 from repro.runtime.compression import (  # noqa: F401

@@ -63,31 +63,124 @@ class RetryPolicy:
                    self.backoff_max_s)
 
 
+@dataclasses.dataclass(frozen=True)
+class CorruptionSpec:
+    """One injected value corruption at an exact dispatch index.
+
+    ``target`` names the element of the engine's result tuple to
+    corrupt (``run_round_segment`` layout: ``orders`` / ``keys`` /
+    ``losses`` / ``ws``); ``index`` is the flat element index within
+    that array.  Modes model the classic silent-data-corruption
+    taxonomy:
+
+    * ``"bitflip"`` — XOR one bit at the element: the high exponent
+      bit for floats (a value orders of magnitude off), the low bit
+      for int32 orders (a duplicate entry — bijectivity breaks), bit 7
+      for uint32 PRNG keys (the key chain breaks).
+    * ``"signflip"`` — negate the element (floats / int32); flip the
+      top bit for uint32.
+    * ``"stale"`` — replace the WHOLE target array with the previous
+      call's value for that target (a repeated DMA buffer); zeros when
+      there is no previous call.
+    * ``"nan"`` — splat NaN at the element (float targets only).
+    """
+    mode: str
+    target: str = "losses"
+    index: int = 0
+
+    _MODES = ("bitflip", "signflip", "stale", "nan")
+    _TARGETS = {"orders": 0, "keys": 1, "losses": 2, "ws": 3}
+
+    def __post_init__(self):
+        if self.mode not in self._MODES:
+            raise ValueError(f"mode must be one of {self._MODES}, "
+                             f"got {self.mode!r}")
+        if self.target not in self._TARGETS:
+            raise ValueError(
+                f"target must be one of {sorted(self._TARGETS)}, "
+                f"got {self.target!r}")
+        if not isinstance(self.index, int):
+            # A None/str index would raise mid-dispatch instead, where
+            # the retry path swallows it and the corruption silently
+            # never fires — fail at construction.
+            raise ValueError(f"index must be an int, got {self.index!r}")
+
+    def apply(self, arr: np.ndarray,
+              prev: Optional[np.ndarray]) -> np.ndarray:
+        out = np.array(arr)  # host copy — never mutate engine buffers
+        flat = out.reshape(-1)
+        idx = int(self.index) % flat.size
+        if self.mode == "stale":
+            if prev is not None and prev.shape == out.shape:
+                return np.array(prev)
+            return np.zeros_like(out)
+        if self.mode == "nan":
+            if not np.issubdtype(out.dtype, np.floating):
+                raise ValueError(
+                    f"nan corruption needs a float target, "
+                    f"{self.target} is {out.dtype}")
+            flat[idx] = np.nan
+        elif self.mode == "bitflip":
+            if np.issubdtype(out.dtype, np.floating):
+                bits = flat.view(np.uint32) if out.dtype == np.float32 \
+                    else flat.view(np.uint16)
+                bits[idx] ^= np.array(
+                    1 << (30 if out.dtype == np.float32 else 14),
+                    bits.dtype)
+            elif out.dtype == np.uint32:
+                flat[idx] ^= np.uint32(1 << 7)
+            else:
+                flat[idx] ^= np.array(1, out.dtype)
+        elif self.mode == "signflip":
+            if out.dtype == np.uint32:
+                flat[idx] ^= np.uint32(1 << 31)
+            else:
+                flat[idx] = -flat[idx]
+        return out
+
+
 class FaultInjector:
     """Deterministic chaos harness around a dispatch callable.
 
     Wraps ``engine_fn``; the i-th call (0-based) first sleeps
     ``delay_calls[i]`` seconds if present (straggler injection), then
     raises ``exc_type`` if ``i`` is in ``fail_calls`` (worker-failure
-    injection), else forwards to the engine.  Everything is counted
-    (``calls`` / ``faults`` / ``delays``) so tests and the serving
+    injection), else forwards to the engine — and, when ``i`` is in
+    ``corrupt_calls``, silently corrupts the engine's RESULT per the
+    ``CorruptionSpec`` (value-corruption injection: the SDC the
+    guardrail probes must catch).  Everything is counted (``calls`` /
+    ``faults`` / ``delays`` / ``corruptions``) so tests and the serving
     benchmark can assert exactly which dispatches were perturbed — the
     sort-path analogue of the flaky step functions
     ``tests/test_runtime.py`` feeds the TrainSupervisor.
+
+    The injection cursor and schedules are serializable
+    (``state_dict`` / ``load_state_dict``) so a chaos scenario can
+    round-trip through a ``WarmHandoff`` — a preempted injected run
+    resumes with its cursor intact and the accounting stays exact.
     """
 
     def __init__(self, engine_fn: Callable, fail_calls=(),
                  delay_calls: Optional[dict[int, float]] = None,
                  exc_type: type = WorkerFailure,
-                 sleep_fn: Callable[[float], None] = time.sleep):
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 corrupt_calls: Optional[dict] = None):
         self.engine_fn = engine_fn
         self.fail_calls = set(fail_calls)
         self.delay_calls = dict(delay_calls or {})
+        self.corrupt_calls = {
+            int(k): (v if isinstance(v, CorruptionSpec)
+                     else CorruptionSpec(**v))
+            for k, v in (corrupt_calls or {}).items()}
         self.exc_type = exc_type
         self.sleep_fn = sleep_fn
         self.calls = 0
         self.faults = 0
         self.delays = 0
+        self.corruptions = 0
+        # Previous call's result per target name — the stale-buffer
+        # corruption source (host np copies, chaos-scale arrays only).
+        self._prev: dict[str, np.ndarray] = {}
         # SortServer dispatches from worker threads; unguarded += on the
         # counters races (two dispatches can draw the same index and the
         # chaos schedule double-fires or skips).  The lock covers only
@@ -102,6 +195,7 @@ class FaultInjector:
             self.calls += 1
             delay = self.delay_calls.get(i)
             fail = i in self.fail_calls
+            spec = self.corrupt_calls.get(i)
             if delay is not None:
                 self.delays += 1
             if fail:
@@ -110,7 +204,62 @@ class FaultInjector:
             self.sleep_fn(delay)
         if fail:
             raise self.exc_type(f"injected fault at dispatch {i}")
-        return self.engine_fn(*args, **kwargs)
+        result = self.engine_fn(*args, **kwargs)
+        if spec is None and not self.corrupt_calls:
+            return result
+        out = list(result) if isinstance(result, tuple) else [result]
+        if spec is not None:
+            pos = CorruptionSpec._TARGETS[spec.target]
+            if pos >= len(out):
+                raise ValueError(
+                    f"corruption target {spec.target!r} needs a "
+                    f"{pos + 1}-tuple result, engine returned "
+                    f"{len(out)} elements")
+            with self._lock:
+                prev = self._prev.get(spec.target)
+            out[pos] = spec.apply(np.asarray(out[pos]), prev)
+            with self._lock:
+                self.corruptions += 1
+        # Record this call's CLEAN targets as the next stale source
+        # (post-corruption values for the corrupted target would make
+        # consecutive stale injections self-consistent — record what
+        # the engine actually produced).
+        with self._lock:
+            for name, pos in CorruptionSpec._TARGETS.items():
+                if pos < len(out):
+                    src = result[pos] if isinstance(result, tuple) \
+                        else result
+                    self._prev[name] = np.asarray(src)
+        return tuple(out) if isinstance(result, tuple) else out[0]
+
+    def state_dict(self) -> dict:
+        """JSON-able injection cursor + schedules (not the stale-source
+        arrays — a resumed injector re-primes them on its next call)."""
+        with self._lock:
+            return {
+                "calls": self.calls, "faults": self.faults,
+                "delays": self.delays, "corruptions": self.corruptions,
+                "fail_calls": sorted(int(i) for i in self.fail_calls),
+                "delay_calls": {str(k): float(v)
+                                for k, v in self.delay_calls.items()},
+                "corrupt_calls": {
+                    str(k): dataclasses.asdict(v)
+                    for k, v in self.corrupt_calls.items()},
+                "exc_type": self.exc_type.__name__,
+            }
+
+    def load_state_dict(self, state: dict) -> None:
+        with self._lock:
+            self.calls = int(state["calls"])
+            self.faults = int(state["faults"])
+            self.delays = int(state["delays"])
+            self.corruptions = int(state.get("corruptions", 0))
+            self.fail_calls = set(int(i) for i in state["fail_calls"])
+            self.delay_calls = {int(k): float(v)
+                                for k, v in state["delay_calls"].items()}
+            self.corrupt_calls = {
+                int(k): CorruptionSpec(**v)
+                for k, v in state.get("corrupt_calls", {}).items()}
 
 
 class TrainSupervisor:
@@ -207,6 +356,16 @@ class DivergencePolicy:
          an ``"auto"`` band back to dense): a too-narrow band can strand
          mass outside the window and zero out rows.
 
+    **Integrity violations** (``runtime.guardrails.IntegrityViolation``
+    — a guardrail probe caught silent corruption) reorder the ladder:
+    ``integrity_retries`` plain replays from the last *verified*
+    checkpoint come first (transient SDC needs no config change — the
+    supervisor tracks these separately from config fallbacks), then
+    ``oracle_fallback`` retires the Pallas kernel tier
+    (``use_kernel=False`` — the pure-jnp oracle is the reference
+    implementation), then band widening for band-tail violations, then
+    the generic rungs above.
+
     ``apply`` returns the degraded config plus a human-readable
     description, or ``None`` when no rung is applicable — the caller
     (``AnnealSupervisor``) re-raises the original divergence then.
@@ -217,8 +376,26 @@ class DivergencePolicy:
     tau_floor: float = 0.05
     widen_band: bool = True
     max_fallbacks: int = 3
+    oracle_fallback: bool = True
+    integrity_retries: int = 1
 
     def apply(self, cfg, failure) -> Optional[tuple[Any, str]]:
+        # Guardrail violations first try dropping the kernel tier (SDC
+        # lives in the accelerated path; the jnp oracle IS the spec),
+        # and band-tail violations widen the band before anything else.
+        integrity = getattr(failure, "probe", None) is not None
+        if integrity:
+            probe = failure.probe
+            if (probe == "band_tail" and self.widen_band
+                    and cfg.band is not None):
+                if cfg.band == "auto":
+                    return (dataclasses.replace(cfg, band=None),
+                            "dropped band 'auto' -> dense")
+                return (dataclasses.replace(cfg, band=int(cfg.band) * 2),
+                        f"widened band {cfg.band} -> {int(cfg.band) * 2}")
+            if self.oracle_fallback and cfg.use_kernel:
+                return (dataclasses.replace(cfg, use_kernel=False),
+                        "retired kernel tier -> pure-jnp oracle apply")
         if self.promote_f32 and cfg.compute_dtype == "bfloat16":
             return (dataclasses.replace(cfg, compute_dtype="float32"),
                     "promoted compute_dtype bfloat16 -> float32")
@@ -277,24 +454,54 @@ class AnnealSupervisor:
         self.failure_types = tuple(failure_types)
         self.sleep_fn = sleep_fn
         self.stats: dict[str, Any] = {
-            "attempts": 0, "restarts": 0, "fallbacks": []}
+            "attempts": 0, "restarts": 0, "fallbacks": [],
+            "verified_replays": 0, "integrity_incidents": []}
         self.history: list[dict] = []
 
     def run(self, xs, hw, cfg, **kwargs):
         """Run ``run_fn(xs, hw, cfg, ...)`` to completion, restarting
         from the latest rung checkpoint after each supervised failure.
         Extra ``kwargs`` are forwarded verbatim (engine selection knobs,
-        ``rung_hook`` for chaos tests, ...)."""
+        ``rung_hook`` for chaos tests, ``guardrail=`` policies, ...).
+
+        ``IntegrityViolation`` (a guardrail probe caught silent
+        corruption) is repaired like a divergence, with one extra rung
+        ahead of the config ladder: up to ``degrade.integrity_retries``
+        plain replays from the last VERIFIED checkpoint (probes run
+        before every ``ckpt.save``, so the newest checkpoint passed
+        them) — transient SDC heals with no config change, and the
+        replayed run is bit-identical per seed to a clean one.  Every
+        incident lands in ``stats["integrity_incidents"]``."""
         from repro.core.shufflesoftsort import NumericalDivergence
+        from repro.runtime.guardrails import IntegrityViolation
         cfg_cur = cfg
         restarts = 0
+        replays = 0
         while True:
             self.stats["attempts"] += 1
             try:
                 return self.run_fn(xs, hw, cfg_cur,
                                    checkpoint_dir=self.checkpoint_dir,
                                    resume=True, **kwargs)
-            except NumericalDivergence as e:
+            except (NumericalDivergence, IntegrityViolation) as e:
+                integrity = isinstance(e, IntegrityViolation)
+                if integrity:
+                    self.stats["integrity_incidents"].append(e.incident())
+                    budget = (self.degrade.integrity_retries
+                              if self.degrade is not None else 0)
+                    if replays < budget:
+                        replays += 1
+                        self.stats["verified_replays"] += 1
+                        self.history.append({
+                            "event": "integrity", "probe": e.probe,
+                            "round": e.round,
+                            "fallback": "replayed from last verified "
+                                        "checkpoint"})
+                        log.warning(
+                            "integrity violation (%s) at round %s: "
+                            "replaying from last verified checkpoint",
+                            e.probe, e.round)
+                        continue
                 n_fb = len(self.stats["fallbacks"])
                 fallback = None
                 if (self.degrade is not None
@@ -305,9 +512,12 @@ class AnnealSupervisor:
                 cfg_cur, desc = fallback
                 self.stats["fallbacks"].append(desc)
                 self.history.append({
-                    "event": "divergence", "round": e.round, "tau": e.tau,
+                    "event": "integrity" if integrity else "divergence",
+                    "round": e.round, "tau": e.tau,
                     "dtype": e.dtype, "fallback": desc})
-                log.warning("divergence at round %s (tau=%s, %s): %s",
+                log.warning("%s at round %s (tau=%s, %s): %s",
+                            "integrity violation" if integrity
+                            else "divergence",
                             e.round, e.tau, e.dtype, desc)
             except self.failure_types as e:
                 restarts += 1

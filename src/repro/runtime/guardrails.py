@@ -1,0 +1,477 @@
+"""Permutation-integrity guardrails: silent-corruption detection at rung
+boundaries.
+
+PR 8's fault-tolerance tier catches runs that *crash* (worker failures)
+or *explode* (non-finite losses).  Nothing there catches a run that
+finishes **wrong**: a Pallas kernel returning a subtly corrupted buffer
+(silent data corruption — the failure mode production training fleets
+now screen for), a banded tier whose real dropped softmax mass exceeds
+the analytic ``band_tail_bound``, or a bf16 sweep drifting past its
+documented parity envelope.  ShuffleSoftSort's output contract is cheap
+to audit — a valid permutation of ``arange(N)`` plus a scalar loss per
+round — so this module does exactly that, at the rung-boundary host
+syncs the engines already pay for.
+
+Three probe families, in increasing cost:
+
+* **Invariant probes** (mode ``"invariants"`` and up) — pure host-side
+  checks on state the engine already synced: committed orders are
+  bijective permutations, losses are finite / non-negative (the grid
+  layout loss is a sum of squared distances), no explosion vs. the
+  committed loss history, no bitwise-stale loss segment (a repeated
+  DMA buffer), and PRNG keys advanced exactly ``seg_len`` chained
+  ``jax.random.split`` steps from the rung's input keys.
+* **Band-tail audit** — when live ``w`` rows are available (adaptive
+  engines, ``run_round_segment(with_w=True)``), the analytic
+  ``band_tail_bound`` is evaluated on the *live* keys, and at sampled
+  rungs the measured dropped mass is recomputed densely and checked
+  against the bound (the bound is a theorem; measured > bound means
+  corrupted keys, not a soft anneal).
+* **Shadow recompute** (mode ``"shadow"``) — a deterministic hash of
+  ``(policy.seed, rung start)`` samples ``shadow_rate`` of rungs; a
+  sampled rung is re-run through the pure-jnp oracle tier
+  (``use_kernel=False``) from the rung's input snapshot and compared
+  at the per-dtype documented tolerance (f32 ``2e-3``, bf16 ``2e-2``
+  — the same envelopes ``tools/check_bench.py`` gates).  On oracle
+  configs the recompute is bit-exact, so committed orders are compared
+  too; on f32 kernel configs orders are compared exactly (the ~1e-7
+  apply parity cannot flip a converged argsort), while bf16 compares
+  losses only.
+
+Probe failures raise a typed :class:`IntegrityViolation` — sibling of
+``NumericalDivergence`` — carrying the probe name, round, and a
+structured incident record.  ``AnnealSupervisor`` repairs it through
+the ``DivergencePolicy`` ladder (verified-rung replay first, then
+kernel→oracle fallback, band widening, dtype promotion), resuming from
+the last *verified* checkpoint: every engine runs its probes before
+``ckpt.save``, so a corrupted segment is never committed.  SortServer
+runs the same probes per request slice and self-heals via per-request
+config overrides (EXPERIMENTS.md §Robustness, "Silent corruption").
+
+Determinism contract: probes are read-only — they never touch engine
+PRNG keys, never mutate state, and sampling is a pure function of
+``(seed, rung start)`` — so a guarded run commits bit-identical results
+to an unguarded one, per seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.softsort import band_tail_bound
+
+_VALID_MODES = ("off", "invariants", "shadow")
+
+# Matches tools/check_bench.py --tol / --tol-bf16: the committed parity
+# envelopes for kernel-vs-oracle comparisons per compute dtype.
+DEFAULT_TOL = {"float32": 2e-3, "bfloat16": 2e-2}
+
+
+class IntegrityViolation(RuntimeError):
+    """A guardrail probe failed: the run produced state that violates
+    the output contract (invalid permutation, corrupted losses, stale
+    buffers, broken key chain, band-tail excess, or shadow-recompute
+    mismatch).  Sibling of ``NumericalDivergence`` — carries the same
+    location attributes plus the probe name and a structured incident
+    record, so ``AnnealSupervisor`` / ``SortServer`` can log exactly
+    what fired and route repair through the ``DivergencePolicy``
+    ladder."""
+
+    def __init__(self, message: str, *, probe: str,
+                 round: Optional[int] = None,
+                 tau: Optional[float] = None,
+                 dtype: Optional[str] = None,
+                 context: Optional[str] = None,
+                 detail: Optional[dict] = None):
+        super().__init__(message)
+        self.probe = probe
+        self.round = round
+        self.tau = tau
+        self.dtype = dtype
+        self.context = context
+        self.detail = dict(detail or {})
+
+    def incident(self) -> dict:
+        """JSON-able structured record for stats / audit surfaces."""
+        rec = {"probe": self.probe, "round": self.round,
+               "context": self.context, "message": str(self)}
+        if self.tau is not None:
+            rec["tau"] = float(self.tau)
+        if self.dtype is not None:
+            rec["dtype"] = self.dtype
+        rec.update(self.detail)
+        return rec
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardrailPolicy:
+    """Per-run (or per-request) probe configuration.
+
+    ``mode`` selects the probe tier: ``"off"`` disables everything,
+    ``"invariants"`` runs the free host-side checks, ``"shadow"`` adds
+    sampled oracle recompute at ``shadow_rate``.  Sampling is a pure
+    hash of ``(seed, rung start)`` — deterministic, replayable, and
+    independent of wall clock and engine PRNG.  ``heal_after`` is the
+    number of integrity strikes on one unit of work before the serving
+    tier consumes a ``DivergencePolicy`` rung (the first strike is a
+    plain replay from the last verified boundary — the right repair for
+    transient SDC).  Tolerances default to the documented per-dtype
+    parity envelopes; ``tail_slack`` is the multiplicative grace on the
+    band-tail audit (the measured mass is itself a float sum).
+    """
+    mode: str = "invariants"
+    shadow_rate: float = 0.03125          # 1/32 of rungs; overhead ~ rate
+    seed: int = 0
+    tol_f32: float = DEFAULT_TOL["float32"]
+    tol_bf16: float = DEFAULT_TOL["bfloat16"]
+    # Rung-level bf16 envelope for the shadow compare.  The 2e-2
+    # apply-level parity does NOT survive an outer round: bf16's 8-bit
+    # mantissa flips Adam rounding decisions, and measured clean drift
+    # of a bf16 rung vs. the f32 oracle reaches ~0.13 rel (even vs. a
+    # bf16-jnp recompute — it is dtype noise, not kernel error).  The
+    # 0.5 gate stays far above benign drift and far below every
+    # corruption signature (exponent flips ~1e30 rel, sign flips 2.0,
+    # NaN always trips).
+    shadow_rel_bf16: float = 0.5
+    explosion_factor: float = 1e3
+    tail_slack: float = 1.05
+    heal_after: int = 1
+
+    def __post_init__(self):
+        if self.mode not in _VALID_MODES:
+            raise ValueError(
+                f"guardrail mode must be one of {_VALID_MODES}, "
+                f"got {self.mode!r}")
+        if not (0.0 <= self.shadow_rate <= 1.0):
+            raise ValueError(
+                f"shadow_rate must be in [0, 1], got {self.shadow_rate}")
+
+    def tol(self, dtype: str) -> float:
+        return self.tol_bf16 if str(dtype) == "bfloat16" else self.tol_f32
+
+    def shadow_tol(self, dtype: str) -> float:
+        """Rung-level loss envelope for the shadow-recompute compare
+        (see ``shadow_rel_bf16`` for why bf16 differs from the
+        apply-level parity constant)."""
+        return (self.shadow_rel_bf16 if str(dtype) == "bfloat16"
+                else self.tol_f32)
+
+
+def shadow_sampled(seed: int, start: int, rate: float) -> bool:
+    """Deterministic rung sampler: hash ``(seed, start)`` to [0, 1).
+
+    crc32 of the decimal rendering — stable across platforms and
+    processes (unlike ``hash()``), cheap, and uniform enough for a
+    sampling decision.  ``rate=1.0`` samples every rung (chaos tests),
+    ``rate=0.0`` none.
+    """
+    if rate <= 0.0:
+        return False
+    if rate >= 1.0:
+        return True
+    h = zlib.crc32(f"{int(seed)}:{int(start)}".encode()) & 0xFFFFFFFF
+    return (h / 2.0 ** 32) < rate
+
+
+@functools.lru_cache(maxsize=None)
+def _key_chain_program(seg_len: int):
+    # One jitted program per segment length — an eager per-call
+    # vmap(split) chain retraces every rung and costs ~10 ms, which
+    # alone would blow the probe overhead budget (BENCH_guardrails.json
+    # gates <= 5% at the default sample rate).
+    def chain(k):
+        def step(kk, _):
+            return jax.vmap(lambda one: jax.random.split(one)[0])(kk), None
+        return jax.lax.scan(step, k, None, length=seg_len)[0]
+    return jax.jit(chain)
+
+
+def expected_key_chain(keys_in: np.ndarray, seg_len: int) -> np.ndarray:
+    """The PRNG keys a clean engine must return after ``seg_len``
+    rounds: every round consumes ``key, sub = split(key)`` and carries
+    ``key`` forward, so the output keys are a pure function of the
+    input keys — corrupted key state is exactly detectable."""
+    k = jnp.asarray(np.asarray(keys_in))
+    return np.asarray(jax.device_get(_key_chain_program(int(seg_len))(k)))
+
+
+def measured_dropped_mass(w, tau, band: int, descending: bool = False):
+    """Densely measure the softmax mass each SoftSort row drops outside
+    a ±``band`` rank window — the quantity ``band_tail_bound`` upper
+    bounds.  Host-side O(N^2) per instance; guardrails only run it at
+    sampled rungs.  Mirrors the banded-apply window convention: row i
+    of the dense relaxation targets the i-th largest (ascending
+    commit) or i-th smallest (descending) key, and the window is the
+    ±band neighborhood of rank i in that same ordering.
+    """
+    w = np.asarray(w, np.float64)
+    if w.ndim == 1:
+        w = w[None]
+    tau_a = np.broadcast_to(np.asarray(tau, np.float64).reshape(-1),
+                            (w.shape[0],)) \
+        if np.ndim(tau) else np.full((w.shape[0],), float(tau))
+    n = w.shape[1]
+    worst = 0.0
+    for b in range(w.shape[0]):
+        row = w[b]
+        srt = np.sort(row)[::-1] if not descending else np.sort(row)
+        logits = -np.abs(srt[:, None] - row[None, :]) / max(tau_a[b], 1e-30)
+        logits -= logits.max(axis=1, keepdims=True)
+        p = np.exp(logits)
+        p /= p.sum(axis=1, keepdims=True)
+        # rank of each source position in the same ordering rows target
+        order = np.argsort(-row, kind="stable") if not descending \
+            else np.argsort(row, kind="stable")
+        rank = np.empty(n, np.int64)
+        rank[order] = np.arange(n)
+        out = np.abs(rank[None, :] - np.arange(n)[:, None]) > int(band)
+        worst = max(worst, float((p * out).sum(axis=1).max()))
+    return worst
+
+
+class GuardrailMonitor:
+    """Stateful probe runner for one engine run (or one serving
+    request).  Engines call :meth:`check_rung` at every rung-boundary
+    host sync, *after* the finite sentinel and *before* committing a
+    checkpoint — so the newest checkpoint is always the last verified
+    rung.  All inputs are host arrays the engine already synced; the
+    monitor never touches device state or engine PRNG.
+
+    History carried across rungs: the committed loss ceiling (for the
+    explosion sentinel) and the previous segment's loss bytes (for the
+    stale-buffer probe).  Both reset per monitor — a fresh monitor
+    re-establishes them on its first rung, which keeps warm restarts
+    simple (sampling stays deterministic regardless, being keyed on
+    ``(seed, start)``).
+    """
+
+    def __init__(self, policy: GuardrailPolicy,
+                 context: str = "engine",
+                 dtype: str = "float32"):
+        if not isinstance(policy, GuardrailPolicy):
+            raise TypeError(f"expected GuardrailPolicy, got {policy!r}")
+        self.policy = policy
+        self.context = context
+        self.dtype = str(dtype)
+        self.incidents: list[dict] = []
+        self.rungs_checked = 0
+        self.rungs_shadowed = 0
+        self._loss_ref: Optional[float] = None
+        self._prev_loss_bytes: Optional[bytes] = None
+
+    # -- sampling ----------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self.policy.mode != "off"
+
+    def wants_shadow(self, start: int) -> bool:
+        """Should the rung starting at round ``start`` be shadow
+        recomputed?  Callers must snapshot the rung's *input* orders /
+        keys to host BEFORE dispatching the primary segment — the
+        batched engines donate their input buffers."""
+        return (self.policy.mode == "shadow"
+                and shadow_sampled(self.policy.seed, start,
+                                   self.policy.shadow_rate))
+
+    # -- probe driver ------------------------------------------------
+    def _fail(self, probe: str, message: str, *, round=None, tau=None,
+              **detail):
+        if tau is not None:
+            # Per-instance tau vectors (mixed-progress serving batches)
+            # label the incident with the hottest value in the rung.
+            t = np.asarray(tau, np.float64).reshape(-1)
+            tau = float(t.max()) if t.size else None
+        exc = IntegrityViolation(
+            f"[guardrail:{probe}] {message} (context={self.context})",
+            probe=probe, round=round, tau=tau,
+            dtype=self.dtype, context=self.context, detail=detail)
+        self.incidents.append(exc.incident())
+        raise exc
+
+    def check_rung(self, *, start: int, losses=None, orders=None,
+                   n: Optional[int] = None, keys_in=None, keys_out=None,
+                   seg_len: Optional[int] = None, ws=None, tau=None,
+                   band: Optional[int] = None, banded_mask=None,
+                   descending: bool = False,
+                   oracle_losses=None, oracle_orders=None) -> None:
+        """Run every applicable probe on one rung's synced state.
+
+        ``losses`` is round-major ``(T, B)`` (or ``(T,)``); ``orders``
+        is ``(B, N)`` committed permutations; ``keys_in``/``keys_out``
+        bracket the rung's PRNG chain; ``ws``/``tau``/``band`` feed the
+        band-tail audit (``banded_mask`` restricts it to the banded
+        instances); ``oracle_losses``/``oracle_orders`` are the shadow
+        recompute to compare against.  Raises IntegrityViolation on the
+        first failing probe; returns None when the rung verifies.
+        """
+        if not self.active:
+            return
+        self.rungs_checked += 1
+        pol = self.policy
+
+        if losses is not None:
+            seg = np.asarray(losses, np.float32)
+            if seg.ndim == 1:
+                seg = seg[:, None]
+            if not np.isfinite(seg).all():
+                t_bad = int(np.argwhere(
+                    ~np.isfinite(seg).all(axis=1)).min())
+                self._fail("finite",
+                           f"non-finite loss at round {start + t_bad}",
+                           round=start + t_bad, tau=tau)
+            # The grid layout loss is a sum of squared pairwise
+            # distances — strictly non-negative by construction.
+            if float(seg.min()) < -1e-6:
+                t_bad, b_bad = np.unravel_index(int(seg.argmin()),
+                                                seg.shape)
+                self._fail("loss_sign",
+                           f"negative loss {float(seg.min()):.4g} at "
+                           f"round {start + int(t_bad)}",
+                           round=start + int(t_bad), tau=tau,
+                           value=float(seg.min()))
+            # Explosion vs. committed history: the anneal only ever
+            # shrinks the loss across rungs, so anything orders of
+            # magnitude above the committed ceiling is corruption, not
+            # optimization.  First rung bootstraps the ceiling from its
+            # own median (within-rung dynamic range is small).
+            # Ceiling comes from COMMITTED rungs only — folding the
+            # current segment in would let a corrupt value raise its
+            # own limit.  The first rung bootstraps from its median.
+            med = float(np.median(seg))
+            ref = med if self._loss_ref is None else self._loss_ref
+            lim = pol.explosion_factor * max(ref, 1e-6)
+            if float(seg.max()) > lim:
+                t_bad, b_bad = np.unravel_index(int(seg.argmax()),
+                                                seg.shape)
+                self._fail("loss_explosion",
+                           f"loss {float(seg.max()):.4g} exceeds "
+                           f"{pol.explosion_factor:g}x committed ceiling "
+                           f"{ref:.4g} at round {start + int(t_bad)}",
+                           round=start + int(t_bad), tau=tau,
+                           value=float(seg.max()), limit=float(lim))
+            # Stale buffer: consecutive rung segments bitwise equal is
+            # a repeated DMA buffer, never a legitimate anneal (each
+            # round draws a fresh shuffle).  Only meaningful for
+            # multi-element segments.
+            cur = seg.tobytes()
+            if (seg.size >= 2 and self._prev_loss_bytes is not None
+                    and cur == self._prev_loss_bytes):
+                self._fail("stale_losses",
+                           f"rung at round {start} returned a loss "
+                           "segment bitwise-identical to the previous "
+                           "rung", round=start, tau=tau)
+            # History commits only after EVERY probe passes (end of this
+            # method): a failing rung is replayed from the last verified
+            # boundary and legitimately reproduces the same bytes — the
+            # stale probe must compare against the last VERIFIED rung.
+            commit_losses = (cur, max(ref, float(seg.max())))
+        else:
+            commit_losses = None
+
+        if orders is not None:
+            o = np.asarray(orders)
+            if o.ndim == 1:
+                o = o[None]
+            nn = int(n if n is not None else o.shape[1])
+            ok = (np.sort(o, axis=1) == np.arange(nn)).all(axis=1)
+            if not ok.all():
+                b_bad = int(np.argwhere(~ok).min())
+                self._fail("permutation",
+                           f"instance {b_bad} committed an invalid "
+                           f"permutation after round "
+                           f"{start + (seg_len or 0)}",
+                           round=start, tau=tau, instance=b_bad)
+
+        if keys_in is not None and keys_out is not None \
+                and seg_len is not None:
+            exp = expected_key_chain(keys_in, seg_len)
+            got = np.asarray(keys_out)
+            if exp.shape != got.shape or not (exp == got).all():
+                self._fail("key_chain",
+                           f"PRNG keys after rung at round {start} do "
+                           f"not match the deterministic split chain "
+                           f"({seg_len} rounds)", round=start, tau=tau)
+
+        if ws is not None and band is not None and tau is not None:
+            w = np.asarray(ws, np.float32)
+            if w.ndim == 1:
+                w = w[None]
+            mask = np.ones(w.shape[0], bool) if banded_mask is None \
+                else np.asarray(banded_mask, bool)
+            if mask.any():
+                wv = w[mask]
+                tv = np.broadcast_to(
+                    np.asarray(tau, np.float32).reshape(-1),
+                    (w.shape[0],))[mask] if np.ndim(tau) \
+                    else np.full((int(mask.sum()),), float(tau),
+                                 np.float32)
+                if not np.isfinite(wv).all():
+                    self._fail("band_tail", "non-finite live keys in "
+                               f"banded rung at round {start}",
+                               round=start, tau=None)
+                bound = float(np.max(band_tail_bound(wv, tv, int(band))))
+                if self.wants_shadow(start):
+                    meas = measured_dropped_mass(
+                        wv, tv, int(band), descending=descending)
+                    lim = bound * pol.tail_slack + 1e-6
+                    if meas > lim:
+                        self._fail(
+                            "band_tail",
+                            f"measured dropped mass {meas:.4g} exceeds "
+                            f"analytic band_tail_bound {bound:.4g} at "
+                            f"round {start} (band={band})",
+                            round=start, measured=meas, bound=bound)
+
+        if oracle_losses is not None and losses is not None:
+            self.rungs_shadowed += 1
+            a = np.asarray(losses, np.float64).reshape(-1)
+            b = np.asarray(oracle_losses, np.float64).reshape(-1)
+            tol = pol.shadow_tol(self.dtype)
+            if a.shape != b.shape:
+                self._fail("shadow", "shadow recompute shape mismatch "
+                           f"at round {start}", round=start, tau=tau)
+            rel = np.abs(a - b) / np.maximum(np.abs(b), 1e-6)
+            # `not (ok).all()` so NaN in either side trips the probe.
+            if not bool((rel <= tol).all()):
+                worst = float(np.nanmax(rel)) \
+                    if np.isfinite(rel).any() else float("inf")
+                t_bad = int(np.argmax(~(rel <= tol)))
+                self._fail(
+                    "shadow",
+                    f"kernel-vs-oracle loss mismatch at rung round "
+                    f"{start}: rel err {worst:.4g} > tol {tol:g} "
+                    f"({self.dtype})", round=start, tau=tau,
+                    rel_err=worst, tol=tol)
+        if oracle_orders is not None and orders is not None:
+            a = np.asarray(orders)
+            b = np.asarray(oracle_orders)
+            if a.shape != b.shape or not (a == b).all():
+                self._fail("shadow",
+                           f"committed orders diverge from oracle "
+                           f"recompute at rung round {start}",
+                           round=start, tau=tau)
+
+        if commit_losses is not None:
+            self._prev_loss_bytes, self._loss_ref = commit_losses
+
+    def compare_orders(self) -> bool:
+        """Whether shadow recompute may compare committed orders
+        exactly: safe for f32 (the ~1e-7 kernel-vs-oracle apply parity
+        cannot flip a converged argsort); bf16 trajectories may
+        legitimately commit different ties, so bf16 compares losses
+        only."""
+        return self.dtype != "bfloat16"
+
+    def summary(self) -> dict:
+        return {"mode": self.policy.mode,
+                "shadow_rate": self.policy.shadow_rate,
+                "rungs_checked": self.rungs_checked,
+                "rungs_shadowed": self.rungs_shadowed,
+                "incidents": list(self.incidents)}

@@ -1,0 +1,552 @@
+"""Permutation-integrity guardrail suite (EXPERIMENTS.md §Robustness,
+"Silent corruption").
+
+Three layers, each deterministic:
+
+* **Probe units** — feed `GuardrailMonitor.check_rung` hand-corrupted
+  state and assert the RIGHT probe fires (typed `IntegrityViolation`
+  with a structured incident record).
+* **Engine wiring** — a guarded run (probes + full-rate shadow
+  recompute) commits bit-identical results to an unguarded one on the
+  sequential / batched / segment paths, and `AnnealSupervisor` repairs
+  injected corruption by replaying from the last *verified* checkpoint
+  (then by retiring the kernel tier when the corruption persists).
+* **Chaos grid** — `FaultInjector` value-corruption modes (bit-flip /
+  sign-flip / stale-buffer / NaN-splat) at exact dispatch indices,
+  across the oracle / kernel / banded / bf16 serving paths: every
+  injected corruption is detected by a probe, repaired through the
+  retry + `DivergencePolicy` path, and the repaired run's result is
+  bit-identical per seed to an uninjected run of the same config.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core.shufflesoftsort as sss
+from repro.core.shufflesoftsort import (
+    ShuffleSoftSortConfig,
+    run_round_segment,
+    shuffle_soft_sort,
+    shuffle_soft_sort_batched,
+)
+from repro.core.softsort import band_tail_bound
+from repro.launch.serve import SortServer, WarmHandoff
+from repro.runtime.fault_tolerance import (
+    AnnealSupervisor,
+    CorruptionSpec,
+    DivergencePolicy,
+    FaultInjector,
+    RetryPolicy,
+)
+from repro.runtime.guardrails import (
+    GuardrailMonitor,
+    GuardrailPolicy,
+    IntegrityViolation,
+    expected_key_chain,
+    measured_dropped_mass,
+    shadow_sampled,
+)
+
+N, HW, D = 16, (4, 4), 3
+FULL_SHADOW = GuardrailPolicy(mode="shadow", shadow_rate=1.0)
+INVARIANTS = GuardrailPolicy(mode="invariants")
+FAST_RETRY = RetryPolicy(max_retries=4, backoff_base_s=0.0)
+
+
+def _cfg(**kw):
+    return ShuffleSoftSortConfig(rounds=4, inner_steps=2, chunk=N, **kw)
+
+
+def _mon(policy=INVARIANTS, dtype="float32"):
+    return GuardrailMonitor(policy, context="test", dtype=dtype)
+
+
+def _problem(seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.rand(N, D).astype(np.float32)
+
+
+# ------------------------------------------------------ policy / sampling
+
+def test_policy_validates_mode_and_rate():
+    with pytest.raises(ValueError):
+        GuardrailPolicy(mode="paranoid")
+    with pytest.raises(ValueError):
+        GuardrailPolicy(mode="shadow", shadow_rate=1.5)
+    with pytest.raises(ValueError):
+        GuardrailPolicy(mode="shadow", shadow_rate=-0.1)
+
+
+def test_shadow_sampling_is_deterministic_and_rate_shaped():
+    picks = [shadow_sampled(7, s, 0.5) for s in range(512)]
+    assert picks == [shadow_sampled(7, s, 0.5) for s in range(512)]
+    frac = sum(picks) / len(picks)
+    assert 0.35 < frac < 0.65          # crc32 hash is roughly uniform
+    assert not any(shadow_sampled(7, s, 0.0) for s in range(64))
+    assert all(shadow_sampled(7, s, 1.0) for s in range(64))
+    # different seeds sample different rungs
+    other = [shadow_sampled(8, s, 0.5) for s in range(512)]
+    assert other != picks
+
+
+def test_monitor_off_mode_checks_nothing():
+    mon = _mon(GuardrailPolicy(mode="off"))
+    assert not mon.active
+    mon.check_rung(start=0, orders=np.array([[0, 0, 0, 0]]), n=4)
+    assert mon.rungs_checked == 0
+
+
+# ------------------------------------------------------------ probe units
+
+def _expect_probe(probe, fn):
+    with pytest.raises(IntegrityViolation) as ei:
+        fn()
+    assert ei.value.probe == probe
+    rec = ei.value.incident()
+    assert rec["probe"] == probe and rec["context"] == "test"
+    return ei.value
+
+
+def test_permutation_probe():
+    mon = _mon()
+    bad = np.tile(np.arange(N, dtype=np.int32), (2, 1))
+    bad[1, 3] = bad[1, 4]              # duplicate -> not bijective
+    v = _expect_probe(
+        "permutation",
+        lambda: mon.check_rung(start=0, orders=bad, n=N))
+    assert v.detail["instance"] == 1
+    assert mon.incidents and mon.incidents[0]["probe"] == "permutation"
+
+
+def test_loss_sign_probe():
+    mon = _mon()
+    seg = np.full((2, 3), 0.5, np.float32)
+    seg[1, 0] = -0.2
+    _expect_probe("loss_sign",
+                  lambda: mon.check_rung(start=4, losses=seg, tau=0.7))
+
+
+def test_loss_explosion_probe_uses_committed_ceiling():
+    mon = _mon()
+    mon.check_rung(start=0, losses=np.full((2, 1), 1.0, np.float32))
+    exploded = np.array([[1.0], [1e5]], np.float32)
+    v = _expect_probe(
+        "loss_explosion",
+        lambda: mon.check_rung(start=2, losses=exploded))
+    assert v.round == 3                # start + offending row
+
+
+def test_stale_losses_probe_catches_repeated_buffer():
+    mon = _mon()
+    seg = np.linspace(1.0, 0.5, 4, dtype=np.float32).reshape(2, 2)
+    mon.check_rung(start=0, losses=seg)
+    _expect_probe("stale_losses",
+                  lambda: mon.check_rung(start=2, losses=seg.copy()))
+
+
+def test_finite_probe_catches_nan_splat():
+    mon = _mon()
+    seg = np.full((2, 2), 0.5, np.float32)
+    seg[1, 1] = np.nan
+    v = _expect_probe("finite",
+                      lambda: mon.check_rung(start=6, losses=seg))
+    assert v.round == 7                # start + offending row
+
+
+def test_key_chain_probe():
+    keys_in = np.arange(4, dtype=np.uint32).reshape(2, 2)
+    good = expected_key_chain(keys_in, 3)
+    mon = _mon()
+    mon.check_rung(start=0, keys_in=keys_in, keys_out=good, seg_len=3)
+    corrupt = good.copy()
+    corrupt[0, 0] ^= np.uint32(1 << 7)
+    _expect_probe(
+        "key_chain",
+        lambda: _mon().check_rung(start=0, keys_in=keys_in,
+                                  keys_out=corrupt, seg_len=3))
+
+
+def test_shadow_loss_and_order_probes():
+    losses = np.array([[0.5], [0.4]], np.float32)
+    orders = np.arange(N, dtype=np.int32)[None]
+    mon = _mon(FULL_SHADOW)
+    mon.check_rung(start=0, losses=losses, orders=orders,
+                   oracle_losses=losses.copy(), oracle_orders=orders.copy())
+    _expect_probe(
+        "shadow",
+        lambda: _mon(FULL_SHADOW).check_rung(
+            start=0, losses=losses, oracle_losses=losses * 1.5))
+    flipped = orders.copy()
+    flipped[0, :2] = flipped[0, :2][::-1]
+    _expect_probe(
+        "shadow",
+        lambda: _mon(FULL_SHADOW).check_rung(
+            start=0, orders=orders, oracle_orders=flipped))
+
+
+def test_shadow_tolerance_is_per_dtype():
+    pol = GuardrailPolicy(mode="shadow", shadow_rate=1.0)
+    assert pol.shadow_tol("float32") == pol.tol_f32
+    # bf16 rung-level drift (~0.13 measured) must pass the shadow gate
+    # even though it exceeds the 2e-2 apply-level parity envelope.
+    assert pol.tol("bfloat16") < 0.134 < pol.shadow_tol("bfloat16")
+    losses = np.array([[1.0]], np.float32)
+    drifted = losses * (1 + 0.134)
+    _mon(FULL_SHADOW, dtype="bfloat16").check_rung(
+        start=0, losses=losses, oracle_losses=drifted)
+    _expect_probe(
+        "shadow",
+        lambda: _mon(FULL_SHADOW, dtype="float32").check_rung(
+            start=0, losses=losses, oracle_losses=drifted))
+    # bf16 never compares orders (ties legitimately differ); f32 does
+    assert not _mon(dtype="bfloat16").compare_orders()
+    assert _mon(dtype="float32").compare_orders()
+
+
+def test_band_tail_audit_measured_mass_dominated_by_bound():
+    rng = np.random.RandomState(3)
+    w = np.sort(rng.randn(4, N).astype(np.float32) * 3.0, axis=1)[:, ::-1]
+    for tau in (0.2, 0.5):
+        bound = float(np.max(band_tail_bound(
+            w, np.full(4, tau, np.float32), 4)))
+        meas = measured_dropped_mass(w, tau, 4)
+        assert meas <= bound * 1.05 + 1e-6
+    # the probe path itself: clean keys verify, non-finite keys trip
+    mon = _mon(FULL_SHADOW)
+    mon.check_rung(start=0, ws=w, tau=0.5, band=4)
+    bad = w.copy()
+    bad[0, 0] = np.inf
+    _expect_probe(
+        "band_tail",
+        lambda: _mon(FULL_SHADOW).check_rung(start=0, ws=bad, tau=0.5,
+                                             band=4))
+
+
+# ------------------------------------------------------- engine wiring
+
+def test_batched_guarded_run_is_bit_identical():
+    xs = np.stack([_problem(0), _problem(1)])
+    key = jax.random.PRNGKey(5)
+    cfg = _cfg()
+    r0 = shuffle_soft_sort_batched(xs, HW, cfg, key=key)
+    r1 = shuffle_soft_sort_batched(xs, HW, cfg, key=key,
+                                   guardrail=FULL_SHADOW)
+    np.testing.assert_array_equal(r0.all_orders, r1.all_orders)
+    np.testing.assert_array_equal(r0.all_losses, r1.all_losses)
+
+
+def test_sequential_guarded_run_is_bit_identical():
+    x, key = _problem(), jax.random.PRNGKey(5)
+    cfg = _cfg()
+    o0, s0, l0 = shuffle_soft_sort(x, HW, cfg, key=key)
+    o1, s1, l1 = shuffle_soft_sort(x, HW, cfg, key=key,
+                                   guardrail=FULL_SHADOW)
+    np.testing.assert_array_equal(o0, o1)
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_segment_guarded_run_is_bit_identical():
+    cfg = _cfg()
+    orders = np.tile(np.arange(N, dtype=np.int32), (2, 1))
+    keys = np.stack([np.asarray(jax.random.PRNGKey(i), np.uint32)
+                     for i in (3, 4)])
+    xs = np.stack([_problem(0), _problem(1)])
+    norms = np.ones(2, np.float32)
+    p = np.zeros(2, np.int64)
+    out0 = run_round_segment(xs, orders, keys, norms, p, 2,
+                             hw=HW, cfg=cfg)
+    out1 = run_round_segment(xs, orders.copy(), keys.copy(), norms,
+                             p.copy(), 2, hw=HW, cfg=cfg,
+                             guardrail=FULL_SHADOW)
+    for a, b in zip(out0, out1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class _SegmentCorruptor:
+    """Wrap the module-level `_run_segments` driver: sign-flip one loss
+    of selected calls (optionally only while the kernel tier is on), so
+    the guardrail probes see engine-level silent corruption."""
+
+    def __init__(self, inner, corrupt_calls=(), kernel_only=False):
+        self.inner = inner
+        self.corrupt_calls = set(corrupt_calls)
+        self.kernel_only = kernel_only
+        self.calls = 0
+        self.corruptions = 0
+
+    def __call__(self, *args, **kwargs):
+        i = self.calls
+        self.calls += 1
+        orders, keys, losses = self.inner(*args, **kwargs)
+        corrupt = (i in self.corrupt_calls
+                   or (self.kernel_only and kwargs["cfg"].use_kernel))
+        if corrupt:
+            losses = np.asarray(losses, np.float32).copy()
+            losses.reshape(-1)[0] *= -1.0
+            self.corruptions += 1
+        return orders, keys, losses
+
+
+def test_supervisor_repairs_transient_corruption_by_verified_replay(
+        tmp_path, monkeypatch):
+    xs = np.stack([_problem(0)])
+    key, cfg = jax.random.PRNGKey(9), _cfg()
+    clean = shuffle_soft_sort_batched(xs, HW, cfg, key=key)
+    chaos = _SegmentCorruptor(sss._run_segments, corrupt_calls={1})
+    monkeypatch.setattr(sss, "_run_segments", chaos)
+    sup = AnnealSupervisor(checkpoint_dir=str(tmp_path),
+                           degrade=DivergencePolicy(integrity_retries=2))
+    out = sup.run(xs, HW, cfg, key=key, checkpoint_every=1,
+                  guardrail=INVARIANTS)
+    assert chaos.corruptions == 1
+    assert sup.stats["verified_replays"] == 1
+    assert not sup.stats["fallbacks"]          # no config change needed
+    assert [r["probe"] for r in sup.stats["integrity_incidents"]] \
+        == ["loss_sign"]
+    # repaired run is bit-identical to an uninjected clean run
+    np.testing.assert_array_equal(out.all_orders, clean.all_orders)
+    np.testing.assert_array_equal(out.all_losses, clean.all_losses)
+
+
+def test_supervisor_retires_kernel_tier_on_persistent_corruption(
+        tmp_path, monkeypatch):
+    xs = np.stack([_problem(0)])
+    key, cfg = jax.random.PRNGKey(9), _cfg(use_kernel=True)
+    chaos = _SegmentCorruptor(sss._run_segments, kernel_only=True)
+    monkeypatch.setattr(sss, "_run_segments", chaos)
+    sup = AnnealSupervisor(checkpoint_dir=str(tmp_path),
+                           degrade=DivergencePolicy(integrity_retries=1))
+    out = sup.run(xs, HW, cfg, key=key, checkpoint_every=1,
+                  guardrail=INVARIANTS)
+    # one verified replay (still corrupt), then the ladder retired the
+    # kernel tier and the oracle finished the run
+    assert sup.stats["verified_replays"] == 1
+    assert sup.stats["fallbacks"] == [
+        "retired kernel tier -> pure-jnp oracle apply"]
+    order = np.asarray(out.all_orders).reshape(-1, N)
+    assert (np.sort(order, axis=1) == np.arange(N)).all()
+
+
+# ------------------------------------------------ serving: chaos grid
+
+def _serve_once(cfg, x, key, *, engine=None, guardrail=None,
+                submit_guardrail=None, retry=None):
+    server = SortServer(HW, d=D, cfg=cfg, max_wait_ms=0.0, sched_rungs=2,
+                        engine_fn=engine, guardrail=guardrail,
+                        retry=retry or FAST_RETRY)
+    try:
+        fut = server.submit(x, key=key, guardrail=submit_guardrail)
+        out = fut.result(timeout=300)
+    finally:
+        stats = server.stats
+        server.close()
+    return out, stats
+
+
+PATHS = {
+    "oracle": {},
+    "kernel": {"use_kernel": True},
+    "banded": {"use_kernel": True, "band": 8},
+    "bf16": {"use_kernel": True, "compute_dtype": "bfloat16"},
+}
+# Value-corruption taxonomy at dispatch index 1 (the second rung): the
+# target choices route each mode to a distinct probe family.
+CORRUPTIONS = {
+    "bitflip": CorruptionSpec("bitflip", "orders", 5),    # permutation
+    "signflip": CorruptionSpec("signflip", "losses", 1),  # loss_sign
+    "stale": CorruptionSpec("stale", "losses"),           # stale_losses
+    "nan": CorruptionSpec("nan", "losses", 2),            # finite
+}
+_BASELINES: dict[str, tuple] = {}
+
+
+def _baseline(path, cfg, x, key):
+    if path not in _BASELINES:
+        _BASELINES[path] = _serve_once(cfg, x, key)[0]
+    return _BASELINES[path]
+
+
+@pytest.mark.parametrize("corruption", sorted(CORRUPTIONS))
+@pytest.mark.parametrize("path", sorted(PATHS))
+def test_chaos_grid_detects_repairs_and_restores_bit_identity(
+        path, corruption):
+    cfg = _cfg(**PATHS[path])
+    x, key = _problem(), jax.random.PRNGKey(11)
+    clean = _baseline(path, cfg, x, key)
+    inj = FaultInjector(run_round_segment,
+                        corrupt_calls={1: CORRUPTIONS[corruption]})
+    out, stats = _serve_once(cfg, x, key, engine=inj,
+                             guardrail=FULL_SHADOW)
+    assert inj.corruptions == 1, "corruption was not injected"
+    assert stats["integrity_violations"] >= 1, "corruption not detected"
+    assert stats["integrity_incidents"][0]["probe"] is not None
+    # transient SDC: the replay is clean, no config change is consumed,
+    # and the repaired result is bit-identical to the uninjected run
+    assert stats["self_heals"] == 0
+    for a, b in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chaos_key_corruption_caught_by_key_chain_probe():
+    cfg = _cfg()
+    x, key = _problem(), jax.random.PRNGKey(11)
+    clean = _baseline("oracle", cfg, x, key)
+    inj = FaultInjector(run_round_segment,
+                        corrupt_calls={1: CorruptionSpec("bitflip",
+                                                         "keys", 0)})
+    out, stats = _serve_once(cfg, x, key, engine=inj,
+                             guardrail=FULL_SHADOW)
+    assert stats["integrity_incidents"][0]["probe"] == "key_chain"
+    for a, b in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_persistent_corruption_self_heals_to_oracle():
+    cfg = _cfg(use_kernel=True)
+    x, key = _problem(), jax.random.PRNGKey(11)
+    # strike 1 (replay) and strike 2 (past heal_after=1) both corrupt;
+    # the heal retires the kernel tier, later dispatches are clean
+    inj = FaultInjector(
+        run_round_segment,
+        corrupt_calls={1: CorruptionSpec("signflip", "losses", 0),
+                       2: CorruptionSpec("signflip", "losses", 0)})
+    out, stats = _serve_once(cfg, x, key, engine=inj,
+                             guardrail=FULL_SHADOW)
+    assert stats["integrity_violations"] == 2
+    assert stats["self_heals"] == 1
+    order = np.asarray(out[0])
+    assert (np.sort(order) == np.arange(N)).all()
+
+
+def test_per_request_guardrail_override_and_opt_out():
+    cfg = _cfg()
+    x, key = _problem(), jax.random.PRNGKey(11)
+    clean = _baseline("oracle", cfg, x, key)
+    spec = CorruptionSpec("signflip", "losses", 1)
+    # unguarded server, guarded REQUEST: detection still happens
+    inj = FaultInjector(run_round_segment, corrupt_calls={1: spec})
+    out, stats = _serve_once(cfg, x, key, engine=inj,
+                             submit_guardrail=FULL_SHADOW)
+    assert stats["integrity_violations"] == 1
+    for a, b in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # guarded server, request opts OUT: the corruption commits silently
+    # (negative control — detection is the guardrail, not an accident)
+    inj2 = FaultInjector(run_round_segment, corrupt_calls={1: spec})
+    out2, stats2 = _serve_once(
+        cfg, x, key, engine=inj2, guardrail=FULL_SHADOW,
+        submit_guardrail=GuardrailPolicy(mode="off"))
+    assert stats2["integrity_violations"] == 0
+    assert not np.array_equal(np.asarray(out2[2]), np.asarray(clean[2]))
+
+
+def test_guardrail_type_validation():
+    with pytest.raises(TypeError):
+        SortServer(HW, d=D, cfg=_cfg(), guardrail="shadow",
+                   autostart=False)
+    server = SortServer(HW, d=D, cfg=_cfg(), autostart=False)
+    with pytest.raises(TypeError):
+        server.submit(_problem(), guardrail="invariants")
+    server.close()
+
+
+# --------------------------------- injector serialization + warm handoff
+
+def test_injector_state_dict_roundtrip():
+    inj = FaultInjector(lambda: (np.zeros(2), np.zeros(2), np.ones(3)),
+                        fail_calls={5}, delay_calls={2: 0.25},
+                        corrupt_calls={3: CorruptionSpec("nan", "losses")})
+    inj()
+    inj()
+    state = inj.state_dict()
+    import json
+    json.dumps(state)                       # JSON-able, by contract
+    fresh = FaultInjector(lambda: None)
+    fresh.load_state_dict(state)
+    assert fresh.calls == 2
+    assert fresh.fail_calls == {5}
+    assert fresh.delay_calls == {2: 0.25}
+    assert fresh.corrupt_calls == {3: CorruptionSpec("nan", "losses")}
+    assert fresh.state_dict() == state
+
+
+def test_warm_handoff_preserves_injection_cursor(tmp_path):
+    """A preempted chaos scenario resumes with its injection cursor
+    intact: the corruption scheduled for dispatch 1 fires exactly once,
+    in the successor, and the repaired result stays bit-identical."""
+    cfg = _cfg()
+    x, key = _problem(), jax.random.PRNGKey(11)
+    clean = _baseline("oracle", cfg, x, key)
+    spec = CorruptionSpec("signflip", "losses", 0)
+    inj1 = FaultInjector(run_round_segment, corrupt_calls={1: spec})
+    s1 = SortServer(HW, d=D, cfg=cfg, sched_rungs=2, engine_fn=inj1,
+                    guardrail=FULL_SHADOW, retry=FAST_RETRY,
+                    checkpoint_dir=str(tmp_path), autostart=False)
+    s1.submit(x, key=key)
+    s1._tick()                          # dispatch 0 (clean rung 0)
+    handoff = s1.close(drain=False)
+    assert isinstance(handoff, WarmHandoff)
+    assert handoff.injector_state["calls"] == 1
+    assert handoff.injector_state["corruptions"] == 0
+
+    # successor in a "new process": fresh injector, cursor restored
+    # from the persisted handoff
+    inj2 = FaultInjector(run_round_segment, corrupt_calls={1: spec})
+    s2 = SortServer(HW, d=D, cfg=cfg, sched_rungs=2, engine_fn=inj2,
+                    guardrail=FULL_SHADOW, retry=FAST_RETRY,
+                    resume=str(tmp_path), autostart=False)
+    assert inj2.calls == 1              # cursor restored
+    for _ in range(32):
+        with s2._cv:
+            if not s2._pending and not s2._active:
+                break
+        s2._tick()
+    fut = s2.resumed[0].future
+    out = fut.result(timeout=10)
+    stats = s2.stats
+    s2.close()
+    assert inj2.corruptions == 1        # fired exactly once, post-resume
+    assert stats["integrity_violations"] == 1
+    for a, b in zip(out, clean):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------- CLI
+
+def _cli(extra):
+    from repro.launch.serve import main
+    base = ["--workload", "sort", "--requests", "2", "--sort-n", "16",
+            "--sort-hw", "4", "--sort-d", "2", "--rounds", "4",
+            "--max-batch", "2"]
+    return main(base + extra)
+
+
+def test_cli_guardrail_smoke():
+    out = _cli(["--guardrail", "shadow", "--shadow-rate", "1.0"])
+    assert out["integrity_violations"] == 0     # clean run
+    assert out["self_heals"] == 0
+    assert out["improved"] >= 0
+
+
+def test_cli_invariants_smoke():
+    out = _cli(["--guardrail", "invariants"])
+    assert out["integrity_violations"] == 0
+
+
+def test_cli_shadow_rate_requires_shadow_mode(capsys):
+    with pytest.raises(SystemExit):
+        _cli(["--shadow-rate", "0.5"])
+    assert "--guardrail shadow" in capsys.readouterr().err
+    with pytest.raises(SystemExit):
+        _cli(["--guardrail", "invariants", "--shadow-rate", "0.5"])
+
+
+def test_cli_shadow_rate_range_validated(capsys):
+    with pytest.raises(SystemExit):
+        _cli(["--guardrail", "shadow", "--shadow-rate", "1.5"])
+    assert "must be in" in capsys.readouterr().err

@@ -86,6 +86,54 @@ def test_band_tail_bound_dominates_true_dropped_mass(w, seed):
     assert dropped <= bound * (1 + 1e-5) + 1e-6
 
 
+@given(w=strat.key_vectors(min_n=5), seed=strat.prng_seeds())
+def test_band_tail_bound_dominates_descending_dropped_mass(w, seed):
+    """The bound is rank-symmetric: it holds unchanged when row i
+    targets rank N-1-i (``descending=True``) — the gap statistic g_K
+    does not care which end of the sort the rows count from."""
+    w = jnp.float32(w)
+    n = w.shape[0]
+    rng = np.random.RandomState(seed % 2**31)
+    tau = np.float32(rng.uniform(0.01, 2.0))
+    band = int(rng.randint(1, n))
+    p = np.asarray(softsort_matrix(w, tau, descending=True), np.float64)
+    ranks = np.argsort(np.argsort(np.asarray(w), kind="stable"),
+                       kind="stable")
+    # Row i of the descending matrix targets ascending rank n-1-i.
+    targets = n - 1 - np.arange(n)
+    out_of_band = np.abs(ranks[None, :] - targets[:, None]) > band
+    dropped = (p * out_of_band).sum(axis=1).max()
+    bound = float(band_tail_bound(w, tau, band))
+    assert dropped <= bound * (1 + 1e-5) + 1e-6
+
+
+@given(w=strat.key_vectors(min_n=5), seed=strat.prng_seeds())
+def test_band_tail_bound_dominates_bf16_rounded_scoring(w, seed):
+    """bf16 keys-rounded scoring: the kernel tier scores with keys
+    rounded to bfloat16 while the stored f32 keys feed the analytic
+    bound.  Rounding perturbs every |sort(w)_i - w_j| by at most
+    ``eps = 2^-8 * max|w|`` (8-bit mantissa), which inflates the
+    dropped mass by at most ``exp(2 eps / tau)`` — each out-of-band
+    numerator term grows by <= exp(eps/tau) and the >= 1 softmax
+    denominator shrinks by >= exp(-eps/tau).  The f32-keys bound times
+    that analytic slack still dominates."""
+    w = jnp.float32(w)
+    n = w.shape[0]
+    rng = np.random.RandomState(seed % 2**31)
+    tau = np.float32(rng.uniform(0.05, 2.0))   # slack ~ exp(eps/tau)
+    band = int(rng.randint(1, n))
+    w_r = jnp.asarray(w, jnp.bfloat16).astype(jnp.float32)
+    p = np.asarray(softsort_matrix(w_r, tau), np.float64)
+    ranks = np.argsort(np.argsort(np.asarray(w_r), kind="stable"),
+                       kind="stable")
+    out_of_band = np.abs(ranks[None, :] - np.arange(n)[:, None]) > band
+    dropped = (p * out_of_band).sum(axis=1).max()
+    bound = float(band_tail_bound(w, tau, band))
+    eps = float(np.max(np.abs(np.asarray(w)))) * 2.0 ** -8
+    slack = float(np.exp(2.0 * eps / float(tau)))
+    assert dropped <= bound * slack * (1 + 1e-5) + 1e-6
+
+
 @given(hw=strat.grid_shapes(max_side=3), seed=strat.prng_seeds(),
        cfg_draw=strat.tau_schedule_cfgs())
 def test_chained_segments_bit_identical_to_uninterrupted_run(

@@ -57,6 +57,16 @@ Bench-specific checks:
     generations' completions partition the total
     (``completed_gen1 + completed_gen2 == completed``).
 
+  * ``guardrail_bench`` (BENCH_guardrails.json) — the chaos grid must
+    show every injected value corruption detected (with a named firing
+    probe), repaired, and bit-identical to a clean run
+    (``detection_rate == 1.0`` — the booleans are backend-exact, so a
+    committed cell that fails was a real guardrail escape), and the
+    overhead cells must include exactly one default-rate cell, gated
+    at <= 5% probe overhead on full runs (smoke runs are schema-checked
+    only: wall-clock thresholds are machine-dependent, the committed
+    full-run artifact carries the gate).
+
 Usage (CI runs exactly this, see .github/workflows/ci.yml):
 
     python tools/check_bench.py                 # BENCH_*.json + autotune
@@ -125,6 +135,26 @@ SERVING_PREEMPT_KEYS = ("preempted_inflight", "resumed_requests",
 
 AUTOTUNE_CELL_KEYS = ("tier", "N", "d", "K", "dtype", "backend", "winner",
                       "winner_s", "candidate_s")
+
+# Guardrail chaos/overhead records (BENCH_guardrails.json, from
+# benchmarks/guardrail_bench.py).  Detection cells are the committed
+# proof that every injected value-corruption mode is caught, repaired,
+# and leaves the repaired run bit-identical to a clean one — booleans,
+# exact on any backend, so the gate is unconditional.  Overhead cells
+# carry the guarded-vs-unguarded timing axis; the DEFAULT-rate cell is
+# gated at <= 5% probe overhead, but only on full runs ("smoke": false)
+# — wall-clock thresholds on a shared CI box are noise, so CI checks
+# the committed full-run artifact and only schema-checks its own smoke
+# output.
+GUARDRAIL_DETECTION_KEYS = ("kind", "path", "corruption", "target",
+                            "dispatch_index", "injected", "detected",
+                            "probe", "repaired", "bit_identical",
+                            "violations", "self_heals", "wall_s")
+GUARDRAIL_OVERHEAD_KEYS = ("kind", "mode", "shadow_rate", "default", "B",
+                           "N", "rounds", "inner_steps", "rungs",
+                           "rungs_shadowed", "reps", "unguarded_s",
+                           "guarded_s", "overhead_pct")
+GUARDRAIL_MAX_DEFAULT_OVERHEAD_PCT = 5.0
 
 # The committed autotune table lives with the package so dispatch can
 # find it from any cwd; validate it alongside the BENCH_*.json glob.
@@ -342,6 +372,88 @@ def _check_autotune_cells(path, doc, cells, errors):
                 f"own timing '{label}'")
 
 
+def _check_guardrail_cells(path, doc, cells, errors):
+    backend = doc.get("backend")
+    if doc.get("wall_clock") == "measured" and backend != "tpu":
+        errors.append(
+            f"{path}: wall_clock = 'measured' on a {backend!r} backend "
+            "— off-TPU guardrail timings must be labeled 'emulated'")
+    smoke = bool(doc.get("smoke", False))
+    det = [c for c in cells if isinstance(c, dict)
+           and c.get("kind") == "detection"]
+    over = [c for c in cells if isinstance(c, dict)
+            and c.get("kind") == "overhead"]
+    if not det:
+        errors.append(f"{path}: no detection cells")
+    if not over:
+        errors.append(f"{path}: no overhead cells")
+    caught = 0
+    for i, cell in enumerate(det):
+        for key in GUARDRAIL_DETECTION_KEYS:
+            if key not in cell:
+                errors.append(f"{path}: detection cells[{i}] missing "
+                              f"'{key}'")
+        if cell.get("injected", 0) < 1:
+            errors.append(
+                f"{path}: detection cells[{i}] "
+                f"({cell.get('path')}/{cell.get('corruption')}) never "
+                "injected its corruption — the grid cell measured "
+                "nothing")
+        good = (cell.get("detected") is True
+                and cell.get("repaired") is True
+                and cell.get("bit_identical") is True)
+        caught += good
+        if not good:
+            errors.append(
+                f"{path}: detection cells[{i}] "
+                f"({cell.get('path')}/{cell.get('corruption')}) failed "
+                f"the chaos gate: detected={cell.get('detected')} "
+                f"repaired={cell.get('repaired')} "
+                f"bit_identical={cell.get('bit_identical')} — an "
+                "injected corruption slipped a committed guardrail")
+        if cell.get("detected") and not cell.get("probe"):
+            errors.append(
+                f"{path}: detection cells[{i}] detected a corruption "
+                "but recorded no firing probe")
+    rate = doc.get("detection_rate")
+    if det and rate != 1.0:
+        errors.append(
+            f"{path}: detection_rate = {rate!r} must be exactly 1.0")
+    elif det and caught != len(det):
+        errors.append(
+            f"{path}: detection_rate says 1.0 but only {caught}/"
+            f"{len(det)} cells pass the chaos gate")
+    defaults = []
+    for i, cell in enumerate(over):
+        for key in GUARDRAIL_OVERHEAD_KEYS:
+            if key not in cell:
+                errors.append(f"{path}: overhead cells[{i}] missing "
+                              f"'{key}'")
+        r = cell.get("shadow_rate")
+        if not isinstance(r, (int, float)) or not 0.0 <= r <= 1.0:
+            errors.append(
+                f"{path}: overhead cells[{i}].shadow_rate = {r!r} must "
+                "be in [0, 1]")
+        if cell.get("default") is True:
+            defaults.append(cell)
+    if over and len(defaults) != 1:
+        errors.append(
+            f"{path}: exactly one overhead cell must be flagged "
+            f"'default': true, found {len(defaults)}")
+    for cell in defaults:
+        pct = cell.get("overhead_pct")
+        if not isinstance(pct, (int, float)):
+            errors.append(
+                f"{path}: default overhead cell has non-numeric "
+                f"overhead_pct = {pct!r}")
+        elif not smoke and pct > GUARDRAIL_MAX_DEFAULT_OVERHEAD_PCT:
+            errors.append(
+                f"{path}: default-rate probe overhead {pct:.2f}% "
+                f"exceeds the {GUARDRAIL_MAX_DEFAULT_OVERHEAD_PCT}% "
+                "budget (EXPERIMENTS.md §Robustness) — the always-on "
+                "guardrail rate must stay in the noise")
+
+
 def check_file(path: str, tol: float, tol_bf16: float) -> list[str]:
     errors: list[str] = []
     try:
@@ -374,6 +486,8 @@ def check_file(path: str, tol: float, tol_bf16: float) -> list[str]:
         _check_autotune_cells(path, doc, cells, errors)
     elif bench == "serving_bench":
         _check_serving_cells(path, doc, cells, errors)
+    elif bench == "guardrail_bench":
+        _check_guardrail_cells(path, doc, cells, errors)
     elif bench.startswith("batched_bench"):
         for i, cell in enumerate(cells):
             if not isinstance(cell, dict):
