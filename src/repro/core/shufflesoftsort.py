@@ -532,7 +532,8 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
                             mesh, ckpt, resume: bool, every: int,
                             rung_hook, meta: dict,
                             check_finite: bool = True,
-                            band: int | None = None, monitor=None):
+                            band: int | None = None, monitor=None,
+                            mesh_hook=None):
     """Fixed-schedule batched run in checkpointed rung segments.
 
     Chains ``_run_segments`` calls across the checkpoint edges — the
@@ -543,6 +544,13 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
     ``resume`` the run restarts from the newest checkpoint's round (a
     bare directory starts from scratch).  ``rung_hook(start_round)``
     fires before each segment — the chaos harness's kill point.
+
+    ``mesh_hook(start_round, mesh) -> mesh | None`` fires right after
+    ``rung_hook`` and may return a REPLACEMENT mesh to run the next
+    segment on — the elastic re-shard point.  Because the carry is
+    layout-free (``_engine_run`` re-pads per call), swapping the mesh at
+    a rung boundary is purely a throughput change: results stay
+    bit-identical per seed (tests/test_elastic.py).
 
     With a ``monitor`` (``runtime.guardrails.GuardrailMonitor``) the
     integrity probes run on each rung's synced state AFTER the finite
@@ -577,6 +585,15 @@ def _run_fixed_checkpointed(xs_t, orders, keys, taus, norms_t, *,
             continue
         if rung_hook is not None:
             rung_hook(start)
+        if mesh_hook is not None:
+            new_mesh = mesh_hook(start, mesh)
+            if new_mesh is not None:
+                mesh = new_mesh
+                # The carry is committed to the old mesh's devices;
+                # round-trip it through host numpy so the next dispatch
+                # re-places (and re-pads) it onto the new mesh.
+                orders = jnp.asarray(np.asarray(orders))
+                keys = jnp.asarray(np.asarray(keys))
         k_in = o_in = None
         if mon is not None:
             k_in = np.asarray(keys)
@@ -791,7 +808,8 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
                   boundary_hook=None, ckpt=None, resume: bool = False,
                   meta: dict | None = None, rung_hook=None,
                   hook_state: dict | None = None,
-                  check_finite: bool = True, monitor=None):
+                  check_finite: bool = True, monitor=None,
+                  mesh_hook=None):
     """Host-side adaptive decision loop around the ragged engines.
 
     Each iteration advances every live instance by one ``seg_len`` rung
@@ -816,7 +834,11 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
     rung, before any work — a kill there loses at most the in-flight
     rung, and the resumed run replays it from the last committed
     boundary bit-identically (the controller's decisions are pure
-    functions of committed observations).
+    functions of committed observations).  ``mesh_hook(executed_rounds,
+    mesh) -> mesh | None`` fires right after ``rung_hook`` and may
+    swap in a replacement mesh for the remaining rungs — the elastic
+    re-shard point; the ragged carry is layout-free, so the swap is
+    bit-identity-preserving (tests/test_elastic.py).
 
     Returns (orders (BS, N) device, keys (BS, 2) device,
     losses (BS, R) np.float32 — NaN at never-executed rounds,
@@ -860,6 +882,15 @@ def _run_adaptive(xs_t, orders, keys, norms_t, *, hw,
             break
         if rung_hook is not None:
             rung_hook(step * seg)
+        if mesh_hook is not None:
+            new_mesh = mesh_hook(step * seg, mesh)
+            if new_mesh is not None:
+                mesh = new_mesh
+                d_mesh = mesh.shape["data"]
+                # Drop the device-committed carry to host: the next
+                # ragged dispatch re-places it on the new mesh.
+                orders = jnp.asarray(np.asarray(orders))
+                keys = jnp.asarray(np.asarray(keys))
         # All live instances have executed exactly step * seg rounds —
         # stopped instances never rejoin, so executed stays uniform.
         exec0 = step * seg
@@ -1486,6 +1517,7 @@ def shuffle_soft_sort_batched(
     rung_hook: Optional[Callable[[int], None]] = None,
     check_finite: bool = True,
     guardrail=None,
+    mesh_hook=None,
 ) -> BatchedSortResult:
     """Sort B problems at once, S random restarts each.
 
@@ -1536,6 +1568,14 @@ def shuffle_soft_sort_batched(
         The fixed fast path reroutes through the rung-segmented runner
         (bit-identical by the segment-chaining contract) so probes see
         real rung boundaries.
+      mesh_hook: optional ``f(start_round, mesh) -> mesh | None`` fired
+        at each rung boundary; returning a mesh swaps the remaining
+        rungs onto it — the elastic re-shard seam (device eviction /
+        return at rung boundaries, EXPERIMENTS.md §Robustness "Elastic
+        capacity").  Forces the rung-segmented runner on the fixed
+        path, like ``rung_hook``.  The carry is layout-free, so a
+        mid-run mesh swap keeps per-seed bit-identity
+        (tests/test_elastic.py).
 
     Returns:
       ``BatchedSortResult`` — see its field docs.
@@ -1547,8 +1587,9 @@ def shuffle_soft_sort_batched(
     ckpt = _open_checkpointer(checkpoint_dir, resume)
     mon = _open_guardrails(guardrail, cfg, "batched")
     if callback is not None and (ckpt is not None or rung_hook is not None
-                                 or mon is not None):
-        raise ValueError("checkpoint_dir/rung_hook/guardrail are "
+                                 or mon is not None
+                                 or mesh_hook is not None):
+        raise ValueError("checkpoint_dir/rung_hook/guardrail/mesh_hook are "
                          "incompatible with the per-round callback stream")
     xs, b, s, n, keys, xs_t, norms_t, orders = _prep_instances(
         xs, hw, n_restarts, key, keys)
@@ -1564,7 +1605,8 @@ def shuffle_soft_sort_batched(
             xs_t, orders, keys, norms_t, hw=hw, cfg=cfg, mesh=mesh,
             controller=ctrl, ckpt=ckpt, resume=resume,
             meta=_engine_meta("adaptive", cfg, n, bs, hw),
-            rung_hook=rung_hook, check_finite=check_finite, monitor=mon)
+            rung_hook=rung_hook, check_finite=check_finite, monitor=mon,
+            mesh_hook=mesh_hook)
         all_losses = losses_bs.reshape(b, s, cfg.rounds)
         all_orders = np.asarray(orders).reshape(b, s, n)
         executed = ctrl.executed.reshape(b, s)
@@ -1592,7 +1634,8 @@ def shuffle_soft_sort_batched(
     taus = _tau_schedule(cfg)
 
     if callback is None:
-        if ckpt is not None or rung_hook is not None or mon is not None:
+        if (ckpt is not None or rung_hook is not None or mon is not None
+                or mesh_hook is not None):
             # Checkpointed path: the same schedule chained across rung
             # segments (bit-identical to the fast path — PR 6's
             # segment-chaining contract), publishing the carry at each
@@ -1606,7 +1649,8 @@ def shuffle_soft_sort_batched(
                 every=checkpoint_every or max(1, cfg.rounds // 8),
                 rung_hook=rung_hook,
                 meta=_engine_meta("batched", cfg, n, bs, hw),
-                check_finite=check_finite, band=band, monitor=mon)
+                check_finite=check_finite, band=band, monitor=mon,
+                mesh_hook=mesh_hook)
         else:
             # Fast path: the whole R-round schedule as one scanned
             # device program (two when the band switch splits the
@@ -1725,7 +1769,8 @@ def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
                                  n_rungs, mesh, ckpt=None,
                                  resume=False, rung_hook=None,
                                  check_finite=True,
-                                 monitor=None) -> TournamentResult:
+                                 monitor=None,
+                                 mesh_hook=None) -> TournamentResult:
     """Adaptive-schedule tournament: the shared ``_run_adaptive`` loop
     with a cull hook at the rung edges.
 
@@ -1778,7 +1823,7 @@ def _restart_tournament_adaptive(xs, b, s, n, keys_fl, xs_t, norms_t,
         controller=ctrl, boundary_hook=hook, ckpt=ckpt, resume=resume,
         meta=_engine_meta("tournament-adaptive", cfg, n, b * s, hw),
         rung_hook=rung_hook, hook_state=hstate, check_finite=check_finite,
-        monitor=monitor)
+        monitor=monitor, mesh_hook=mesh_hook)
     # If every restart stopped before a late edge, its hook never fired;
     # the live set was already final, so log it for those rungs too.
     alive = hstate["alive"]
@@ -1822,6 +1867,7 @@ def restart_tournament(
     rung_hook: Optional[Callable[[int], None]] = None,
     check_finite: bool = True,
     guardrail=None,
+    mesh_hook=None,
 ) -> TournamentResult:
     """Successive-halving restart scheduler over the batched engine.
 
@@ -1855,6 +1901,12 @@ def restart_tournament(
         natural seam, so alive sets and survivor logs are always
         consistent with the stored orders; ``checkpoint_every`` does
         not apply here.
+      mesh_hook: optional ``f(start_round, mesh) -> mesh | None`` fired
+        at each rung boundary (after ``rung_hook``); returning a mesh
+        re-shards the remaining rungs over it — the elastic
+        eviction/return seam (EXPERIMENTS.md §Robustness, "Elastic
+        capacity").  Bit-identity-preserving: the rung carry is
+        layout-free.
 
     Returns:
       ``TournamentResult`` — see its field docs.
@@ -1870,7 +1922,7 @@ def restart_tournament(
             xs, b, s, n, keys_fl, xs_t, norms_t, orders, hw=hw, cfg=cfg,
             cull_fraction=cull_fraction, n_rungs=n_rungs, mesh=mesh,
             ckpt=ckpt, resume=resume, rung_hook=rung_hook,
-            check_finite=check_finite, monitor=mon)
+            check_finite=check_finite, monitor=mon, mesh_hook=mesh_hook)
     dense_fn = _select_apply_fn(cfg)
     band = resolve_band(cfg, n)
     switch = _band_switch_round(cfg, n)
@@ -1917,6 +1969,16 @@ def restart_tournament(
             continue
         if rung_hook is not None:
             rung_hook(start)
+        if mesh_hook is not None:
+            new_mesh = mesh_hook(start, mesh)
+            if new_mesh is not None:
+                mesh = new_mesh
+                d_mesh = mesh.shape["data"]
+                # Survivor gathers keep the tournament carry on the old
+                # mesh's devices; pull every array through host numpy
+                # so the next rung re-places it on the new mesh.
+                for nm in ("xs", "orders", "keys", "norms"):
+                    cur[nm] = jnp.asarray(np.asarray(cur[nm]))
         s_k = alive.shape[1]
         k_in = o_in = None
         if mon is not None:

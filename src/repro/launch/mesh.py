@@ -53,7 +53,7 @@ def make_production_mesh(*, multi_pod: bool = False,
     return jax.make_mesh(shape, axes, devices=jax.devices()[:ndev])
 
 
-def make_sort_mesh(n_devices: int | None = None):
+def make_sort_mesh(n_devices: int | None = None, *, devices=None):
     """1-D ("data",) mesh for sharded permutation workloads.
 
     ``n_devices=None`` uses every visible device.  The sharded engine
@@ -61,10 +61,21 @@ def make_sort_mesh(n_devices: int | None = None):
     B x S instance axis over "data", padding the tail shard; per-seed
     results are bit-identical to the single-device vmap engine, so the
     mesh size is purely a throughput knob (EXPERIMENTS.md §Scaling).
+
+    ``devices=`` restricts the mesh to an explicit device list — the
+    elastic re-shard path rebuilds the mesh over the SURVIVORS of a
+    device eviction at a rung boundary (EXPERIMENTS.md §Robustness,
+    "Elastic capacity"); because the rung carry is stored in logical
+    layout, the rebuilt mesh is purely a throughput change and per-seed
+    results stay bit-identical.
     """
-    avail = jax.devices()
+    avail = jax.devices() if devices is None else list(devices)
     n = len(avail) if n_devices is None else int(n_devices)
-    if not 1 <= n <= len(avail):
+    if n <= 0:
+        raise RuntimeError(
+            f"sort mesh wants {n} devices; n_devices must be >= 1 "
+            "(None = every visible device)")
+    if n > len(avail):
         raise RuntimeError(
             f"sort mesh wants {n} devices, have {len(avail)}; set "
             "XLA_FLAGS=--xla_force_host_platform_device_count before "

@@ -45,6 +45,15 @@ Two workloads share this entrypoint:
   tournament.  ``--dtype bfloat16`` (with ``--use-kernel``) selects the
   mixed-precision kernel tier: bf16 score/payload compute and half the
   payload HBM traffic, f32 keys/stats/Adam (EXPERIMENTS.md §Perf).
+
+  Elastic capacity (EXPERIMENTS.md §Robustness, "Elastic capacity"):
+  ``--device-health K`` classifies dispatch failures through a
+  ``DeviceHealthMonitor`` — a device named by ``DeviceLost`` K times is
+  evicted, the mesh re-shards over the survivors at the next rung
+  boundary (bit-identical per seed; the carry is layout-free), and
+  returning devices grow it back.  ``--brownout`` arms the overload
+  brownout ladder: under capacity loss or queue pressure, new requests
+  degrade culled → adaptive → banded → bf16 before anything is shed.
 """
 from __future__ import annotations
 
@@ -103,6 +112,43 @@ def _next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
+# Brownout ladder rungs, mildest first.  Level k applies rungs 1..k:
+#   culled   — run the request's restarts as a maximally-culled
+#              tournament (keep=1 at every interior rung boundary)
+#   adaptive — force schedule="adaptive" so converged restarts exit at
+#              the first plateaued boundary instead of running all R
+#   banded   — snap the dense apply to the O(N*K) banded tier
+#   bf16     — drop the kernel tier to bfloat16 compute
+_BROWNOUT_LADDER = ("culled", "adaptive", "banded", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutPolicy:
+    """Overload brownout: degrade per-request quality BEFORE shedding.
+
+    When measured capacity drops (a device eviction, the straggler
+    monitor halving the batch bucket cap) or queue depth crosses the
+    watermarks, the server walks a monotone degradation ladder
+    (``_BROWNOUT_LADDER``) one level per scheduler tick — and walks it
+    back down, one level per tick, as capacity returns (hysteresis:
+    the low watermark must clear before pressure stops counting).
+
+    Degradations are applied to a request ONCE, at first admission, so
+    an in-flight anneal never changes config mid-run (bit-identity per
+    admitted config is preserved); they are keyed to deadline slack —
+    a request with more than ``slack_full_s`` of slack (or no deadline
+    at all) is degraded one level more gently, since shedding risk is
+    what the ladder exists to avoid.  Every applied rung is recorded in
+    ``stats["degradations"]`` and the per-request ``degraded`` tuple.
+
+    ``high_watermark`` / ``low_watermark`` are fractions of
+    ``queue_depth``.
+    """
+    high_watermark: float = 0.5
+    low_watermark: float = 0.25
+    slack_full_s: float = 2.0
+
+
 @dataclasses.dataclass(eq=False)      # identity semantics: requests are
 class _SortRequest:                   # tracked in lists via `is`, and the
                                       # generated field-wise __eq__ would
@@ -142,6 +188,11 @@ class _SortRequest:                   # tracked in lists via `is`, and the
     # anneal (converged early; frozen, but still winner candidates).
     ctrl: object | None = None
     done_mask: np.ndarray | None = None  # (S_live,) bool
+    # Brownout bookkeeping: which ladder rungs were applied to this
+    # request at admission (monotone: never grows after admission), and
+    # whether the "culled" rung forces keep=1 at tournament boundaries.
+    degraded: tuple = ()
+    brownout_cull: bool = False
 
     @property
     def n_live(self) -> int:
@@ -175,6 +226,13 @@ class WarmHandoff:
     # injection cursor/schedules ride along so a resumed chaos scenario
     # keeps exact fault accounting (FaultInjector.state_dict()).
     injector_state: dict | None = None
+    # Elastic-capacity state: a successor preempted mid-brownout must
+    # resume at the same ladder position, with the same evicted-device
+    # set (its mesh rebuilt over the survivors) and the health
+    # monitor's strike counts (DeviceHealthMonitor.state_dict()).
+    brownout_level: int = 0
+    evicted_devices: tuple = ()
+    health_state: dict | None = None
 
 
 class SortServer:
@@ -221,6 +279,21 @@ class SortServer:
       instance-round, feeds a ``StragglerMonitor``; a flagged dispatch
       halves the batch bucket cap (restored after a healthy streak) so
       traffic reroutes into smaller batches around the slow path.
+    * **Elastic capacity** (``device_health=DeviceHealthMonitor(...)``,
+      EXPERIMENTS.md §Robustness "Elastic capacity") — a dispatch
+      failure naming a device (``DeviceLost``) past the strike budget
+      EVICTS it: the mesh is rebuilt over the survivors and the rung's
+      requests replay from their last committed boundary on the next
+      tick — a one-rung-boundary hiccup, bit-identical per seed to an
+      uninterrupted run (the rung carry is layout-free).  Evicted
+      devices that probe healthy again grow the mesh back at a tick
+      boundary.  Counted in ``stats["evictions"]`` /
+      ``stats["reshards"]`` / ``stats["device_returns"]``.
+    * **Brownout ladder** (``brownout=BrownoutPolicy()``) — under
+      capacity loss or queue pressure, newly admitted requests degrade
+      through culled → adaptive → banded → bf16 (keyed to deadline
+      slack) BEFORE anything is shed; the ladder steps one level per
+      tick each way.  Counted per rung in ``stats["degradations"]``.
     * **Reproducibility** — requests submitted without a key draw from
       a server-owned PRNG stream seeded by ``seed``: same seed + same
       submission order = bit-identical results, end to end.
@@ -257,7 +330,8 @@ class SortServer:
                  straggler_recovery: int = 8,
                  checkpoint_dir: str | None = None, resume=None,
                  engine_fn=None, autostart: bool = True,
-                 guardrail=None, degrade=None):
+                 guardrail=None, degrade=None,
+                 brownout=None, device_health=None):
         from repro.core.shufflesoftsort import (
             ShuffleSoftSortConfig,
             _rung_boundaries,
@@ -295,6 +369,13 @@ class SortServer:
                 f"got {guardrail!r}")
         self.guardrail = guardrail          # server-default probe policy
         self.degrade = degrade or DivergencePolicy()
+        if brownout is not None and not isinstance(brownout,
+                                                   BrownoutPolicy):
+            raise TypeError(
+                f"brownout must be a BrownoutPolicy or None, "
+                f"got {brownout!r}")
+        self.brownout = brownout
+        self.device_health = device_health  # DeviceHealthMonitor or None
 
         rounds = self.cfg.rounds
         self.adaptive = self.cfg.schedule == "adaptive"
@@ -337,6 +418,9 @@ class SortServer:
             "integrity_violations": 0, "self_heals": 0,
             "integrity_incidents": [],
             "compile_keys": set(),
+            "evictions": 0, "reshards": 0, "device_returns": 0,
+            "brownouts": 0,
+            "degradations": {r: 0 for r in _BROWNOUT_LADDER},
         }
         self.events: list[dict] = []
         self._cv = threading.Condition()
@@ -349,6 +433,14 @@ class SortServer:
         self._bucket_cap = self.max_batch
         self._healthy_streak = 0
         self._switch_cache: dict[tuple, int] = {}
+        # Elastic-capacity state: the mesh as constructed (the full
+        # device complement a returning device can grow back into),
+        # the currently-evicted device ids, and the brownout ladder
+        # position (0 = full quality).
+        self._mesh_devices = (None if mesh is None
+                              else list(mesh.devices.flat))
+        self._evicted: list[int] = []
+        self._brownout_level = 0
         self.checkpoint_dir = checkpoint_dir
         self.resumed: list[_SortRequest] = []
         if resume is not None:
@@ -467,6 +559,12 @@ class SortServer:
                               injector_state=(
                                   self._engine.state_dict()
                                   if hasattr(self._engine, "state_dict")
+                                  else None),
+                              brownout_level=self._brownout_level,
+                              evicted_devices=tuple(self._evicted),
+                              health_state=(
+                                  self.device_health.state_dict()
+                                  if self.device_health is not None
                                   else None))
         self.events.append({"event": "preempt",
                             "inflight": len(inflight)})
@@ -486,6 +584,17 @@ class SortServer:
         if (handoff.injector_state is not None
                 and hasattr(self._engine, "load_state_dict")):
             self._engine.load_state_dict(handoff.injector_state)
+        # Resume the elastic-capacity state: same brownout ladder
+        # position, same evicted-device set (mesh rebuilt over the
+        # survivors), same health-monitor strikes.
+        self._brownout_level = int(handoff.brownout_level)
+        evicted = [int(dv) for dv in (handoff.evicted_devices or ())]
+        if evicted:
+            self._evicted = evicted
+            self._reshard()
+        if (handoff.health_state is not None
+                and self.device_health is not None):
+            self.device_health.load_state_dict(handoff.health_state)
         for req in handoff.requests:
             if req.future.done():       # pragma: no cover - defensive
                 continue
@@ -496,6 +605,142 @@ class SortServer:
             self._pending.append(req)
             self.events.append({"event": "adopt", "seq": req.seq,
                                 "progress": req.progress})
+
+    # ---- elastic capacity: eviction / re-shard / brownout ---------------
+
+    def _reshard(self):
+        """Rebuild ``self.mesh`` over the non-evicted devices of the
+        construction-time complement.  No carry ever moves: request
+        state lives host-side in logical layout between rungs, so the
+        next dispatch simply re-pads onto the new mesh (``mesh=None``
+        when every device is out — the vmap engine still serves)."""
+        if self._mesh_devices is None:
+            return
+        from repro.launch.mesh import make_sort_mesh
+        gone = set(self._evicted)
+        survivors = [dv for dv in self._mesh_devices if dv.id not in gone]
+        self.mesh = (make_sort_mesh(len(survivors), devices=survivors)
+                     if survivors else None)
+
+    def _device_failure(self, reqs: list[_SortRequest], exc) -> bool:
+        """Classify a dispatch failure through the health monitor.  A
+        LOST verdict evicts the device, re-shards, and re-queues the
+        rung's requests WITHOUT consuming retry budget (the fault was
+        the device, not the request) — the replay at the next tick runs
+        on the survivor mesh, so the detection→re-shard gap is exactly
+        one rung boundary.  Returns True when handled elastically."""
+        if self.device_health is None:
+            return False
+        dev = self.device_health.classify(exc)
+        if dev is None:
+            return False
+        self._evicted.append(int(dev))
+        self.stats["evictions"] += 1
+        self._reshard()
+        self.stats["reshards"] += 1
+        n_surv = (0 if self.mesh is None
+                  else int(self.mesh.shape["data"]))
+        self.events.append({"event": "evict", "device": int(dev),
+                            "survivors": n_surv,
+                            "requeued": len(reqs)})
+        now = time.monotonic()
+        for req in reqs:
+            self._active.remove(req)
+            req.eligible_at = now
+            with self._cv:
+                self._pending.append(req)
+        return True
+
+    def _poll_device_returns(self):
+        """Grow the mesh back at a tick boundary when evicted devices
+        probe healthy again (``DeviceHealthMonitor.poll_returns``)."""
+        if self.device_health is None or not self._evicted:
+            return
+        back = self.device_health.poll_returns()
+        grew = False
+        for dev in back:
+            dev = int(dev)
+            if dev in self._evicted:
+                self._evicted.remove(dev)
+                self.stats["device_returns"] += 1
+                grew = True
+                self.events.append({"event": "device_return",
+                                    "device": dev})
+        if grew:
+            self._reshard()
+
+    def _update_brownout(self, queue_len: int):
+        """Step the brownout ladder one level per tick toward the
+        pressure target: +1 while capacity is down (eviction, straggler
+        cap halving) or the queue is past a watermark, -1 as it
+        returns.  One step per tick is the hysteresis — a transient
+        spike cannot slam the ladder to bf16 and back within a rung."""
+        if self.brownout is None:
+            return
+        qfrac = queue_len / max(1, self.queue_depth)
+        pressure = (2 if qfrac >= self.brownout.high_watermark
+                    else 1 if qfrac >= self.brownout.low_watermark else 0)
+        target = min(len(_BROWNOUT_LADDER),
+                     (1 if self._evicted else 0)
+                     + (1 if self._bucket_cap < self.max_batch else 0)
+                     + pressure)
+        if target > self._brownout_level:
+            self._brownout_level += 1
+            self.events.append({"event": "brownout_up",
+                                "level": self._brownout_level,
+                                "target": target, "queue": queue_len})
+        elif target < self._brownout_level:
+            self._brownout_level -= 1
+            self.events.append({"event": "brownout_down",
+                                "level": self._brownout_level,
+                                "target": target, "queue": queue_len})
+
+    def _apply_brownout(self, req: _SortRequest, now: float):
+        """Apply the current ladder level to a request at FIRST
+        admission (never mid-anneal: an admitted request's config is
+        immutable, so its results stay bit-identical to an unloaded
+        server given the same admitted config).  Requests with more
+        than ``slack_full_s`` of deadline slack — or no deadline — take
+        one level less: the ladder exists to protect deadline-bound
+        traffic from shedding."""
+        if (self.brownout is None or self._brownout_level <= 0
+                or req.orders is not None):
+            return
+        level = self._brownout_level
+        slack = None if req.deadline is None else req.deadline - now
+        if slack is None or slack > self.brownout.slack_full_s:
+            level -= 1
+        if level <= 0:
+            return
+        cfg = self._cfg_for(req)
+        applied = []
+        if (level >= 1 and self._cull_edges and self.n_restarts > 1
+                and not req.brownout_cull):
+            req.brownout_cull = True
+            applied.append("culled")
+        if level >= 2 and cfg.schedule != "adaptive":
+            cfg = dataclasses.replace(cfg, schedule="adaptive")
+            applied.append("adaptive")
+        if level >= 3 and cfg.band is None:
+            from repro.core.shufflesoftsort import resolve_band
+            auto = dataclasses.replace(cfg, band="auto")
+            if resolve_band(auto, req.x.shape[0]) is not None:
+                cfg = auto
+                applied.append("banded")
+        if level >= 4 and cfg.use_kernel and cfg.compute_dtype == "float32":
+            cfg = dataclasses.replace(cfg, compute_dtype="bfloat16")
+            applied.append("bf16")
+        if not applied:
+            return
+        if cfg is not self._cfg_for(req):
+            req.cfg_override = cfg
+        req.degraded = tuple(applied)
+        for rung in applied:
+            self.stats["degradations"][rung] += 1
+        self.stats["brownouts"] += 1
+        self.events.append({"event": "brownout_degrade", "seq": req.seq,
+                            "level": self._brownout_level,
+                            "applied": applied})
 
     def _save_handoff(self, handoff: WarmHandoff):
         """Persist the handoff to ``checkpoint_dir`` (atomic, via
@@ -535,6 +780,8 @@ class SortServer:
                               else dataclasses.asdict(req.guardrail)),
                 "cfg_override": (None if req.cfg_override is None
                                  else dataclasses.asdict(req.cfg_override)),
+                "degraded": list(req.degraded),
+                "brownout_cull": bool(req.brownout_cull),
             })
         mgr = CheckpointManager(self.checkpoint_dir, keep=1,
                                 async_save=False)
@@ -544,6 +791,10 @@ class SortServer:
             "seq": int(handoff.seq),
             "requests": metas,
             "injector_state": handoff.injector_state,
+            "brownout_level": int(handoff.brownout_level),
+            "evicted_devices": [int(dv) for dv in
+                                handoff.evicted_devices],
+            "health_state": handoff.health_state,
         })
 
     def _load_handoff(self, path: str) -> WarmHandoff:
@@ -590,6 +841,8 @@ class SortServer:
                 submitted=now, progress=int(m["progress"]),
                 attempts=int(m["attempts"]), norm=float(m["norm"]))
             req.strikes = int(m.get("strikes", 0))
+            req.degraded = tuple(m.get("degraded", ()))
+            req.brownout_cull = bool(m.get("brownout_cull", False))
             if m.get("guardrail") is not None:
                 from repro.runtime.guardrails import GuardrailPolicy
                 req.guardrail = GuardrailPolicy(**m["guardrail"])
@@ -610,8 +863,14 @@ class SortServer:
                     from repro.core.shufflesoftsort import (
                         make_adaptive_controller,
                     )
+                    # A brownout-forced-adaptive request on a fixed
+                    # server carries the adaptive schedule in its
+                    # cfg_override, not the server config.
+                    ctrl_cfg = (req.cfg_override
+                                if req.cfg_override is not None
+                                else self.cfg)
                     ctrl = make_adaptive_controller(
-                        self.cfg, len(req.losses), req.x.shape[0],
+                        ctrl_cfg, len(req.losses), req.x.shape[0],
                         seg_len=self.seg_len)
                     ctrl.load_state_dict(
                         {f: arrays[f"req{i}_ctrl_{f}"]
@@ -620,7 +879,12 @@ class SortServer:
             reqs.append(req)
         return WarmHandoff(requests=reqs, rng_state=extra["rng_state"],
                            seq=int(extra["seq"]),
-                           injector_state=extra.get("injector_state"))
+                           injector_state=extra.get("injector_state"),
+                           brownout_level=int(
+                               extra.get("brownout_level", 0)),
+                           evicted_devices=tuple(
+                               extra.get("evicted_devices", []) or []),
+                           health_state=extra.get("health_state"))
 
     # ---- resolution bookkeeping (every future resolves exactly once) ----
 
@@ -702,10 +966,14 @@ class SortServer:
         req.orders = np.tile(np.arange(n, dtype=np.int32), (s, 1))
         req.alive = np.arange(s)
         req.losses = np.full((s, self.cfg.rounds), np.nan, np.float32)
-        if self.adaptive:
+        # Adaptivity is per REQUEST config, not per server: a brownout
+        # rung (or a caller) can force schedule="adaptive" via
+        # cfg_override on an otherwise fixed-schedule server.
+        cfg_req = self._cfg_for(req)
+        if cfg_req.schedule == "adaptive":
             from repro.core.shufflesoftsort import make_adaptive_controller
             req.ctrl = make_adaptive_controller(
-                self.cfg, s, n, seg_len=self.seg_len)
+                cfg_req, s, n, seg_len=self.seg_len)
             req.done_mask = np.zeros(s, bool)
         self.events.append({"event": "admit", "seq": req.seq})
 
@@ -724,7 +992,7 @@ class SortServer:
         n = req.x.shape[0]
         if resolve_band(cfg, n) is None:
             return "dense"
-        if self.adaptive:
+        if req.ctrl is not None:
             # Measured switch, from the request's controller: the
             # request runs banded once EVERY live restart's own tail
             # bound has cleared (conservative — the laggard holds its
@@ -742,9 +1010,14 @@ class SortServer:
         return "banded" if req.progress >= self._switch_cache[ck] else "dense"
 
     def _tick(self) -> bool:
-        """One scheduler pass: shed expired, admit, dispatch one rung
-        per (shape bucket, regime) group, cull, finalize."""
+        """One scheduler pass: grow back returned devices, step the
+        brownout ladder, shed expired, admit (applying the ladder),
+        dispatch one rung per (shape bucket, regime) group, cull,
+        finalize."""
         now = time.monotonic()
+        self._poll_device_returns()
+        with self._cv:
+            self._update_brownout(len(self._pending))
         admitted: list[_SortRequest] = []
         with self._cv:
             keep = []
@@ -770,6 +1043,7 @@ class SortServer:
                     rest.append(req)
             self._pending = rest
         for req in admitted:
+            self._apply_brownout(req, now)
             self._admit(req)
         self._active.extend(admitted)
         if not self._active:
@@ -821,10 +1095,14 @@ class SortServer:
         """
         hw = reqs[0].hw
         cfg_use = self._cfg_for(reqs[0])   # uniform per group (key'd)
+        # Adaptivity is a property of the GROUP's config (cfg_override
+        # is in the group key), so brownout-forced-adaptive requests
+        # dispatch adaptively on an otherwise fixed server.
+        adaptive = cfg_use.schedule == "adaptive"
         pol = reqs[0].guardrail
         guarded = pol is not None and pol.mode != "off"
         # Per-request rows going into this call (adaptive: live only).
-        sels = [np.flatnonzero(~r.done_mask) if self.adaptive
+        sels = [np.flatnonzero(~r.done_mask) if adaptive
                 else np.arange(len(r.alive)) for r in reqs]
         xs = np.concatenate(
             [np.repeat(r.x[None], len(sel), axis=0)
@@ -835,7 +1113,7 @@ class SortServer:
         norms = np.concatenate(
             [np.full(len(sel), r.norm, np.float32)
              for r, sel in zip(reqs, sels)])
-        if self.adaptive:
+        if adaptive:
             progress = np.concatenate(
                 [r.ctrl.pos[r.alive[sel]] for r, sel in zip(reqs, sels)])
         else:
@@ -867,7 +1145,7 @@ class SortServer:
 
         t0 = time.perf_counter()
         try:
-            if self.adaptive:
+            if adaptive:
                 # regime= bypasses the model-based switch check (the
                 # controller owns the grouping); with_w= feeds the
                 # measured tail bound.
@@ -883,8 +1161,12 @@ class SortServer:
                                        mesh=self.mesh)
             o, k, l = np.asarray(o), np.asarray(k), np.asarray(l)
         except Exception as e:
-            self._on_failure(reqs, e)
+            if not self._device_failure(reqs, e):
+                self._on_failure(reqs, e)
             return
+        if self.device_health is not None and self.mesh is not None:
+            self.device_health.record_success(
+                dv.id for dv in self.mesh.devices.flat)
         # Divergence sentinel: a non-finite loss (or soft-sort key) must
         # never commit into request state — route it through the retry
         # path as a typed NumericalDivergence BEFORE the commit below,
@@ -894,7 +1176,7 @@ class SortServer:
         # never fails its clean batchmates.
         if not guarded and (
                 not np.isfinite(l).all()
-                or (self.adaptive and not np.isfinite(w).all())):
+                or (adaptive and not np.isfinite(w).all())):
             from repro.core.shufflesoftsort import NumericalDivergence
             self._on_failure(reqs, NumericalDivergence(
                 f"non-finite loss in serving dispatch (regime {regime})",
@@ -919,7 +1201,7 @@ class SortServer:
             if id(req) in bad_set:
                 off += nl           # corrupted: do NOT commit; the
                 continue            # retry replays this rung exactly
-            if self.adaptive:
+            if adaptive:
                 orig = req.alive[sel]
                 exec0 = int(req.ctrl.executed[orig[0]])
                 req.orders[sel] = o[off:off + nl]
@@ -995,7 +1277,7 @@ class SortServer:
                 oracle_l = oracle_o = None
                 if mon.wants_shadow(start):
                     ocfg = dataclasses.replace(cfg_use, use_kernel=False)
-                    if self.adaptive:
+                    if w is not None:
                         sh = run_round_segment(
                             xs_in[sl], orders_in[sl], keys_in[sl],
                             norms_in[sl], progress_in[sl], self.seg_len,
@@ -1009,8 +1291,7 @@ class SortServer:
                     if mon.compare_orders():
                         oracle_o = np.asarray(sh[0])
                 band = None
-                if (self.adaptive and regime == "banded"
-                        and req.ctrl is not None):
+                if regime == "banded" and req.ctrl is not None:
                     band = req.ctrl.band
                 mon.check_rung(
                     start=start,
@@ -1069,15 +1350,19 @@ class SortServer:
         from repro.core.shufflesoftsort import _tournament_cull
         s_k = len(req.alive)
         if req.progress in self._cull_edges and s_k > 1:
-            keep = max(1, int(np.ceil(s_k * (1.0 - self.cull_fraction))))
+            # The brownout "culled" rung degrades the tournament to its
+            # floor: keep only the current best restart at every
+            # interior boundary.
+            keep = (1 if req.brownout_cull else
+                    max(1, int(np.ceil(s_k * (1.0 - self.cull_fraction)))))
             if keep < s_k:
-                if self.adaptive:
+                if req.ctrl is not None:
                     last = req.ctrl.executed[req.alive] - 1
                     final = req.losses[req.alive, last][None, :]
                 else:
                     final = req.losses[req.alive, req.progress - 1][None, :]
                 sel = _tournament_cull(final, keep)[0]
-                if self.adaptive:
+                if req.ctrl is not None:
                     kept = np.zeros(s_k, bool)
                     kept[sel] = True
                     req.ctrl.mark_culled(req.alive[~kept])
@@ -1088,7 +1373,7 @@ class SortServer:
                 self.stats["culled"] += s_k - keep
                 self.events.append({"event": "cull", "seq": req.seq,
                                     "kept": keep, "of": s_k})
-        if self.adaptive:
+        if req.ctrl is not None:
             if req.done_mask.all():
                 last = req.ctrl.executed[req.alive] - 1
                 final = req.losses[req.alive, last]
@@ -1190,11 +1475,15 @@ def serve_sorts(args):
     from repro.core.shufflesoftsort import ShuffleSoftSortConfig
     from repro.launch.mesh import make_sort_mesh
     from repro.runtime.guardrails import GuardrailPolicy
+    from repro.runtime.straggler import DeviceHealthMonitor
 
     guardrail = (None if args.guardrail == "off" else
                  GuardrailPolicy(mode=args.guardrail,
                                  shadow_rate=args.shadow_rate,
                                  seed=args.seed))
+    brownout = BrownoutPolicy() if args.brownout else None
+    device_health = (DeviceHealthMonitor(lost_after=args.device_health)
+                     if args.device_health else None)
     hw = (args.sort_hw, args.sort_n // args.sort_hw)
     cfg = ShuffleSoftSortConfig(rounds=args.rounds,
                                 chunk=min(256, args.sort_n),
@@ -1210,7 +1499,8 @@ def serve_sorts(args):
                         cull_fraction=args.cull_fraction,
                         queue_depth=args.queue_depth,
                         sched_rungs=args.sched_rungs or None,
-                        seed=args.seed, guardrail=guardrail)
+                        seed=args.seed, guardrail=guardrail,
+                        brownout=brownout, device_health=device_health)
     rng = np.random.RandomState(0)
     xs = rng.rand(args.requests, args.sort_n, args.sort_d).astype(np.float32)
 
@@ -1240,17 +1530,30 @@ def serve_sorts(args):
             f"; guardrail {guardrail.mode}: "
             f"{server.stats['integrity_violations']} violations, "
             f"{server.stats['self_heals']} self-heals")
+    elastic_note = ""
+    deg = server.stats["degradations"]
+    if brownout is not None or device_health is not None:
+        deg_str = " ".join(f"{r}={deg[r]}" for r in _BROWNOUT_LADDER)
+        elastic_note = (
+            f"; elastic: {server.stats['evictions']} evictions, "
+            f"{server.stats['reshards']} reshards, "
+            f"{server.stats['device_returns']} returns; "
+            f"degradations {deg_str}")
     print(f"served {args.requests} sort requests in {wall:.2f}s "
           f"({sps:.2f} sorts/s) across {server.stats['batches']} device "
           f"batches (sizes {sizes}); p50 {p50:.1f}ms p99 {p99:.1f}ms; "
           f"{improved}/{args.requests} layouts improved"
-          f"{adaptive_note}{guard_note}")
+          f"{adaptive_note}{guard_note}{elastic_note}")
     return {"sorts_per_s": sps, "batches": server.stats["batches"],
             "improved": int(improved), "p50_ms": p50, "p99_ms": p99,
             "adaptive_exits": server.stats["adaptive_exits"],
             "rounds_saved": server.stats["rounds_saved"],
             "integrity_violations": server.stats["integrity_violations"],
-            "self_heals": server.stats["self_heals"]}
+            "self_heals": server.stats["self_heals"],
+            "evictions": server.stats["evictions"],
+            "reshards": server.stats["reshards"],
+            "device_returns": server.stats["device_returns"],
+            "degradations": dict(deg)}
 
 
 # --------------------------------------------------------------------------
@@ -1323,6 +1626,18 @@ def main(argv=None):
                     help="fraction of rungs to shadow-recompute under "
                          "--guardrail shadow (default 1/32; overhead "
                          "scales with the rate)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="arm the overload brownout ladder: under "
+                         "capacity loss or queue pressure, degrade new "
+                         "requests culled -> adaptive -> banded -> bf16 "
+                         "before shedding (EXPERIMENTS.md §Robustness, "
+                         "'Elastic capacity')")
+    ap.add_argument("--device-health", type=int, default=0,
+                    metavar="STRIKES",
+                    help="evict a device after this many DeviceLost "
+                         "dispatch failures and re-shard the mesh over "
+                         "the survivors at the next rung boundary "
+                         "(0 = off; needs --mesh-devices)")
     args = ap.parse_args(argv)
 
     if args.workload == "sort":
@@ -1349,6 +1664,13 @@ def main(argv=None):
                      "[0, 1]")
         if args.shadow_rate is None:
             args.shadow_rate = 0.03125
+        if args.device_health < 0:
+            ap.error(f"--device-health {args.device_health} must be "
+                     ">= 0 (strike budget; 0 disables)")
+        if args.device_health and not args.mesh_devices:
+            ap.error("--device-health needs --mesh-devices (eviction "
+                     "re-shards a device mesh; the vmap engine has no "
+                     "devices to lose)")
         return serve_sorts(args)
 
     cfg = reduced_config(get_config(args.arch), **PRESETS[args.preset])

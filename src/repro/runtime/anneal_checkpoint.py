@@ -30,6 +30,17 @@ a hard error, not silent corruption.  Deliberately NOT fingerprinted:
 graceful-degradation ladder (``runtime.fault_tolerance
 .DivergencePolicy``) resumes the same run under an adjusted config.
 The full config repr is stored for audit.
+
+Device-layout freedom: the snapshots are host numpy in LOGICAL
+(instance-major) layout — no mesh shape, shard order, or device ids
+anywhere in the carry.  That is what makes cross-mesh resume work (kill
+on 8 devices, resume on 3 — proven in the chaos matrix), and it is the
+same property the elastic re-shard path (``mesh_hook`` in
+``core.shufflesoftsort``, EXPERIMENTS.md §Robustness "Elastic
+capacity") exploits IN MEMORY: evicting a device at a rung boundary
+just rebuilds the mesh and re-pads the very same layout-free carry,
+no disk round-trip — an in-memory special case of the resume path this
+module already guarantees.
 """
 from __future__ import annotations
 

@@ -39,6 +39,22 @@ class WorkerFailure(RuntimeError):
     """Simulated node failure (tests / chaos injection)."""
 
 
+class DeviceLost(WorkerFailure):
+    """A mesh device stopped serving mid-dispatch.
+
+    Unlike a plain ``WorkerFailure`` (anonymous, transient — retry the
+    dispatch as-is), a ``DeviceLost`` names the device that died via
+    ``device_id``, so a device-health layer
+    (``runtime.straggler.DeviceHealthMonitor``) can EVICT it: gather
+    the layout-free rung carry, rebuild the mesh over the survivors,
+    and replay the failed rung there — the elastic-capacity path
+    (EXPERIMENTS.md §Robustness, "Elastic capacity")."""
+
+    def __init__(self, message: str, *, device_id: int | None = None):
+        super().__init__(message)
+        self.device_id = device_id
+
+
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """Retry budget + exponential backoff for failed dispatches.
@@ -154,6 +170,19 @@ class FaultInjector:
     sort-path analogue of the flaky step functions
     ``tests/test_runtime.py`` feeds the TrainSupervisor.
 
+    **Device-loss / device-return injection** (the elastic-capacity
+    chaos mode): ``device_loss`` maps a dispatch index to a device id
+    taken DOWN from that index on; ``device_return`` maps a dispatch
+    index to a device id brought BACK.  The down-set is persistent
+    state, not a one-shot schedule — every dispatch whose ``mesh=``
+    kwarg contains a downed device raises ``DeviceLost`` (naming the
+    device), exactly what a real fleet looks like between the failure
+    and the re-shard: the run keeps crashing on the dead slot until
+    the scheduler rebuilds the mesh without it.  Dispatches with
+    ``mesh=None`` (the vmap engine) have no device slots and are never
+    affected.  ``healthy(device_id)`` is the probe a
+    ``DeviceHealthMonitor`` polls to detect returns.
+
     The injection cursor and schedules are serializable
     (``state_dict`` / ``load_state_dict``) so a chaos scenario can
     round-trip through a ``WarmHandoff`` — a preempted injected run
@@ -164,7 +193,9 @@ class FaultInjector:
                  delay_calls: Optional[dict[int, float]] = None,
                  exc_type: type = WorkerFailure,
                  sleep_fn: Callable[[float], None] = time.sleep,
-                 corrupt_calls: Optional[dict] = None):
+                 corrupt_calls: Optional[dict] = None,
+                 device_loss: Optional[dict[int, int]] = None,
+                 device_return: Optional[dict[int, int]] = None):
         self.engine_fn = engine_fn
         self.fail_calls = set(fail_calls)
         self.delay_calls = dict(delay_calls or {})
@@ -172,12 +203,18 @@ class FaultInjector:
             int(k): (v if isinstance(v, CorruptionSpec)
                      else CorruptionSpec(**v))
             for k, v in (corrupt_calls or {}).items()}
+        self.device_loss = {int(k): int(v)
+                            for k, v in (device_loss or {}).items()}
+        self.device_return = {int(k): int(v)
+                              for k, v in (device_return or {}).items()}
+        self.down: set[int] = set()
         self.exc_type = exc_type
         self.sleep_fn = sleep_fn
         self.calls = 0
         self.faults = 0
         self.delays = 0
         self.corruptions = 0
+        self.device_faults = 0
         # Previous call's result per target name — the stale-buffer
         # corruption source (host np copies, chaos-scale arrays only).
         self._prev: dict[str, np.ndarray] = {}
@@ -189,6 +226,12 @@ class FaultInjector:
         # the dispatches it is perturbing.
         self._lock = threading.Lock()
 
+    def healthy(self, device_id: int) -> bool:
+        """Health probe for a device id — ``DeviceHealthMonitor``'s
+        ``poll_returns`` asks this to detect grown-back devices."""
+        with self._lock:
+            return int(device_id) not in self.down
+
     def __call__(self, *args, **kwargs):
         with self._lock:
             i = self.calls
@@ -196,6 +239,20 @@ class FaultInjector:
             delay = self.delay_calls.get(i)
             fail = i in self.fail_calls
             spec = self.corrupt_calls.get(i)
+            # Device transitions fire at exact dispatch indices, then
+            # persist: the down-set outlives the index that set it.
+            if i in self.device_loss:
+                self.down.add(self.device_loss[i])
+            if i in self.device_return:
+                self.down.discard(self.device_return[i])
+            lost = None
+            mesh = kwargs.get("mesh")
+            if mesh is not None and self.down:
+                hit = [d.id for d in mesh.devices.flat
+                       if d.id in self.down]
+                if hit:
+                    lost = hit[0]
+                    self.device_faults += 1
             if delay is not None:
                 self.delays += 1
             if fail:
@@ -204,6 +261,10 @@ class FaultInjector:
             self.sleep_fn(delay)
         if fail:
             raise self.exc_type(f"injected fault at dispatch {i}")
+        if lost is not None:
+            raise DeviceLost(
+                f"device {lost} lost at dispatch {i} (down set "
+                f"{sorted(self.down)})", device_id=lost)
         result = self.engine_fn(*args, **kwargs)
         if spec is None and not self.corrupt_calls:
             return result
@@ -245,6 +306,12 @@ class FaultInjector:
                 "corrupt_calls": {
                     str(k): dataclasses.asdict(v)
                     for k, v in self.corrupt_calls.items()},
+                "device_loss": {str(k): int(v)
+                                for k, v in self.device_loss.items()},
+                "device_return": {str(k): int(v)
+                                  for k, v in self.device_return.items()},
+                "down": sorted(int(d) for d in self.down),
+                "device_faults": self.device_faults,
                 "exc_type": self.exc_type.__name__,
             }
 
@@ -260,6 +327,14 @@ class FaultInjector:
             self.corrupt_calls = {
                 int(k): CorruptionSpec(**v)
                 for k, v in state.get("corrupt_calls", {}).items()}
+            self.device_loss = {
+                int(k): int(v)
+                for k, v in state.get("device_loss", {}).items()}
+            self.device_return = {
+                int(k): int(v)
+                for k, v in state.get("device_return", {}).items()}
+            self.down = set(int(d) for d in state.get("down", []))
+            self.device_faults = int(state.get("device_faults", 0))
 
 
 class TrainSupervisor:
@@ -527,6 +602,28 @@ class AnnealSupervisor:
                     raise RuntimeError(
                         f"exceeded {self.retry.max_retries} restarts"
                     ) from e
+                # Elastic restart: a DeviceLost names the dead device,
+                # so the retry re-shards over the survivors instead of
+                # replaying onto the slot that just failed (the rung
+                # carry is layout-free, so the resumed run is still
+                # bit-identical per seed — EXPERIMENTS.md §Robustness).
+                dev = getattr(e, "device_id", None)
+                mesh = kwargs.get("mesh")
+                if dev is not None and mesh is not None:
+                    survivors = [d for d in mesh.devices.flat
+                                 if d.id != dev]
+                    if survivors:
+                        from repro.launch.mesh import make_sort_mesh
+                        kwargs["mesh"] = make_sort_mesh(
+                            len(survivors), devices=survivors)
+                        self.stats.setdefault("evictions", 0)
+                        self.stats["evictions"] += 1
+                        self.history.append(
+                            {"event": "evict", "device": int(dev),
+                             "survivors": len(survivors)})
+                        log.warning(
+                            "evicted device %d; re-sharded over %d "
+                            "survivors", dev, len(survivors))
                 delay = self.retry.backoff(restarts)
                 if delay:
                     self.sleep_fn(delay)

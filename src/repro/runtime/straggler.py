@@ -1,4 +1,4 @@
-"""Straggler detection/mitigation.
+"""Straggler + device-health detection/mitigation.
 
 Per-step wall time feeds an EWMA mean/variance; a step slower than
 ``mean + z * std`` (and at least ``min_ratio`` x mean) is flagged.
@@ -14,6 +14,14 @@ behind it.  Detection, the warmup-only stream, a straggler on the very
 first post-warmup step, and the healthy-steps-only baseline update are
 exercised with injected delays in tests/test_runtime.py; the serving
 reroute in tests/test_serving.py.
+
+``DeviceHealthMonitor`` is the sibling layer for HARD failures: where
+the straggler monitor watches wall-clock, the health monitor watches
+dispatch exceptions and classifies them transient (anonymous — retry
+the dispatch as-is under the caller's ``RetryPolicy``) vs lost (a
+``DeviceLost`` naming the device, past the strike budget — evict it
+and re-shard over the survivors at the next rung boundary).  Elastic
+eviction/return proofs: tests/test_elastic.py.
 """
 from __future__ import annotations
 
@@ -58,3 +66,78 @@ class StragglerMonitor:
             self.mean += self.alpha * d
             self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
         return is_straggler
+
+
+class DeviceHealthMonitor:
+    """Classify per-shard dispatch failures: transient vs lost device.
+
+    ``classify(exc)`` inspects one dispatch failure.  An exception that
+    names a device (a ``device_id`` attribute, e.g.
+    ``runtime.fault_tolerance.DeviceLost``) counts a strike against it;
+    once the device has ``lost_after`` strikes it is declared LOST and
+    its id is returned — the caller evicts it from the mesh and
+    re-shards at the next rung boundary.  Anything else (anonymous
+    failures, devices still under the strike budget) returns ``None``:
+    transient, retry under the caller's ``RetryPolicy``.
+
+    ``record_success(device_ids)`` clears strikes for devices that just
+    served a clean dispatch, so intermittent flakes never accumulate
+    into a false eviction.  ``poll_returns()`` re-probes the evicted
+    set against ``probe(device_id) -> bool`` (e.g.
+    ``FaultInjector.healthy``) and returns the devices that came back —
+    the caller grows the mesh at the next boundary.
+
+    State round-trips through ``state_dict``/``load_state_dict`` so a
+    preempted server resumes with the same evicted-device set and
+    strike counts (``WarmHandoff``; tests/test_serving.py).
+    """
+
+    def __init__(self, lost_after: int = 1,
+                 probe: Optional[Callable[[int], bool]] = None):
+        if lost_after < 1:
+            raise ValueError(f"lost_after must be >= 1, got {lost_after}")
+        self.lost_after = int(lost_after)
+        self.probe = probe
+        self.strikes: dict[int, int] = {}
+        self.evicted: list[int] = []          # eviction order
+
+    def classify(self, exc: BaseException) -> Optional[int]:
+        dev = getattr(exc, "device_id", None)
+        if dev is None:
+            return None
+        dev = int(dev)
+        if dev in self.evicted:
+            # already evicted; the dispatch raced the re-shard
+            return None
+        self.strikes[dev] = self.strikes.get(dev, 0) + 1
+        if self.strikes[dev] >= self.lost_after:
+            self.evicted.append(dev)
+            return dev
+        return None
+
+    def record_success(self, device_ids) -> None:
+        for d in device_ids:
+            self.strikes.pop(int(d), None)
+
+    def poll_returns(self, probe: Optional[Callable[[int], bool]] = None
+                     ) -> list[int]:
+        probe = self.probe if probe is None else probe
+        if probe is None:
+            return []
+        back = [d for d in self.evicted if probe(d)]
+        for d in back:
+            self.evicted.remove(d)
+            self.strikes.pop(d, None)
+        return back
+
+    def state_dict(self) -> dict:
+        return {"lost_after": self.lost_after,
+                "strikes": {str(k): int(v)
+                            for k, v in self.strikes.items()},
+                "evicted": [int(d) for d in self.evicted]}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.lost_after = int(state.get("lost_after", self.lost_after))
+        self.strikes = {int(k): int(v)
+                        for k, v in state.get("strikes", {}).items()}
+        self.evicted = [int(d) for d in state.get("evicted", [])]

@@ -1,0 +1,493 @@
+"""Elastic-capacity proofs (EXPERIMENTS.md §Robustness, "Elastic
+capacity"): losing a mesh device mid-anneal must cost exactly one rung
+replay and zero correctness.
+
+Three layers, matching the production stack:
+
+* **Chaos primitives** — ``FaultInjector``'s ``device_loss`` /
+  ``device_return`` schedules flip a persistent down-set at exact
+  dispatch indices; every dispatch whose ``mesh=`` contains a downed
+  device raises ``DeviceLost`` naming it.  Deterministic, so the tests
+  know precisely which dispatch died.
+* **Classification** — ``DeviceHealthMonitor`` turns named failures
+  into evictions after a strike budget, clears strikes on success, and
+  detects grown-back devices through a health probe.
+* **Re-shard bit-identity** — the rung carry is layout-free host numpy
+  (see ``runtime.anneal_checkpoint``), so rebuilding the mesh over the
+  survivors at a rung boundary (``mesh_hook=``) and re-padding changes
+  NOTHING about the math: every engine x eviction point must be
+  bit-identical to an uninterrupted run on the original mesh.
+
+The mesh grids need >= 8 devices; on single-device hosts those cases
+skip and a subprocess re-runs the core identity + server-eviction
+checks under ``--xla_force_host_platform_device_count=8`` so the
+elastic path is always exercised.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.shufflesoftsort import (
+    ShuffleSoftSortConfig,
+    restart_tournament,
+    run_round_segment,
+    shuffle_soft_sort,
+    shuffle_soft_sort_batched,
+)
+from repro.launch.mesh import make_sort_mesh
+from repro.launch.serve import BrownoutPolicy, SortServer
+from repro.runtime.fault_tolerance import (
+    DeviceLost,
+    FaultInjector,
+    RetryPolicy,
+    WorkerFailure,
+)
+from repro.runtime.straggler import DeviceHealthMonitor
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs >= 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+N, HW, D = 16, (4, 4), 2
+CFG = ShuffleSoftSortConfig(rounds=4, inner_steps=2, chunk=16)
+ACFG = ShuffleSoftSortConfig(rounds=8, inner_steps=2, chunk=16,
+                             schedule="adaptive", patience=1,
+                             plateau_rtol=1.0, adapt_every=2)
+
+
+def _problems(count, d=D, n=N, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.rand(count, n, d).astype(np.float32)
+
+
+def _drain(server, max_ticks=200):
+    import time
+    for _ in range(max_ticks):
+        with server._cv:
+            idle = not server._pending and not server._active
+        if idle:
+            return
+        server._tick()
+        time.sleep(0.001)
+    raise AssertionError("server did not go idle")
+
+
+# ------------------------------------ FaultInjector device chaos mode
+
+def test_fault_injector_device_loss_is_persistent_until_return():
+    """The down-set is state, not a one-shot schedule: every dispatch
+    whose mesh holds the dead device raises DeviceLost (what a fleet
+    looks like between failure and re-shard), until device_return."""
+    mesh = make_sort_mesh(1)
+    dev = list(mesh.devices.flat)[0].id
+    inj = FaultInjector(lambda **kw: "ok",
+                        device_loss={1: dev}, device_return={4: dev})
+    assert inj(mesh=mesh) == "ok"            # dispatch 0: healthy
+    assert inj.healthy(dev)
+    for i in (1, 2):                         # 1: goes down; 2: still down
+        with pytest.raises(DeviceLost) as ei:
+            inj(mesh=mesh)
+        assert ei.value.device_id == dev, i
+    assert not inj.healthy(dev)
+    assert inj(mesh=None) == "ok"            # vmap engine: no device slots
+    assert inj(mesh=mesh) == "ok"            # dispatch 4: device returns
+    assert inj.healthy(dev)
+    assert inj.calls == 5
+    assert inj.device_faults == 2
+
+
+def test_fault_injector_device_lost_is_a_worker_failure():
+    """DeviceLost subclasses WorkerFailure, so retry plumbing that
+    predates the health layer still treats it as a dispatch failure."""
+    assert issubclass(DeviceLost, WorkerFailure)
+    e = DeviceLost("gone", device_id=7)
+    assert e.device_id == 7
+
+
+def test_fault_injector_device_state_roundtrips():
+    """A chaos scenario survives a WarmHandoff: cursor, schedules, and
+    the down-set all round-trip, so the resumed injector keeps raising
+    for still-down devices and fires pending returns on schedule."""
+    mesh = make_sort_mesh(1)
+    dev = list(mesh.devices.flat)[0].id
+    inj = FaultInjector(lambda **kw: "ok",
+                        device_loss={0: dev}, device_return={2: dev})
+    with pytest.raises(DeviceLost):
+        inj(mesh=mesh)
+    state = inj.state_dict()
+
+    inj2 = FaultInjector(lambda **kw: "ok")
+    inj2.load_state_dict(state)
+    assert inj2.down == {dev}
+    assert inj2.calls == 1 and inj2.device_faults == 1
+    with pytest.raises(DeviceLost):          # dispatch 1: still down
+        inj2(mesh=mesh)
+    assert inj2(mesh=mesh) == "ok"           # dispatch 2: scheduled return
+
+
+# ------------------------------------------------ DeviceHealthMonitor
+
+def test_health_monitor_strike_budget_and_eviction_order():
+    mon = DeviceHealthMonitor(lost_after=2)
+    e3, e5 = DeviceLost("x", device_id=3), DeviceLost("x", device_id=5)
+    assert mon.classify(e3) is None          # strike 1: transient
+    assert mon.classify(e5) is None
+    assert mon.classify(e5) == 5             # strike 2: lost
+    assert mon.classify(e3) == 3
+    assert mon.evicted == [5, 3]             # eviction order preserved
+    # an evicted device's late failures are absorbed (raced the re-shard)
+    assert mon.classify(e5) is None
+
+
+def test_health_monitor_anonymous_failures_are_transient():
+    mon = DeviceHealthMonitor(lost_after=1)
+    assert mon.classify(WorkerFailure("anon")) is None
+    assert mon.classify(ValueError("nope")) is None
+    assert mon.evicted == [] and mon.strikes == {}
+
+
+def test_health_monitor_success_clears_strikes():
+    """Intermittent flakes never accumulate into a false eviction."""
+    mon = DeviceHealthMonitor(lost_after=2)
+    for _ in range(3):
+        assert mon.classify(DeviceLost("x", device_id=4)) is None
+        mon.record_success([4])
+    assert mon.evicted == []
+
+
+def test_health_monitor_poll_returns_uses_probe():
+    mon = DeviceHealthMonitor(lost_after=1)
+    mon.classify(DeviceLost("x", device_id=1))
+    mon.classify(DeviceLost("x", device_id=2))
+    assert mon.poll_returns(probe=lambda d: d == 2) == [2]
+    assert mon.evicted == [1]
+    assert mon.poll_returns(probe=lambda d: False) == []
+    # no probe at all -> nothing to ask, nothing returns
+    assert DeviceHealthMonitor().poll_returns() == []
+
+
+def test_health_monitor_state_roundtrips():
+    mon = DeviceHealthMonitor(lost_after=3)
+    mon.classify(DeviceLost("x", device_id=9))
+    mon.classify(DeviceLost("x", device_id=2))
+    mon.classify(DeviceLost("x", device_id=2))
+    mon.classify(DeviceLost("x", device_id=2))
+    mon2 = DeviceHealthMonitor()
+    mon2.load_state_dict(mon.state_dict())
+    assert mon2.lost_after == 3
+    assert mon2.strikes == {9: 1, 2: 3}
+    assert mon2.evicted == [2]
+
+
+def test_health_monitor_validates_budget():
+    with pytest.raises(ValueError, match="lost_after"):
+        DeviceHealthMonitor(lost_after=0)
+
+
+# ----------------------- rung-boundary re-shard: engine bit-identity
+
+def _record_boundaries(engine, xs, keys):
+    """Dry run with a no-op mesh_hook to learn where the engine fires
+    rung boundaries (returning None leaves the mesh untouched)."""
+    starts: list[int] = []
+
+    def hook(start, mesh):
+        starts.append(int(start))
+        return None
+
+    _run_engine(engine, xs, keys, mesh=None, hook=hook)
+    return starts
+
+
+def _run_engine(engine, xs, keys, mesh, hook):
+    if engine == "tournament":
+        r = restart_tournament(xs, HW, CFG, n_restarts=4, keys=keys,
+                               cull_fraction=0.5, n_rungs=2, mesh=mesh,
+                               mesh_hook=hook)
+        return np.asarray(r.order), np.asarray(r.all_losses)
+    cfg = ACFG if engine == "adaptive" else CFG
+    r = shuffle_soft_sort_batched(xs, HW, cfg, n_restarts=2,
+                                  keys=keys, mesh=mesh, mesh_hook=hook)
+    return np.asarray(r.all_orders), np.asarray(r.all_losses)
+
+
+def _evict_hook(dead_id, at_round):
+    """Re-shard over the survivors when the anneal reaches rung
+    ``at_round`` — the in-memory move the SortServer makes after a
+    DeviceHealthMonitor eviction."""
+    def hook(start, mesh):
+        if mesh is None or start != at_round:
+            return None
+        survivors = [dv for dv in mesh.devices.flat if dv.id != dead_id]
+        if len(survivors) == len(list(mesh.devices.flat)):
+            return None
+        return make_sort_mesh(len(survivors), devices=survivors)
+    return hook
+
+
+@multi_device
+@pytest.mark.parametrize("engine", ["fixed", "adaptive", "tournament"])
+def test_elastic_reshard_is_bit_identical_per_slot(engine):
+    """The acceptance grid: for every mesh slot k, evict k's device at
+    rung (k mod n_boundaries) and the run must be bit-identical to the
+    uninterrupted 8-device run — the carry is layout-free, so the mesh
+    swap is invisible to the math."""
+    if engine == "tournament":
+        xs = _problems(2, seed=5)
+        keys = np.asarray(
+            jax.random.split(jax.random.PRNGKey(2), 2 * 4),
+            np.uint32).reshape(2, 4, 2)
+    else:
+        xs = _problems(3, seed=5)
+        keys = jax.random.split(jax.random.PRNGKey(2), 3 * 2)
+    boundaries = _record_boundaries(engine, xs, keys)
+    assert boundaries, "engine fired no rung boundaries"
+    mesh = make_sort_mesh(8)
+    ref = _run_engine(engine, xs, keys, mesh=mesh, hook=None)
+    for k, dv in enumerate(mesh.devices.flat):
+        at = boundaries[k % len(boundaries)]
+        got = _run_engine(engine, xs, keys, mesh=make_sort_mesh(8),
+                          hook=_evict_hook(dv.id, at))
+        np.testing.assert_array_equal(got[0], ref[0], err_msg=(
+            f"slot {k} (device {dv.id}) evicted at round {at}"))
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+@multi_device
+def test_elastic_reshard_survives_cascading_loss():
+    """Evict at one boundary, evict AGAIN at a later one (8 -> 7 -> 6
+    devices): still bit-identical — each re-shard is independent."""
+    xs = _problems(3, seed=7)
+    keys = jax.random.split(jax.random.PRNGKey(4), 3 * 2)
+    boundaries = _record_boundaries("fixed", xs, keys)
+    assert len(boundaries) >= 2
+    mesh = make_sort_mesh(8)
+    devs = list(mesh.devices.flat)
+    ref = _run_engine("fixed", xs, keys, mesh=mesh, hook=None)
+
+    h1 = _evict_hook(devs[1].id, boundaries[0])
+    h2 = _evict_hook(devs[6].id, boundaries[-1])
+
+    def cascade(start, m):
+        return h2(start, m) or h1(start, m)
+
+    got = _run_engine("fixed", xs, keys, mesh=make_sort_mesh(8),
+                      hook=cascade)
+    np.testing.assert_array_equal(got[0], ref[0])
+    np.testing.assert_array_equal(got[1], ref[1])
+
+
+# --------------------------------------- server-level eviction proofs
+
+@multi_device
+def test_server_eviction_reshards_once_and_stays_bit_identical():
+    """One injected device loss: the health layer evicts it, re-shards
+    over the 7 survivors within one rung boundary (the dead device
+    faults exactly one dispatch), the rung replays WITHOUT spending
+    retry budget, and every result matches the sequential engine."""
+    mesh = make_sort_mesh(8)
+    dead = list(mesh.devices.flat)[3].id
+    inj = FaultInjector(run_round_segment, device_loss={1: dead})
+    mon = DeviceHealthMonitor(lost_after=1, probe=inj.healthy)
+    server = SortServer(HW, d=D, cfg=CFG, max_batch=8, autostart=False,
+                        mesh=mesh, engine_fn=inj, device_health=mon,
+                        retry=RetryPolicy(max_retries=2,
+                                          backoff_base_s=0.0))
+    xs = _problems(3, seed=11)
+    futs = [server.submit(xs[i], key=jax.random.PRNGKey(i))
+            for i in range(3)]
+    _drain(server)
+    results = [f.result(timeout=5) for f in futs]
+    server.close()
+
+    assert server.stats["evictions"] == 1
+    assert server.stats["reshards"] == server.stats["evictions"] == 1
+    assert server.stats["retries"] == 0      # eviction spends no budget
+    assert server.stats["failed"] == 0
+    # detection -> re-shard gap is exactly one rung boundary: the dead
+    # device faulted exactly one dispatch, every later rung ran clean
+    assert inj.device_faults == 1
+    assert server.mesh is not None
+    assert int(server.mesh.shape["data"]) == 7
+    ev = [e for e in server.events if e["event"] == "evict"]
+    assert len(ev) == 1 and ev[0]["device"] == dead
+    assert ev[0]["survivors"] == 7 and ev[0]["requeued"] == 3
+    for i, (order, _, _) in enumerate(results):
+        o_ref, _, _ = shuffle_soft_sort(xs[i], HW, CFG,
+                                        key=jax.random.PRNGKey(i))
+        np.testing.assert_array_equal(order, o_ref)
+
+
+@multi_device
+def test_server_device_return_grows_mesh_back():
+    """A returned device rejoins at a tick boundary: the mesh grows
+    back to 8, device_returns counts it, and results stay exact."""
+    mesh = make_sort_mesh(8)
+    dead = list(mesh.devices.flat)[5].id
+    inj = FaultInjector(run_round_segment, device_loss={0: dead},
+                        device_return={2: dead})
+    mon = DeviceHealthMonitor(lost_after=1, probe=inj.healthy)
+    server = SortServer(HW, d=D, cfg=CFG, max_batch=8, autostart=False,
+                        mesh=mesh, engine_fn=inj, device_health=mon,
+                        retry=RetryPolicy(max_retries=2,
+                                          backoff_base_s=0.0))
+    xs = _problems(2, seed=13)
+    futs = [server.submit(xs[i], key=jax.random.PRNGKey(30 + i))
+            for i in range(2)]
+    _drain(server)
+    results = [f.result(timeout=5) for f in futs]
+    server.close()
+
+    assert server.stats["evictions"] == 1
+    assert server.stats["reshards"] == 1
+    assert server.stats["device_returns"] == 1
+    assert server._evicted == []
+    assert int(server.mesh.shape["data"]) == 8
+    assert any(e["event"] == "device_return" for e in server.events)
+    for i, (order, _, _) in enumerate(results):
+        o_ref, _, _ = shuffle_soft_sort(xs[i], HW, CFG,
+                                        key=jax.random.PRNGKey(30 + i))
+        np.testing.assert_array_equal(order, o_ref)
+
+
+@multi_device
+def test_server_losing_every_device_falls_back_to_vmap():
+    """Total mesh loss degrades to the vmap engine (mesh=None) rather
+    than failing requests: capacity goes to the host, not to zero."""
+    mesh = make_sort_mesh(2, devices=list(jax.devices())[:2])
+    ids = [dv.id for dv in mesh.devices.flat]
+    inj = FaultInjector(run_round_segment,
+                        device_loss={0: ids[0], 2: ids[1]})
+    mon = DeviceHealthMonitor(lost_after=1, probe=inj.healthy)
+    server = SortServer(HW, d=D, cfg=CFG, max_batch=4, autostart=False,
+                        mesh=mesh, engine_fn=inj, device_health=mon,
+                        retry=RetryPolicy(max_retries=2,
+                                          backoff_base_s=0.0))
+    x = _problems(1, seed=17)[0]
+    fut = server.submit(x, key=jax.random.PRNGKey(6))
+    _drain(server)
+    order, _, _ = fut.result(timeout=5)
+    server.close()
+    assert server.stats["evictions"] == 2
+    assert server.stats["reshards"] == 2
+    assert server.mesh is None
+    o_ref, _, _ = shuffle_soft_sort(x, HW, CFG, key=jax.random.PRNGKey(6))
+    np.testing.assert_array_equal(order, o_ref)
+
+
+@multi_device
+def test_eviction_raises_brownout_ladder():
+    """An eviction is a capacity signal: with a BrownoutPolicy armed,
+    the ladder climbs after the evict and steps back down once the
+    device returns (the full control loop, end to end)."""
+    mesh = make_sort_mesh(8)
+    dead = list(mesh.devices.flat)[2].id
+    inj = FaultInjector(run_round_segment, device_loss={0: dead},
+                        device_return={3: dead})
+    mon = DeviceHealthMonitor(lost_after=1, probe=inj.healthy)
+    server = SortServer(HW, d=D, cfg=CFG, max_batch=8, autostart=False,
+                        mesh=mesh, engine_fn=inj, device_health=mon,
+                        brownout=BrownoutPolicy(),
+                        retry=RetryPolicy(max_retries=2,
+                                          backoff_base_s=0.0))
+    xs = _problems(2, seed=19)
+    futs = [server.submit(xs[i], key=jax.random.PRNGKey(40 + i))
+            for i in range(2)]
+    _drain(server)
+    for f in futs:
+        f.result(timeout=5)
+    for _ in range(4):                       # idle ticks: ladder decays
+        server._tick()
+    server.close()
+    assert any(e["event"] == "brownout_up" for e in server.events)
+    assert server.stats["device_returns"] == 1
+    assert server._brownout_level == 0       # capacity back -> full quality
+
+
+# ------------------------------------- always-on subprocess coverage
+
+def test_elastic_reshard_in_forced_8_device_subprocess():
+    """Single-device hosts still prove the elastic path: a subprocess
+    with 8 forced host devices re-runs (a) the rung-boundary re-shard
+    bit-identity check and (b) the server-level eviction proof."""
+    script = textwrap.dedent("""
+        import numpy as np, jax
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.core.shufflesoftsort import (ShuffleSoftSortConfig,
+            run_round_segment, shuffle_soft_sort, shuffle_soft_sort_batched)
+        from repro.launch.mesh import make_sort_mesh
+        from repro.launch.serve import SortServer
+        from repro.runtime.fault_tolerance import FaultInjector, RetryPolicy
+        from repro.runtime.straggler import DeviceHealthMonitor
+
+        hw, n = (4, 4), 16
+        cfg = ShuffleSoftSortConfig(rounds=3, inner_steps=2, chunk=16)
+        xs = np.random.RandomState(0).rand(3, n, 2).astype(np.float32)
+        keys = jax.random.split(jax.random.PRNGKey(1), 3 * 2)
+
+        # (a) rung-boundary re-shard == uninterrupted run, bit for bit
+        starts = []
+        ref = shuffle_soft_sort_batched(
+            xs, hw, cfg, n_restarts=2, keys=keys, mesh=make_sort_mesh(8),
+            mesh_hook=lambda s, m: starts.append(s))
+        evict_at = [s for s in starts if s > 0][0]
+        def hook(start, mesh):
+            if start != evict_at:
+                return None
+            surv = [d for d in mesh.devices.flat][:-1]
+            return make_sort_mesh(len(surv), devices=surv)
+        shd = shuffle_soft_sort_batched(
+            xs, hw, cfg, n_restarts=2, keys=keys, mesh=make_sort_mesh(8),
+            mesh_hook=hook)
+        assert np.array_equal(ref.all_orders, shd.all_orders)
+        assert np.array_equal(ref.all_losses, shd.all_losses)
+
+        # (b) server eviction: one fault, one re-shard, exact results
+        mesh = make_sort_mesh(8)
+        dead = list(mesh.devices.flat)[3].id
+        inj = FaultInjector(run_round_segment, device_loss={1: dead})
+        mon = DeviceHealthMonitor(lost_after=1, probe=inj.healthy)
+        server = SortServer(hw, d=2, cfg=cfg, max_batch=8,
+                            autostart=False, mesh=mesh, engine_fn=inj,
+                            device_health=mon,
+                            retry=RetryPolicy(max_retries=2,
+                                              backoff_base_s=0.0))
+        import time
+        futs = [server.submit(xs[i], key=jax.random.PRNGKey(i))
+                for i in range(3)]
+        for _ in range(200):
+            with server._cv:
+                idle = not server._pending and not server._active
+            if idle:
+                break
+            server._tick(); time.sleep(0.001)
+        res = [f.result(timeout=5) for f in futs]
+        server.close()
+        assert server.stats["evictions"] == 1, server.stats
+        assert server.stats["reshards"] == 1, server.stats
+        assert inj.device_faults == 1
+        assert int(server.mesh.shape["data"]) == 7
+        for i, (order, _, _) in enumerate(res):
+            o_ref, _, _ = shuffle_soft_sort(xs[i], hw, cfg,
+                                            key=jax.random.PRNGKey(i))
+            assert np.array_equal(order, o_ref), i
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

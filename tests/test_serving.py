@@ -613,3 +613,193 @@ def test_dispatch_divergence_sentinel_is_typed_and_exactly_once():
     assert isinstance(exc, RequestFailed)
     assert isinstance(exc.__cause__, NumericalDivergence)
     _resolution_is_exactly_once(server, [fut])
+
+
+# --------------------------------------- elastic capacity x brownout
+
+def test_brownout_ladder_steps_with_hysteresis():
+    """The ladder moves ONE level per tick toward the pressure target
+    (eviction + straggler cap halving here) and walks back down the
+    same way as capacity returns — a transient spike cannot slam a
+    request to bf16 and back within one rung."""
+    from repro.launch.serve import BrownoutPolicy
+
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                        brownout=BrownoutPolicy())
+    assert server._brownout_level == 0
+    server._evicted = [99]                       # capacity: device out
+    server._bucket_cap = server.max_batch // 2   # capacity: cap halved
+    server._update_brownout(0)
+    assert server._brownout_level == 1           # one step per tick
+    server._update_brownout(0)
+    assert server._brownout_level == 2
+    server._update_brownout(0)
+    assert server._brownout_level == 2           # at target: holds
+    server._evicted = []
+    server._bucket_cap = server.max_batch
+    server._update_brownout(0)
+    assert server._brownout_level == 1           # reverts stepwise
+    server._update_brownout(0)
+    assert server._brownout_level == 0
+    ups = [e for e in server.events if e["event"] == "brownout_up"]
+    downs = [e for e in server.events if e["event"] == "brownout_down"]
+    assert len(ups) == 2 and len(downs) == 2
+    server.close()
+
+
+def test_brownout_queue_watermarks():
+    """Queue depth alone drives the ladder through the watermark
+    pressure: >= high -> 2 levels, >= low -> 1, below low -> 0."""
+    from repro.launch.serve import BrownoutPolicy
+
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False, queue_depth=4,
+                        brownout=BrownoutPolicy())
+    server._update_brownout(2)    # qfrac 0.5 >= high watermark
+    server._update_brownout(2)
+    assert server._brownout_level == 2
+    server._update_brownout(1)    # qfrac 0.25 >= low watermark
+    assert server._brownout_level == 1
+    server._update_brownout(0)
+    assert server._brownout_level == 0
+    server.close()
+
+
+def test_brownout_degrades_to_adaptive_and_matches_engine():
+    """At ladder level 2 a deadline-bound request on a fixed-schedule
+    server is admitted with schedule forced to "adaptive"; the result
+    is bit-identical to the engine under the degraded config — the
+    admitted config is immutable, so brownout trades rounds for
+    latency but never correctness."""
+    import dataclasses as _dc
+
+    from repro.launch.serve import BrownoutPolicy
+
+    x = _problems(1, seed=31)[0]
+    k = jax.random.PRNGKey(7)
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                        brownout=BrownoutPolicy(slack_full_s=60.0))
+    server._evicted = [99]
+    server._bucket_cap = server.max_batch // 2
+    server._tick()
+    server._tick()                       # ladder climbs to 2
+    assert server._brownout_level == 2
+    fut = server.submit(x, key=k, deadline_s=30.0)   # slack < full
+    _drain(server)
+    order, _, _ = fut.result(timeout=5)
+    server.close()
+    assert server.stats["degradations"]["adaptive"] == 1
+    assert server.stats["brownouts"] == 1
+    ev = [e for e in server.events if e["event"] == "brownout_degrade"]
+    assert ev and ev[0]["applied"] == ["adaptive"]
+    o_ref, _, _ = shuffle_soft_sort(
+        x, HW, _dc.replace(CFG, schedule="adaptive"), key=k)
+    np.testing.assert_array_equal(order, o_ref)
+
+
+def test_brownout_spares_slack_rich_requests():
+    """Level 1 with no deadline takes one level less (-> 0): the
+    ladder protects deadline-bound traffic; slack-rich requests keep
+    full quality until pressure climbs further."""
+    from repro.launch.serve import BrownoutPolicy
+
+    x = _problems(1, seed=33)[0]
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                        brownout=BrownoutPolicy())
+    server._evicted = [99]
+    server._tick()
+    assert server._brownout_level == 1
+    fut = server.submit(x, key=jax.random.PRNGKey(3))   # no deadline
+    _drain(server)
+    fut.result(timeout=5)
+    server.close()
+    assert server.stats["brownouts"] == 0
+    assert server.stats["degradations"] == {
+        "culled": 0, "adaptive": 0, "banded": 0, "bf16": 0}
+
+
+def test_brownout_cull_matches_aggressive_tournament():
+    """The first ladder rung on a tournament server culls restarts to
+    the single best at every rung edge; the result is bit-identical to
+    the engine's tournament with a keep-1 cull fraction."""
+    from repro.core.shufflesoftsort import restart_tournament
+    from repro.launch.serve import BrownoutPolicy
+
+    x = _problems(1, seed=37)[0]
+    base = jax.random.PRNGKey(11)
+    server = SortServer(HW, d=D, cfg=CFG, n_restarts=4,
+                        tournament_rungs=2, autostart=False,
+                        brownout=BrownoutPolicy(slack_full_s=60.0))
+    server._evicted = [99]
+    server._tick()
+    assert server._brownout_level == 1
+    fut = server.submit(x, key=base, deadline_s=30.0)
+    _drain(server, max_ticks=200)
+    order, _, _ = fut.result(timeout=5)
+    server.close()
+    assert server.stats["degradations"]["culled"] == 1
+    keys = np.concatenate(
+        [np.asarray(base)[None],
+         np.asarray(jax.random.split(jax.random.fold_in(base, 1), 3))])
+    ref = restart_tournament(x[None], HW, CFG, n_restarts=4,
+                             keys=keys[None], cull_fraction=0.99,
+                             n_rungs=2)
+    np.testing.assert_array_equal(order, ref.order[0])
+
+
+def test_warm_handoff_roundtrips_elastic_state():
+    """Preemption carries the elastic state: the successor resumes at
+    the same ladder position with the same evicted-device set and
+    health-monitor strikes (ISSUE satellite: WarmHandoff round-trip)."""
+    from repro.launch.serve import BrownoutPolicy
+    from repro.runtime.fault_tolerance import DeviceLost
+    from repro.runtime.straggler import DeviceHealthMonitor
+
+    mon = DeviceHealthMonitor(lost_after=2)
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                        brownout=BrownoutPolicy(), device_health=mon)
+    exc = DeviceLost("injected", device_id=3)
+    assert mon.classify(exc) is None        # first strike: transient
+    assert mon.classify(exc) == 3           # second strike: lost
+    server._evicted = [3]
+    server._brownout_level = 2
+    handoff = server.close(drain=False)
+    assert handoff.brownout_level == 2
+    assert handoff.evicted_devices == (3,)
+    assert handoff.health_state is not None
+
+    mon2 = DeviceHealthMonitor(lost_after=2)
+    server2 = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                         brownout=BrownoutPolicy(), device_health=mon2,
+                         resume=handoff)
+    assert server2._brownout_level == 2
+    assert server2._evicted == [3]
+    assert mon2.evicted == [3]
+    server2.close()
+
+
+def test_warm_handoff_disk_roundtrips_elastic_state(tmp_path):
+    """Same round-trip through the on-disk handoff (cross-process
+    resume): ladder position, evicted set, and monitor state all
+    survive the JSON manifest."""
+    from repro.launch.serve import BrownoutPolicy
+    from repro.runtime.fault_tolerance import DeviceLost
+    from repro.runtime.straggler import DeviceHealthMonitor
+
+    mon = DeviceHealthMonitor(lost_after=1)
+    server = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                        checkpoint_dir=str(tmp_path),
+                        brownout=BrownoutPolicy(), device_health=mon)
+    assert mon.classify(DeviceLost("injected", device_id=5)) == 5
+    server._evicted = [5]
+    server._brownout_level = 3
+    server.close(drain=False)              # persists to tmp_path
+
+    mon2 = DeviceHealthMonitor()
+    server2 = SortServer(HW, d=D, cfg=CFG, autostart=False,
+                         brownout=BrownoutPolicy(), device_health=mon2,
+                         resume=str(tmp_path))
+    assert server2._brownout_level == 3
+    assert server2._evicted == [5]
+    assert mon2.evicted == [5]
+    assert mon2.strikes == {5: 1}
+    server2.close()

@@ -327,3 +327,33 @@ def test_sort_server_kernel_dispatch():
                 "--sort-hw", "4", "--sort-d", "2", "--rounds", "2",
                 "--use-kernel"])
     assert out["batches"] >= 1
+
+
+# ------------------------------------------------ mesh validation
+
+def test_make_sort_mesh_rejects_nonpositive():
+    with pytest.raises(RuntimeError, match="must be >= 1"):
+        make_sort_mesh(0)
+    with pytest.raises(RuntimeError, match="must be >= 1"):
+        make_sort_mesh(-3)
+
+
+def test_make_sort_mesh_rejects_oversubscription():
+    """Asking for more devices than exist must fail loudly, naming the
+    XLA_FLAGS workaround (like make_production_mesh)."""
+    too_many = len(jax.devices()) + 1
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_sort_mesh(too_many)
+
+
+def test_make_sort_mesh_devices_kwarg():
+    """The elastic re-shard path builds meshes over explicit device
+    lists (survivors of an eviction); the list bounds the budget."""
+    devs = list(jax.devices())
+    m = make_sort_mesh(1, devices=devs[:1])
+    assert list(m.devices.flat) == devs[:1]
+    # the explicit list is the availability budget, not jax.devices()
+    with pytest.raises(RuntimeError, match="xla_force_host_platform"):
+        make_sort_mesh(2, devices=devs[:1])
+    # n_devices=None sizes the mesh to the whole list
+    assert make_sort_mesh(devices=devs[:1]).shape["data"] == 1

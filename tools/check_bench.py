@@ -133,6 +133,22 @@ SERVING_CELL_KEYS = ("scenario", "requests", "arrival_rate_hz",
 SERVING_PREEMPT_KEYS = ("preempted_inflight", "resumed_requests",
                         "completed_gen1", "completed_gen2")
 
+# Elastic-capacity ("capacity") serving rows: the device-loss chaos
+# ledger.  A committed row must show the full loop — devices evicted,
+# exactly one re-shard per eviction, zero lost futures — and, on full
+# runs, that the brownout ladder kept the in-budget p50 within 2x the
+# steady row's p50 (wall-clock gates are skipped on smoke runs, same
+# policy as the guardrail overhead gate).  The row is REQUIRED in
+# non-smoke serving records: regenerating BENCH_serving.json on a
+# host with < 8 devices silently drops the scenario, and this gate
+# turns that silence into a CI failure naming the XLA_FLAGS fix.
+SERVING_CAPACITY_KEYS = ("devices_start", "device_faults", "evictions",
+                         "reshards", "device_returns",
+                         "degraded_requests", "degradations",
+                         "lost_futures")
+SERVING_DEGRADATION_RUNGS = ("culled", "adaptive", "banded", "bf16")
+SERVING_CAPACITY_MAX_P50_RATIO = 2.0
+
 AUTOTUNE_CELL_KEYS = ("tier", "N", "d", "K", "dtype", "backend", "winner",
                       "winner_s", "candidate_s")
 
@@ -329,6 +345,71 @@ def _check_serving_cells(path, doc, cells, errors):
                     f"{path}: cells[{i}] generation completions do not "
                     f"partition the total: {pre['completed_gen1']} + "
                     f"{pre['completed_gen2']} != {cell['completed']}")
+        if cell.get("scenario") == "capacity":
+            _check_capacity_cell(path, doc, cells, i, cell, errors)
+    smoke = bool(doc.get("smoke", False))
+    if not smoke and not any(
+            isinstance(c, dict) and c.get("scenario") == "capacity"
+            for c in cells):
+        errors.append(
+            f"{path}: full serving record has no 'capacity' cell — "
+            "regenerate with XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 so the elastic "
+            "capacity-loss scenario runs")
+
+
+def _check_capacity_cell(path, doc, cells, i, cell, errors):
+    """Elastic-capacity chaos ledger for one 'capacity' serving row."""
+    cap = {k: cell.get(k) for k in SERVING_CAPACITY_KEYS}
+    deg = cap.pop("degradations")
+    if not all(isinstance(v, int) and v >= 0 for v in cap.values()):
+        errors.append(
+            f"{path}: cells[{i}] capacity columns must be non-negative "
+            f"ints, got {cap}")
+        return
+    if not (isinstance(deg, dict)
+            and sorted(deg) == sorted(SERVING_DEGRADATION_RUNGS)
+            and all(isinstance(v, int) and v >= 0
+                    for v in deg.values())):
+        errors.append(
+            f"{path}: cells[{i}].degradations must map exactly "
+            f"{SERVING_DEGRADATION_RUNGS} to non-negative ints, "
+            f"got {deg!r}")
+    if cap["lost_futures"] != 0:
+        errors.append(
+            f"{path}: cells[{i}] lost {cap['lost_futures']} futures — "
+            "every offered request must resolve exactly once")
+    if cap["reshards"] != cap["evictions"]:
+        errors.append(
+            f"{path}: cells[{i}] re-shard ledger broken: reshards = "
+            f"{cap['reshards']} != evictions = {cap['evictions']} "
+            "(every eviction re-shards exactly once)")
+    if cap["evictions"] < 1:
+        errors.append(
+            f"{path}: cells[{i}] capacity row with no evictions — the "
+            "device-loss chaos never engaged")
+    if cap["device_returns"] > cap["evictions"]:
+        errors.append(
+            f"{path}: cells[{i}] more device returns "
+            f"({cap['device_returns']}) than evictions "
+            f"({cap['evictions']})")
+    if not bool(doc.get("smoke", False)):
+        steady = next(
+            (c for c in cells if isinstance(c, dict)
+             and c.get("scenario") == "steady"), None)
+        p50, s50 = cell.get("p50_ms"), (steady or {}).get("p50_ms")
+        if (isinstance(p50, (int, float)) and isinstance(s50, (int, float))
+                and s50 > 0
+                and p50 > SERVING_CAPACITY_MAX_P50_RATIO * s50):
+            errors.append(
+                f"{path}: cells[{i}] brownout failed its budget: "
+                f"capacity p50 {p50:.1f}ms > "
+                f"{SERVING_CAPACITY_MAX_P50_RATIO}x steady p50 "
+                f"{s50:.1f}ms")
+        if cap["degraded_requests"] < 1:
+            errors.append(
+                f"{path}: cells[{i}] full capacity row degraded no "
+                "requests — the brownout ladder never engaged")
 
 
 def _check_autotune_cells(path, doc, cells, errors):
